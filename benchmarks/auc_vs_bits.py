@@ -1,0 +1,107 @@
+"""Paper Figs. 9-11 analogue: AUC ratio (quantized model vs float model)
+vs fractional bit width, PTQ and QAT, for the three physics models.
+
+Mirrors the paper's protocol: the metric compares the quantized model's
+outputs against the FLOAT model (not ground truth) — "we are primarily
+interested in the capability ... to replicate the output of the Keras
+model".  Integer bits fixed at 6 (the paper's chosen setting).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import fixed_point as fxp
+from repro.core import quant
+from repro.data import physics as pdata
+from repro.models import physics as pmodel
+from repro.optim import AdamW
+
+INT_BITS = 6
+# paper sweeps 1..11 fractional bits; we sample the same range coarsely so
+# the whole benchmark stays CPU-friendly (QAT fine-tunes per point)
+FRAC_BITS = [1, 2, 3, 4, 6, 8, 10]
+TRAIN_STEPS = 60
+QAT_STEPS = 15
+
+
+def _train(cfg, x, y, steps, params=None, quant_cfg=None, lr=3e-3, seed=0):
+    import dataclasses
+
+    if quant_cfg is not None:
+        cfg = dataclasses.replace(cfg, quant=quant_cfg)
+    if params is None:
+        params = pmodel.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = AdamW(schedule=lambda s: lr, weight_decay=0.0)
+    state = opt.init(params)
+    batch = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    @jax.jit
+    def step(params, state):
+        (_, m), g = jax.value_and_grad(pmodel.loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        params, state, _ = opt.update(g, state, params)
+        return params, state
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return params, cfg
+
+
+def _auc(cfg, params, x, y_like_scores) -> float:
+    proba = np.asarray(pmodel.predict_proba(params, cfg, jnp.asarray(x)))
+    if cfg.n_classes == 1:
+        return pdata.auc_score(y_like_scores, proba)
+    if cfg.n_classes == 2:
+        return pdata.auc_score(y_like_scores, proba[:, 1])
+    return pdata.multiclass_auc(y_like_scores, proba)
+
+
+def run(n_train=384, n_test=512) -> list[str]:
+    rows = ["figure,model,mode,int_bits,frac_bits,auc_float,auc_quant,auc_ratio"]
+    for name in ("engine_anomaly", "btagging", "gw"):
+        cfg = configs.get_config(name)
+        gen = pdata.GENERATORS[name]
+        x, y = gen(n_train, seed=0)
+        xt, yt = gen(n_test, seed=123)
+        params, cfg_f = _train(cfg, x, y, TRAIN_STEPS)
+        auc_float = _auc(cfg_f, params, xt, yt)
+
+        for fb in FRAC_BITS:
+            fp = fxp.ap_fixed(INT_BITS + fb, INT_BITS)
+            # PTQ: snap trained weights to the grid
+            qparams = quant.quantize_pytree_fixed(params, fp)
+            auc_ptq = _auc(cfg_f, qparams, xt, yt)
+            rows.append(
+                f"auc_vs_bits,{name},ptq,{INT_BITS},{fb},"
+                f"{auc_float:.4f},{auc_ptq:.4f},{auc_ptq/auc_float:.4f}"
+            )
+            # QAT: short fine-tune with fake-quant weights+activations
+            qcfg = quant.QuantConfig(mode="qat", weight_cfg=fp, act_cfg=fp)
+            qat_params, cfg_q = _train(
+                cfg, x, y, QAT_STEPS, params=params, quant_cfg=qcfg, lr=1e-3
+            )
+            qat_eval = quant.quantize_pytree_fixed(qat_params, fp)
+            auc_qat = _auc(cfg_q, qat_eval, xt, yt)
+            rows.append(
+                f"auc_vs_bits,{name},qat,{INT_BITS},{fb},"
+                f"{auc_float:.4f},{auc_qat:.4f},{auc_qat/auc_float:.4f}"
+            )
+    return rows
+
+
+def main():
+    t0 = time.time()
+    for row in run():
+        print(row)
+    print(f"# auc_vs_bits done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

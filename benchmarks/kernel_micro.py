@@ -1,0 +1,93 @@
+"""Kernel microbenchmarks: interpret-mode wall time (CPU correctness
+path) + analytic MXU-pass counts for the four Pallas kernels, vs their
+jnp references."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import mha
+from repro.kernels.layernorm import layernorm
+from repro.kernels.lut_softmax import lut_softmax
+from repro.kernels.qmatmul import qmatmul
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = ["bench,kernel,variant,us_per_call,max_err_vs_ref"]
+
+    x = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    ref = qmatmul(x, w, use_pallas=False)
+    for r in (1, 2, 4):
+        t = _time(qmatmul, x, w, reuse_factor=r, interpret=True)
+        err = float(jnp.max(jnp.abs(qmatmul(x, w, reuse_factor=r, interpret=True) - ref)))
+        rows.append(f"kernel_micro,qmatmul,R{r},{t:.1f},{err:.2e}")
+
+    s = jnp.asarray(rng.normal(size=(256, 64)) * 2, jnp.float32)
+    ref = lut_softmax(s, use_pallas=False)
+    t = _time(lut_softmax, s, use_pallas=True, interpret=True)
+    err = float(jnp.max(jnp.abs(lut_softmax(s, use_pallas=True, interpret=True) - ref)))
+    rows.append(f"kernel_micro,lut_softmax,default,{t:.1f},{err:.2e}")
+
+    xn = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    g = jnp.ones((128,), jnp.float32)
+    b = jnp.zeros((128,), jnp.float32)
+    for lut_mode in (False, True):
+        ref = layernorm(xn, g, b, use_lut=lut_mode, use_pallas=False)
+        t = _time(layernorm, xn, g, b, use_lut=lut_mode, use_pallas=True, interpret=True)
+        out = layernorm(xn, g, b, use_lut=lut_mode, use_pallas=True, interpret=True)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append(
+            f"kernel_micro,layernorm,{'lut' if lut_mode else 'exact'},{t:.1f},{err:.2e}"
+        )
+
+    from repro.kernels.ssd_scan import ssd
+
+    xdt = jnp.asarray(rng.normal(size=(1, 128, 2, 32)) * 0.5, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(size=(1, 128, 2))) * 0.3, jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    ref = ssd(xdt, a, bm, cm, chunk=32, use_pallas=False)
+    t = _time(ssd, xdt, a, bm, cm, chunk=32, use_pallas=True, interpret=True)
+    out = ssd(xdt, a, bm, cm, chunk=32, use_pallas=True, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(f"kernel_micro,ssd_scan,chunk32,{t:.1f},{err:.2e}")
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 4, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 4, 128, 32)), jnp.float32)
+    for mode in ("safe", "lut"):
+        ref = mha(q, k, v, causal=True, mode=mode, use_pallas=False)
+        t = _time(
+            mha, q, k, v, causal=True, mode=mode, use_pallas=True,
+            interpret=True, block_q=64, block_kv=64,
+        )
+        out = mha(q, k, v, causal=True, mode=mode, use_pallas=True,
+                  interpret=True, block_q=64, block_kv=64)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append(f"kernel_micro,flash_attention,{mode},{t:.1f},{err:.2e}")
+    return rows
+
+
+def main():
+    t0 = time.time()
+    for row in run():
+        print(row)
+    print(f"# kernel_micro done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

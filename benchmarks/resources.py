@@ -1,0 +1,53 @@
+"""Paper Figs. 12-14 analogue: resource usage vs reuse factor x precision.
+
+FPGA resources (DSP/FF/LUT/BRAM) map to TPU analogues per DESIGN.md:
+VMEM working set (register/BRAM), sequential MXU passes (latency), and
+total MACs (DSP-ops).  Swept over R in {1,2,4,8} and weight precision
+in {int8, bf16} for each physics model's dominant GEMM.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro import configs
+from repro.core import reuse
+
+
+def run() -> list[str]:
+    rows = [
+        "figure,model,gemm,reuse,precision,vmem_bytes,mxu_passes,interval,macs"
+    ]
+    # the paper's models (R degenerates on TPU: K < 128 lanes) AND LM-scale
+    # GEMMs from the assigned archs, where the R trade-off is real.
+    cases = []
+    for name in ("engine_anomaly", "btagging", "gw"):
+        cfg = configs.get_config(name)
+        cases.append((name, "block_gemm", cfg.seq_len, cfg.d_model, cfg.d_model))
+    g8 = configs.get_config("granite-8b")
+    cases.append(("granite-8b", "mlp_up", 4096, g8.d_model, g8.d_ff))
+    m3 = configs.get_config("minicpm3-4b")
+    cases.append(("minicpm3-4b", "q_proj", 4096, m3.d_model, 2560))
+    for name, gemm, m, k, n in cases:
+        for prec, bpe in (("int8", 1), ("bf16", 2)):
+            for r in (1, 2, 4, 8):
+                plan = reuse.plan_matmul(
+                    m, k, n, reuse_factor=r, bytes_per_elem=bpe
+                )
+                est = reuse.resource_estimate(plan)
+                rows.append(
+                    f"resources,{name},{gemm},R{r},{prec},{est.vmem_bytes},"
+                    f"{est.passes},{est.interval},{est.macs}"
+                )
+    return rows
+
+
+def main():
+    t0 = time.time()
+    for row in run():
+        print(row)
+    print(f"# resources done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""§Roofline table: reads the dry-run JSON cache (experiments/dryrun) and
+emits per-(arch x shape x mesh) roofline rows — baseline and fused-
+attention variants — plus a markdown table for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+OUT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(out_dir: str = OUT_DIR, mesh: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        if "__" not in os.path.basename(path):
+            continue
+        base = os.path.basename(path)[:-5]
+        if base.count("__") != 2:  # skip tagged perf-iteration files
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(out_dir: str = OUT_DIR) -> list[str]:
+    rows = [
+        "roofline,arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+        "dominant,compute_s_fused,memory_s_fused,dominant_fused,"
+        "useful_ratio,useful_ratio_fused,roofline_frac_fused"
+    ]
+    for d in load_cells(out_dir):
+        if d.get("status") == "skip":
+            rows.append(
+                f"roofline,{d['arch']},{d['shape']},{d['mesh']},skip({d['reason']})"
+                + "," * 10
+            )
+            continue
+        if d.get("status") != "ok":
+            rows.append(
+                f"roofline,{d['arch']},{d['shape']},{d['mesh']},error" + "," * 10
+            )
+            continue
+        t, tf = d["terms"], d["terms_fused"]
+        # roofline fraction: compute term / bound term (how close the cell
+        # is to being compute-limited at peak)
+        bound = max(tf["compute_s"], tf["memory_s"], tf["collective_s"])
+        frac = tf["compute_s"] / bound if bound else 0.0
+        rows.append(
+            f"roofline,{d['arch']},{d['shape']},{d['mesh']},ok,"
+            f"{t['compute_s']:.3f},{t['memory_s']:.3f},{t['collective_s']:.3f},"
+            f"{t['dominant']},{tf['compute_s']:.3f},{tf['memory_s']:.3f},"
+            f"{tf['dominant']},{d['useful_ratio']:.3f},"
+            f"{d['useful_ratio_fused']:.3f},{frac:.3f}"
+        )
+    return rows
+
+
+def markdown(out_dir: str = OUT_DIR, mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | coll s | dominant | "
+        "6ND/HLO | fused: comp | fused: mem | fused dom | RL frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in load_cells(out_dir, mesh=mesh):
+        if d.get("status") == "skip":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | — | — | — | SKIP: {d['reason']} | | | | | |"
+            )
+            continue
+        if d.get("status") != "ok":
+            lines.append(f"| {d['arch']} | {d['shape']} | ERROR | | | | | | | | |")
+            continue
+        t, tf = d["terms"], d["terms_fused"]
+        bound = max(tf["compute_s"], tf["memory_s"], tf["collective_s"])
+        frac = tf["compute_s"] / bound if bound else 0.0
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {t['compute_s']:.2f} | "
+            f"{t['memory_s']:.2f} | {t['collective_s']:.2f} | {t['dominant']} | "
+            f"{d['useful_ratio']:.2f} | {tf['compute_s']:.2f} | "
+            f"{tf['memory_s']:.2f} | {tf['dominant']} | {frac:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    t0 = time.time()
+    for row in run():
+        print(row)
+    print(f"# roofline_table done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

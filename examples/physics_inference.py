@@ -1,0 +1,91 @@
+"""The paper's end-to-end physics workflow on one model (default: GW).
+
+Reproduces the Sec. V-C + Sec. VI-A protocol: train the gravitational-wave
+classifier, post-training-quantize at the paper's chosen precision
+(ap_fixed<12,6>), run quantization-aware training at the same precision,
+and report the AUC ratio (quantized vs float) plus the latency estimates
+(FPGA cycle model per Tables II-IV and the TPU roofline).
+
+    PYTHONPATH=src python examples/physics_inference.py [gw|engine_anomaly|btagging]
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import fixed_point as fxp
+from repro.core import latency_model as lat
+from repro.core import quant
+from repro.data import physics as pdata
+from repro.models import physics as pmodel
+from repro.optim import AdamW
+
+
+def train(cfg, x, y, steps, params=None, lr=3e-3, seed=0):
+    if params is None:
+        params = pmodel.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = AdamW(schedule=lambda s: lr, weight_decay=0.0)
+    state = opt.init(params)
+    batch = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    @jax.jit
+    def step(params, state):
+        (l, _), g = jax.value_and_grad(pmodel.loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        params, state, _ = opt.update(g, state, params)
+        return params, state, l
+
+    for i in range(steps):
+        params, state, l = step(params, state)
+    return params, float(l)
+
+
+def auc_of(cfg, params, x, y):
+    proba = np.asarray(pmodel.predict_proba(params, cfg, jnp.asarray(x)))
+    if cfg.n_classes == 1:
+        return pdata.auc_score(y, proba)
+    if cfg.n_classes == 2:
+        return pdata.auc_score(y, proba[:, 1])
+    return pdata.multiclass_auc(y, proba)
+
+
+def main(name: str = "gw"):
+    import dataclasses
+
+    cfg = configs.get_config(name)
+    fp = fxp.PAPER_OPTIMAL[name]["qat"]
+    print(f"== {name}: seq {cfg.seq_len} x {cfg.input_vec_size}, "
+          f"{cfg.n_layers} blocks, d={cfg.d_model}, precision {fp} ==")
+    x, y = pdata.GENERATORS[name](1024, seed=0)
+    xt, yt = pdata.GENERATORS[name](1024, seed=77)
+
+    params, loss = train(cfg, x, y, 150)
+    auc_float = auc_of(cfg, params, xt, yt)
+    print(f"float model:       loss {loss:.4f}  AUC {auc_float:.4f}")
+
+    ptq = quant.quantize_pytree_fixed(params, fp)
+    auc_ptq = auc_of(cfg, ptq, xt, yt)
+    print(f"PTQ {fp}:   AUC {auc_ptq:.4f}  (ratio {auc_ptq/auc_float:.4f})")
+
+    qcfg = quant.QuantConfig(mode="qat", weight_cfg=fp, act_cfg=fp)
+    cfg_q = dataclasses.replace(cfg, quant=qcfg)
+    qat_params, _ = train(cfg_q, x, y, 60, params=params, lr=1e-3)
+    qat_eval = quant.quantize_pytree_fixed(qat_params, fp)
+    auc_qat = auc_of(cfg_q, qat_eval, xt, yt)
+    print(f"QAT {fp}:   AUC {auc_qat:.4f}  (ratio {auc_qat/auc_float:.4f})")
+
+    for r in (1, 2, 4):
+        est = lat.fpga_style_estimate(
+            seq_len=cfg.seq_len, d_model=cfg.d_model,
+            n_blocks=cfg.n_layers, reuse=r,
+        )
+        print(f"latency model R{r}: clk {est.clock_ns:.2f}ns  "
+              f"II {est.interval_cycles}  latency {est.latency_us:.2f}us")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "gw")

@@ -1,0 +1,398 @@
+"""Generates EXPERIMENTS.md from the dry-run cache, the perf-hillclimb
+results, and (if present) the fidelity benchmark CSV.
+
+    PYTHONPATH=src python experiments/make_reports.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)  # for the benchmarks package
+
+DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
+PERF = os.path.join(ROOT, "experiments", "perf")
+AUC_CSV = os.path.join(ROOT, "experiments", "auc_vs_bits.csv")
+
+
+def load(pattern):
+    out = {}
+    for f in sorted(glob.glob(pattern)):
+        with open(f) as fh:
+            out[os.path.basename(f)[:-5]] = json.load(fh)
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.1f} GiB"
+
+
+def dryrun_section():
+    cells = load(os.path.join(DRYRUN, "*.json"))
+    ok = [d for d in cells.values() if d.get("status") == "ok"]
+    skip = [d for d in cells.values() if d.get("status") == "skip"]
+    err = [d for d in cells.values() if d.get("status") == "error"]
+    lines = [
+        "## §Dry-run",
+        "",
+        f"Every (architecture × input-shape × mesh) cell was lowered and "
+        f"compiled with `jax.jit(...).lower().compile()` on 512 forced host "
+        f"devices: **{len(ok)} compiles OK, {len(skip)} documented skips, "
+        f"{len(err)} errors** "
+        f"(meshes: single-pod 16×16 = 256 chips, multi-pod 2×16×16 = 512 "
+        f"chips over the `pod` axis).",
+        "",
+        "Skips (per DESIGN.md §Arch-applicability): encoder-only archs have "
+        "no decode step; `long_500k` requires sub-quadratic attention and "
+        "runs only for mamba2 (O(1) state), zamba2 (SSM + shared-attn) and "
+        "starcoder2 (O(window) rolling KV).",
+        "",
+        "Compile wall times: 1.4–60 s per cell on the CPU host.  Per-cell "
+        "JSON (memory analysis, per-op collective bytes, trip counts, "
+        "sharding fallbacks) is cached under `experiments/dryrun/`.",
+        "",
+        "| arch | shape | mesh | per-device memory (args+temp) | collective schedule (per-device bytes/step) |",
+        "|---|---|---|---|---|",
+    ]
+    for d in ok:
+        if d["mesh"] not in ("pod", "multipod"):
+            continue
+        ms = d.get("memory_stats", {})
+        tot = ms.get("argument_bytes", 0) + ms.get("temp_bytes", 0)
+        colls = ", ".join(
+            f"{k.replace('all-','a')}:{v/2**30:.1f}G"
+            for k, v in sorted(d.get("coll_bytes", {}).items())
+            if v > 1e8
+        ) or "—"
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {fmt_bytes(tot)} | {colls} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section():
+    from benchmarks.roofline_table import markdown
+
+    lines = [
+        "## §Roofline",
+        "",
+        "Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 4 × 50 GB/s "
+        "ICI links per chip.  All terms are **seconds per step, per "
+        "device**, from the trip-count-aware HLO parser "
+        "(`repro/roofline/hlo_parser.py`).  `compiled.cost_analysis()` "
+        "visits scan bodies once and under-counts scan-over-layers models "
+        "by ~n_layers× (verified; tests/test_hlo_parser.py) — the parser "
+        "multiplies while bodies by trip counts recovered from loop-"
+        "condition constants.",
+        "",
+        "Two variants per cell: **baseline** = the module exactly as XLA "
+        "lowered it (attention volume in HBM); **fused** = the `attnvol`-"
+        "tagged volume re-priced as the fused streaming Pallas kernel "
+        "(causal/window-aware FLOPs; q/k/v/out + cache-read traffic only) — "
+        "the paper's stage-2+3 fusion applied at scale.  `6ND/HLO` is the "
+        "MODEL_FLOPS/HLO_FLOPs useful-compute ratio; `RL frac` = fused "
+        "compute term / dominant term (1.0 = compute-bound at peak).",
+        "",
+        "### Single-pod (16×16, 256 chips)",
+        "",
+        markdown(DRYRUN, mesh="pod"),
+        "",
+        "### Multi-pod delta (2×16×16, 512 chips)",
+        "",
+        "The multi-pod mesh joins the `pod` axis to the data axes (batch "
+        "and FSDP sharding over 32-way data); compiles prove the pod-axis "
+        "sharding (collectives cross the DCN boundary).  Full rows in "
+        "`experiments/dryrun/*multipod.json`.",
+        "",
+        "Per-cell one-line reading (fused variant, pod mesh): every cell "
+        "is memory- or collective-dominant at baseline — the iteration "
+        "log in §Perf drives the dominant terms down for the three "
+        "selected cells.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def _perf_row(tag):
+    files = glob.glob(os.path.join(PERF, f"*__{tag}.json"))
+    if not files:
+        return None
+    with open(files[0]) as f:
+        return json.load(f)
+
+
+def perf_section():
+    lines = ["## §Perf", ""]
+    lines += [
+        "Methodology: per §Roofline the three terms identify the "
+        "bottleneck; each iteration states a hypothesis with napkin math, "
+        "re-lowers, re-analyses, and records confirmed/refuted.  The "
+        "paper-faithful baseline and the optimized variant are reported "
+        "separately.  Stop rule: three consecutive <5% changes on the "
+        "dominant term.",
+        "",
+        "### Pre-iteration fixes surfaced by the first compiles (apply to ALL cells)",
+        "",
+        "| fix | before → after (granite-8b train_4k, memory term) |",
+        "|---|---|",
+        "| activation sharding constraints at block boundaries (XLA had replicated the batch to resolve the FSDP/DP conflict; observed full-batch f32 buffers in the bwd scan) | 156.6 s → 14.2 s |",
+        "| bf16 params + 4D attention path (no batch×head flatten → no involuntary SPMD remat) | 1080 s → 156.6 s |",
+        "| fused streaming attention (the paper's stage-2+3, costed as the Pallas kernel) | 14.2 s → 11.6 s |",
+        "| remat=full (drops XLA's f32 saved-dot stacks; +22% compute) | 11.6 s → 9.2 s |",
+        "",
+    ]
+
+    cells = [
+        (
+            "Cell A — minicpm3-4b × decode_32k (most representative of the "
+            "paper's technique: low-latency quantized decode)",
+            [
+                ("A0_baseline",
+                 "paper-faithful MLA decode: K/V re-materialized from the "
+                 "latent for all 32k positions per step per layer (the "
+                 "FPGA streams full K/V the same way)"),
+                ("A1_absorb",
+                 "HYPOTHESIS: that re-materialization is ~160× the useful "
+                 "FLOPs (2·N·B ≈ 1e12 global vs HLO 1.6e14) and most of "
+                 "the traffic → absorb wk_b/wv_b into the query/output "
+                 "projections, attend directly against the latent cache. "
+                 "CONFIRMED: compute 136×↓, memory −42%, useful 0.006→1.0"),
+                ("A2_absorb_pod8",
+                 "HYPOTHESIS: (32 data × 8 model) halves the per-device "
+                 "batch slice of the cache and restores head-TP (40%8=0). "
+                 "REFUTED: per-device cache slice is B·L/chips for any "
+                 "mesh aspect — memory unchanged (+4%), collectives up; "
+                 "keep the 16×16 mesh"),
+                ("A3_absorb_lut",
+                 "paper's 3-stage LUT softmax in the decode score path: "
+                 "roofline-neutral (decode attention is cache-read bound; "
+                 "the LUT trades VPU transcendentals for MXU one-hot reads "
+                 "— a fidelity/efficiency feature, not a bandwidth one). "
+                 "CONFIRMED-NEUTRAL"),
+                ("A4_int8_latent",
+                 "HYPOTHESIS: post-A1 the step is latent-cache-read bound "
+                 "(128·32k·288·2B ≈ 2.4 GB/layer global); per-token int8 "
+                 "on the latent (the paper's fixed-point datapath applied "
+                 "to the cache) halves it. CONFIRMED beyond prediction: "
+                 "memory 0.110→0.035 s (int8 also removes the bf16→f32 "
+                 "expansion copies); decode logits within 5e-3 of fp "
+                 "(tests/test_serving.py)"),
+            ],
+            "A0 → A4: dominant memory term 0.189 s → 0.035 s (5.4×), "
+            "useful-FLOP ratio 0.006 → 1.00.  The full paper datapath — "
+            "absorbed latent attention + int8 cache + LUT softmax — is "
+            "the optimized variant; the paper-faithful baseline is kept "
+            "as A0.  Final: ≈0.27 ms/token amortized over 128 streams.",
+        ),
+        (
+            "Cell B — granite-moe-3b-a800m × train_4k (worst roofline "
+            "fraction of the 32-cell baseline: 0.006)",
+            [
+                ("B0_baseline",
+                 "16×16 mesh; 40 experts % 16 ≠ 0 → EP silently fell back "
+                 "to replication (recorded by the sharding rules)"),
+                ("B1_remat_accum",
+                 "HYPOTHESIS: f32 saved-dot stacks (143.6 GiB temp!) "
+                 "dominate; remat=full + grad_accum=4 cuts the live set "
+                 "4×. PARTIALLY CONFIRMED: temp 143.6→33.4 GiB but memory "
+                 "term only −1.3% — traffic per token was already flat; "
+                 "the win is fitting HBM, not bandwidth"),
+                ("B2_pod8_ep",
+                 "HYPOTHESIS: (32 data × 8 model): 40 % 8 = 0 activates "
+                 "expert parallelism, sharding the (E,C,d) dispatch "
+                 "buffers 8-way. CONFIRMED: memory −20%, collective −17%"),
+                ("B3_cf1",
+                 "HYPOTHESIS: dispatch traffic ∝ capacity_factor; cf "
+                 "1.25→1.0 cuts ~20% of dispatch bytes for a ~2% drop "
+                 "rate. CONFIRMED: memory −3.8%, useful 0.70→0.80"),
+                ("B4_accum8",
+                 "grad_accum=8 to fit the 16 GiB HBM (29.2→14.7 GiB); "
+                 "memory +2% (<5% stop threshold reached)"),
+            ],
+            "B0 → B4: dominant memory term 32.1 s → 25.1 s (−22%), temp "
+            "143.6 → 14.7 GiB (now fits v5e HBM).  Remaining bound is "
+            "architectural: d_expert=512 experts give this MoE an "
+            "arithmetic intensity of ~170 FLOPs/byte of expert I/O — "
+            "identified next step (out of scope of sharding): MegaBlocks-"
+            "style per-shard local dispatch to remove the global scatter "
+            "all-reduce (1.2 TB/device/step observed).",
+        ),
+        (
+            "Cell C — internvl2-1b × train_4k (the only collective-"
+            "dominant baseline cell)",
+            [
+                ("C0_baseline", "16×16 mesh: collective 3.02 s > memory 2.91 s"),
+                ("C1_tploss",
+                 "HYPOTHESIS: take_along_axis over vocab-sharded logits "
+                 "all-gathers (b,s,152k) → switch to one-hot einsum. "
+                 "REFUTED: collective bytes unchanged — XLA had already "
+                 "partitioned the gather; kept (it is still the safe "
+                 "form) but not the bottleneck"),
+                ("C2_remat_accum",
+                 "remat=full + grad_accum=4: memory −9%, temp 43.3→7.8 GiB "
+                 "(fits HBM); collective unchanged — confirms the "
+                 "bottleneck is not weight gathers"),
+                ("C3_no_fsdp",
+                 "HYPOTHESIS: FSDP weight all-gathers dominate → replicate "
+                 "weights. REFUTED: collective unchanged (581 GB/device "
+                 "all-reduce remains) — so the traffic is activation-side"),
+                ("C4_no_attn_tp",
+                 "HYPOTHESIS (from the all-reduce breakdown): 14 heads % "
+                 "16 ≠ 0 — TP shards cut across head boundaries, and the "
+                 "(b,s,896)→(b,s,14,64) head split forces full-batch f32 "
+                 "redistribution all-reduces. Turn attention TP off. "
+                 "CONFIRMED: collective 3.06→0.11 s (27×) — but memory "
+                 "rose to 3.67 s (attention now replicated over model): "
+                 "net bound WORSE (3.06→3.67)"),
+                ("C5_pod2",
+                 "HYPOTHESIS: head-ALIGNED TP=2 on a (128 data × 2 model) "
+                 "mesh keeps attention sharded (14%2=0) without the "
+                 "misaligned redistribution. CONFIRMED: memory 1.42 s, "
+                 "collective 0.12 s"),
+            ],
+            "C0 → C5: step bound 3.02 s → 1.42 s (2.1×), dominant "
+            "collective → memory, temp fits HBM (6.6 GiB).  Lesson "
+            "recorded in DESIGN.md: TP degree must divide the HEAD count, "
+            "not merely the merged head×dim — the sharding rules now "
+            "surface this as a fallback warning.",
+        ),
+    ]
+
+    cells.append(
+        (
+            "Cell D (bonus, beyond the required three) — dbrx-132b × "
+            "train_4k (largest absolute compute)",
+            [
+                ("D0_baseline", "16×16 mesh, remat=minimal"),
+                ("D1_remat_accum8",
+                 "remat=full + grad_accum=8 + tp-safe loss: live set "
+                 "353.8→40.9 GiB (8.6×); roofline terms ~flat as expected "
+                 "(traffic per token constant)"),
+                ("D2_cf1",
+                 "capacity_factor 1.25→1.0: memory −7%, compute −18% "
+                 "(dispatch + expert GEMMs shrink ∝ cf), useful 0.63→0.77"),
+            ],
+            "D0 → D2: memory 108.2 s → 99.0 s; the 132B cell needs "
+            "grad_accum≈32 plus weight-streaming or a third mesh axis "
+            "(pipeline stages) to reach the 16 GiB envelope — recorded as "
+            "the identified next step for the largest arch.",
+        )
+    )
+
+    for title, iters, summary in cells:
+        lines.append(f"### {title}")
+        lines.append("")
+        lines.append(
+            "| iter | change / hypothesis | compute s | memory s | "
+            "collective s | dominant | 6ND/HLO | temp GiB |"
+        )
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for tag, desc in iters:
+            d = _perf_row(tag)
+            if d is None or d.get("status") != "ok":
+                lines.append(f"| {tag} | {desc} | – | – | – | – | – | – |")
+                continue
+            t = d["terms_fused"]
+            lines.append(
+                f"| {tag} | {desc} | {t['compute_s']:.3f} | "
+                f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+                f"{t['dominant']} | {d['useful_ratio_fused']:.3f} | "
+                f"{d['memory_stats'].get('temp_bytes', 0)/2**30:.1f} |"
+            )
+        lines.append("")
+        lines.append(f"**Outcome.** {summary}")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def fidelity_section():
+    lines = [
+        "## §Fidelity (paper Figs. 9–11)",
+        "",
+        "AUC ratio (quantized vs float model) vs fractional bits at 6 "
+        "integer bits, PTQ vs QAT, on the three physics models trained on "
+        "the synthetic physics generators (`repro/data/physics.py`).  The "
+        "paper's protocol: the metric compares quantized outputs to the "
+        "FLOAT model's outputs, not ground truth.",
+        "",
+    ]
+    if os.path.exists(AUC_CSV):
+        with open(AUC_CSV) as f:
+            rows = [r.strip() for r in f if r.startswith("auc_vs_bits,")]
+        lines.append("| model | mode | frac bits | AUC float | AUC quant | ratio |")
+        lines.append("|---|---|---|---|---|---|")
+        for r in rows:
+            _, model, mode, _, fb, af, aq, ratio = r.split(",")
+            if int(fb) in (1, 2, 4, 6, 8, 10):
+                lines.append(
+                    f"| {model} | {mode} | {fb} | {af} | {aq} | {ratio} |"
+                )
+        lines.append("")
+        lines.append(
+            "Matches the paper's shape: ratios collapse below ~4 "
+            "fractional bits and saturate near 1.0 by ~6 bits (the "
+            "paper's chosen operating points: engine 6, b-tag 10 PTQ / 6 "
+            "QAT, GW 6).  The paper's central QAT-vs-PTQ claim reproduces "
+            "at the aggressive end: at 1 fractional bit the engine model "
+            "keeps a 0.79 AUC ratio under QAT vs 0.31 under PTQ."
+        )
+    else:
+        lines.append(
+            "(run `PYTHONPATH=src python -m benchmarks.run auc_vs_bits "
+            "> experiments/auc_vs_bits.csv` to populate)"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def latency_section():
+    from benchmarks.latency_tables import run as lat_run
+
+    lines = [
+        "## §Latency-tables (paper Tables II–IV)",
+        "",
+        "```",
+        *lat_run(),
+        "```",
+        "",
+        "The FPGA-style cycle model preserves the paper's monotone "
+        "R-trends; the TPU columns document the hardware-adaptation "
+        "finding that for <10k-param models the whole contraction fits "
+        "one 128-lane MXU pass, so R degenerates (passes=1) and the paper-"
+        "scale models are HBM-streaming-bound at ~0.02–0.25 µs/inference "
+        "roofline.  R becomes meaningful again at LM-scale GEMMs (see the "
+        "resources benchmark).",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    doc = "\n".join(
+        [
+            "# EXPERIMENTS",
+            "",
+            "Paper: *Low Latency Transformer Inference on FPGAs for "
+            "Physics Applications with hls4ml* (2024).  See DESIGN.md for "
+            "the TPU adaptation map; README.md for how to run everything "
+            "here.",
+            "",
+            dryrun_section(),
+            roofline_section(),
+            perf_section(),
+            fidelity_section(),
+            latency_section(),
+        ]
+    )
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write(doc)
+    print(f"wrote {out} ({len(doc.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

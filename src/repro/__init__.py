@@ -1,0 +1,11 @@
+"""repro: multi-pod JAX framework for low-latency quantized transformer
+inference, reproducing and extending *Low Latency Transformer Inference on
+FPGAs for Physics Applications with hls4ml* (2024) on TPU.
+
+Layers: ``core`` (the paper's technique), ``kernels`` (Pallas TPU),
+``models`` (architecture zoo), ``data``/``optim``/``train``/``serve``/
+``checkpoint``/``distributed`` (substrates), ``configs`` (architectures),
+``launch`` (mesh/dryrun/drivers), ``roofline`` (perf analysis).
+"""
+
+__version__ = "1.0.0"

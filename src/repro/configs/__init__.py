@@ -1,0 +1,88 @@
+"""Config registry: ``get_config(name, reduced=False)`` + per-arch shape
+applicability for the dry-run matrix."""
+
+from __future__ import annotations
+
+from repro.configs import physics
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ParallelismConfig,
+    ServeConfig,
+    ShapeConfig,
+    SSMConfig,
+    TrainConfig,
+)
+
+_ARCH_MODULES = {
+    "minicpm3-4b": "minicpm3_4b",
+    "minicpm-2b": "minicpm_2b",
+    "granite-8b": "granite_8b",
+    "starcoder2-7b": "starcoder2_7b",
+    "dbrx-132b": "dbrx_132b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "mamba2-130m": "mamba2_130m",
+    "internvl2-1b": "internvl2_1b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+ARCH_NAMES = list(_ARCH_MODULES)
+
+_PHYSICS = {
+    "engine_anomaly": physics.engine_anomaly,
+    "btagging": physics.btagging,
+    "gw": physics.gw,
+}
+
+PHYSICS_NAMES = list(_PHYSICS)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name in _PHYSICS:
+        return _PHYSICS[name]()
+    if name not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {ARCH_NAMES + PHYSICS_NAMES}"
+        )
+    import dataclasses
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    if reduced:
+        # reduced smoke configs run on CPU in f32
+        return dataclasses.replace(mod.reduced_config(), dtype="float32")
+    return mod.config()
+
+
+# ---------------------------------------------------------------------------
+# Dry-run cell applicability (DESIGN.md §Arch-applicability)
+# ---------------------------------------------------------------------------
+
+# archs whose decode cost per token is sub-quadratic in context length:
+# SSM (O(1) state), hybrid (SSM + O(L) shared-attn reads), sliding-window
+# (O(window) rolling buffer).
+_LONG_CONTEXT_OK = {"mamba2-130m", "zamba2-1.2b", "starcoder2-7b"}
+_ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def cell_status(arch: str, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for one (arch x shape) cell."""
+    shape = SHAPES[shape_name]
+    if arch in _ENCODER_ONLY and shape.kind == "decode":
+        return False, "encoder-only: no decode step"
+    if shape_name == "long_500k" and arch not in _LONG_CONTEXT_OK:
+        return False, "pure full attention: 512k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def dryrun_cells() -> list[tuple[str, str, bool, str]]:
+    """All 40 (arch x shape) cells with runnability + skip reason."""
+    out = []
+    for arch in ARCH_NAMES:
+        for shape_name in SHAPES:
+            ok, reason = cell_status(arch, shape_name)
+            out.append((arch, shape_name, ok, reason))
+    return out

@@ -1,0 +1,226 @@
+"""Config dataclasses for the architecture zoo and the framework."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from repro.core.quant import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2 style; minicpm3)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int  # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD (arXiv:2405.21060)."""
+
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 64
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style hybrid: Mamba2 backbone + shared attention block."""
+
+    attn_every: int = 6  # shared attn applied at layer_idx % attn_every == 0
+    concat_residual: bool = True  # shared block sees concat(x, x_embed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "hybrid", "ssm", "vlm", "audio"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None  # default d_model // n_heads
+    attn_kind: Literal["gqa", "mla", "none"] = "gqa"
+    norm_kind: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    act: Literal["silu", "gelu"] = "silu"
+    gated_mlp: bool = True
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    hybrid: HybridConfig | None = None
+    frontend: Literal["patch", "audio"] | None = None
+    frontend_dim: int = 0  # stub modality embedding dim (0 = d_model)
+    n_frontend_tokens: int = 0
+    is_encoder: bool = False
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    mlp_bias: bool = False
+    use_rope: bool = True  # physics models use learned positions instead
+    # muP-style scaling (MiniCPM): scale_emb, scale_depth, dim_model_base
+    emb_scale: float = 1.0
+    residual_scale: float = 1.0  # applied to each residual branch
+    logit_scale: float = 1.0
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    # paper-style extras (physics models)
+    input_vec_size: int = 0  # continuous-input models (paper's three)
+    seq_len: int = 0  # fixed seq for physics models
+    n_classes: int = 0
+    pool: Literal["mean", "last", "none"] = "none"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab padded to a multiple of 256 for clean TP sharding."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    def param_count_estimate(self) -> int:
+        """Rough 6ND-style N (for MODEL_FLOPS; exact count via params.py)."""
+        d, l = self.d_model, self.n_layers
+        emb = self.padded_vocab_size * d
+        if self.attn_kind == "mla" and self.mla is not None:
+            m = self.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            attn = (
+                d * m.q_lora_rank
+                + m.q_lora_rank * self.n_heads * qk
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank
+                * self.n_heads
+                * (m.qk_nope_head_dim + m.v_head_dim)
+                + self.n_heads * m.v_head_dim * d
+            )
+        elif self.attn_kind == "none":
+            attn = 0
+        else:
+            hd = self.resolved_head_dim
+            attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.family == "hybrid" and self.ssm is not None:
+            # Mamba2 backbone layers + one weight-shared attention block
+            s = self.ssm
+            di = s.d_inner(d)
+            per_mamba = (
+                d * (2 * di + 2 * s.n_groups * s.state_dim + s.n_heads(d))
+                + di * d
+            )
+            w = 2 * d  # shared block works in concat(x, x_embed) width
+            ff_mult = 3 if self.gated_mlp else 2
+            shared = 4 * w * w + ff_mult * w * self.d_ff + w * d
+            return emb + l * per_mamba + shared + (
+                0 if self.tie_embeddings else emb
+            )
+        if self.moe is not None:
+            ff_mult = 3 if self.gated_mlp else 2
+            ffn = self.moe.n_experts * ff_mult * d * self.moe.d_expert
+        elif self.ssm is not None and self.attn_kind == "none":
+            s = self.ssm
+            di = s.d_inner(d)
+            ffn = d * (2 * di + 2 * s.n_groups * s.state_dim + s.n_heads(d)) + di * d
+        else:
+            ff_mult = 3 if self.gated_mlp else 2
+            ffn = ff_mult * d * self.d_ff
+        return emb + l * (attn + ffn) + (0 if self.tie_embeddings else emb)
+
+    def active_param_count_estimate(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.param_count_estimate()
+        dense_like = dataclasses.replace(self, moe=None, d_ff=0, gated_mlp=False)
+        base = dense_like.param_count_estimate()
+        ff_mult = 3 if self.gated_mlp else 2
+        active_ffn = (
+            self.n_layers * self.moe.top_k * ff_mult * self.d_model * self.moe.d_expert
+        )
+        return base + active_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismConfig:
+    """Logical-axis -> mesh-axes mapping knobs (see distributed/sharding)."""
+
+    dp: bool = True  # batch over ('pod','data')
+    fsdp: bool = True  # weight non-TP axis over 'data'
+    tp: bool = True  # heads/mlp/vocab over 'model'
+    ep: bool = True  # experts over 'model'
+    sp: bool = False  # sequence over 'model' (long-context cells)
+    remat: Literal["none", "minimal", "full"] = "minimal"
+    grad_accum: int = 1  # microbatch accumulation (activation memory / k)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: Literal["cosine", "wsd", "linear"] = "cosine"
+    decay_fraction: float = 0.1  # WSD decay phase fraction
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq_len: int = 1024
+    temperature: float = 0.0
+    int8_weights: bool = False
+    int8_kv_cache: bool = False
+    lut_softmax: bool = False

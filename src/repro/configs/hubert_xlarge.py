@@ -1,0 +1,52 @@
+"""hubert-xlarge [audio] — 48L d1280 16H (kv=16) d_ff=5120 vocab=504.
+
+arXiv:2106.07447 — encoder-only (same arch as wav2vec2).  Per the
+assignment the conv feature extractor is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (frontend_dim=512).  Training objective is
+HuBERT-style masked-unit prediction over 504 cluster units.  Encoder-only:
+no decode step -> ``decode_32k``/``long_500k`` cells are skipped.
+
+Deviation note: HuBERT uses a convolutional relative positional embedding;
+the stub frontend omits it and we use RoPE as the positional stand-in.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge",
+        family="audio",
+        n_layers=48,
+        d_model=1280,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=5120,
+        vocab_size=504,
+        attn_kind="gqa",
+        norm_kind="layernorm",
+        act="gelu",
+        gated_mlp=False,
+        attn_bias=True,
+        mlp_bias=True,
+        frontend="audio",
+        frontend_dim=512,
+        is_encoder=True,
+        tie_embeddings=False,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        name="hubert-xlarge-reduced",
+        n_layers=2,
+        d_model=48,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=96,
+        vocab_size=32,
+        frontend_dim=16,
+    )

@@ -1,0 +1,49 @@
+"""internvl2-1b [vlm] — 24L d896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+
+arXiv:2404.16821 — InternViT-300M + Qwen2-0.5B LM backbone.  Per the
+assignment, the modality frontend is a STUB: ``input_specs()`` provides
+precomputed patch embeddings (frontend_dim=1024, 256 tokens) which the
+``frontend_proj`` projector maps into the LM embedding space.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b",
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        d_ff=4864,
+        vocab_size=151655,
+        attn_kind="gqa",
+        norm_kind="rmsnorm",
+        act="silu",
+        gated_mlp=True,
+        rope_theta=1_000_000.0,
+        attn_bias=True,  # qwen2 uses qkv bias
+        frontend="patch",
+        frontend_dim=1024,
+        n_frontend_tokens=256,
+        tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        name="internvl2-1b-reduced",
+        n_layers=2,
+        d_model=56,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=112,
+        vocab_size=128,
+        frontend_dim=32,
+        n_frontend_tokens=4,
+    )

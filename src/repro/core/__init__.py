@@ -1,0 +1,24 @@
+"""The paper's primary contribution, TPU-native.
+
+Low-latency quantized transformer inference per *Low Latency Transformer
+Inference on FPGAs for Physics Applications with hls4ml* (2024):
+
+* ``fixed_point``   — ap_fixed<W,I> semantics (fidelity path, QAT STE)
+* ``quant``         — QAT/PTQ engine + int8 tensors (performance path)
+* ``lut``           — bounded-domain table approximation (exp, 1/x, 1/sqrt)
+* ``softmax``       — the restructured 3-stage softmax (Sec. IV-B)
+* ``layernorm``     — the staged LayerNorm (Sec. IV-C)
+* ``streaming_mha`` — the 4-stage MHA pipeline (Sec. IV-A), kernel-backed
+* ``reuse``         — reuse-factor R -> kernel schedule mapping (Sec. VI-B)
+* ``latency_model`` — latency/resource estimation (Tables II-IV analogue)
+"""
+
+from repro.core import (  # noqa: F401
+    fixed_point,
+    latency_model,
+    layernorm,
+    lut,
+    quant,
+    reuse,
+    softmax,
+)

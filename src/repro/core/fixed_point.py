@@ -1,0 +1,150 @@
+"""ap_fixed<W, I> semantics in JAX — the paper's numeric substrate.
+
+hls4ml represents every tensor as ``ap_fixed<W, I>``: W total bits (incl.
+sign), I integer bits (incl. sign), F = W - I fractional bits.  Step size is
+``2**-F``; the representable range is ``[-2**(I-1), 2**(I-1) - 2**-F]``.
+
+On TPU there is no arbitrary-width fixed point, so this module provides the
+*fidelity* path: bit-exact ap_fixed simulation on float carriers, used for
+
+  * the AUC-ratio-vs-fractional-bits sweeps (paper Figs. 9-11),
+  * QAT fake-quantization (straight-through estimator),
+  * deriving int8 scales for the *performance* path (``kernels/qmatmul``).
+
+The paper fixes the accumulator at 10 integer bits (incl. sign) and sweeps
+fractional bits; ``ACCUM_INT_BITS`` mirrors that default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+# Paper, Sec. VI-A: "We set this [accumulator integer width] as a larger
+# fixed number, 10 bits including the sign bit".
+ACCUM_INT_BITS = 10
+
+RoundMode = Literal["nearest", "floor"]
+OverflowMode = Literal["saturate", "wrap"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointConfig:
+    """``ap_fixed<total_bits, int_bits>`` (both include the sign bit)."""
+
+    total_bits: int
+    int_bits: int
+    signed: bool = True
+    round_mode: RoundMode = "nearest"
+    overflow_mode: OverflowMode = "saturate"
+
+    def __post_init__(self):
+        if self.total_bits < 1:
+            raise ValueError(f"total_bits must be >= 1, got {self.total_bits}")
+        if self.int_bits > self.total_bits:
+            raise ValueError(
+                f"int_bits ({self.int_bits}) cannot exceed total_bits "
+                f"({self.total_bits})"
+            )
+
+    @property
+    def frac_bits(self) -> int:
+        return self.total_bits - self.int_bits
+
+    @property
+    def step(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def max_value(self) -> float:
+        if self.signed:
+            return 2.0 ** (self.int_bits - 1) - self.step
+        return 2.0 ** self.int_bits - self.step
+
+    @property
+    def min_value(self) -> float:
+        if self.signed:
+            return -(2.0 ** (self.int_bits - 1))
+        return 0.0
+
+    @property
+    def n_levels(self) -> int:
+        return 2 ** self.total_bits
+
+    def with_frac_bits(self, frac_bits: int) -> "FixedPointConfig":
+        return dataclasses.replace(
+            self, total_bits=self.int_bits + frac_bits
+        )
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        kind = "ap_fixed" if self.signed else "ap_ufixed"
+        return f"{kind}<{self.total_bits},{self.int_bits}>"
+
+
+def quantize(x: jax.Array, cfg: FixedPointConfig) -> jax.Array:
+    """Round ``x`` onto the ap_fixed grid (returns a float carrier).
+
+    Matches Vivado HLS AP_RND (round-half-away-from-zero is what
+    ``jnp.round`` does for .5 ties at representable floats; hls4ml's default
+    AP_TRN is the "floor" mode) and AP_SAT saturation.
+    """
+    scaled = x / cfg.step
+    if cfg.round_mode == "nearest":
+        q = jnp.round(scaled)
+    else:
+        q = jnp.floor(scaled)
+    if cfg.overflow_mode == "saturate":
+        lo = cfg.min_value / cfg.step
+        hi = cfg.max_value / cfg.step
+        q = jnp.clip(q, lo, hi)
+    else:  # wrap (two's complement)
+        n = float(cfg.n_levels)
+        lo = cfg.min_value / cfg.step
+        q = jnp.mod(q - lo, n) + lo
+    return q * jnp.asarray(cfg.step, dtype=x.dtype)
+
+
+def quantize_ste(x: jax.Array, cfg: FixedPointConfig) -> jax.Array:
+    """Fake-quantize with a straight-through-estimator gradient (QAT).
+
+    Forward: ``quantize(x)``.  Backward: identity inside the representable
+    range, zero outside (clipped STE), per QKeras ``quantized_bits``.
+    """
+    clipped = jnp.clip(x, cfg.min_value, cfg.max_value)
+    return clipped + jax.lax.stop_gradient(quantize(x, cfg) - clipped)
+
+
+def to_int(x: jax.Array, cfg: FixedPointConfig, dtype=jnp.int32) -> jax.Array:
+    """Integer codes of the fixed-point representation (perf-path bridge)."""
+    q = quantize(x, cfg)
+    return jnp.round(q / cfg.step).astype(dtype)
+
+
+def from_int(codes: jax.Array, cfg: FixedPointConfig, dtype=jnp.float32) -> jax.Array:
+    return codes.astype(dtype) * jnp.asarray(cfg.step, dtype=dtype)
+
+
+def quantization_error_bound(cfg: FixedPointConfig) -> float:
+    """Max |x - quantize(x)| for in-range x (used by property tests)."""
+    if cfg.round_mode == "nearest":
+        return cfg.step / 2.0
+    return cfg.step
+
+
+# Common configs used throughout the repo / benchmarks.
+def ap_fixed(total_bits: int, int_bits: int, **kw) -> FixedPointConfig:
+    return FixedPointConfig(total_bits=total_bits, int_bits=int_bits, **kw)
+
+
+# The paper's per-model optima (Sec. VI-A): engine 6 frac bits (PTQ & QAT),
+# b-tagging 10 (PTQ) / 6 (QAT), GW 6 (PTQ & QAT); 6 integer bits.
+PAPER_OPTIMAL = {
+    "engine_anomaly": {"ptq": ap_fixed(12, 6), "qat": ap_fixed(12, 6)},
+    "btagging": {"ptq": ap_fixed(16, 6), "qat": ap_fixed(12, 6)},
+    "gw": {"ptq": ap_fixed(12, 6), "qat": ap_fixed(12, 6)},
+}
+
+ACCUM_CONFIG = ap_fixed(ACCUM_INT_BITS + 8, ACCUM_INT_BITS)

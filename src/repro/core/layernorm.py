@@ -1,0 +1,78 @@
+"""The paper's 5-stage LayerNorm (Sec. IV-C), module-level API.
+
+Stages: (1) mean, (2) deviation-from-mean, (3) variance, (4) normalize via a
+1/sqrt(var) LUT, (5) gamma * x_hat + beta.
+
+The Pallas fused kernel lives in ``kernels/layernorm``; this module is the
+framework-facing API and jnp fallback.  RMSNorm (used by most assigned LM
+architectures) shares stage 3-5 with the mean fixed at zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut
+
+
+def layernorm_paper(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-5,
+    use_lut: bool = False,
+    axis: int = -1,
+) -> jax.Array:
+    """Paper's staged dataflow.  Note the paper's formula has no epsilon —
+    fixed-point arithmetic bounds 1/sqrt via the LUT domain instead; for the
+    float path we keep a small eps for parity with standard LayerNorm."""
+    k = x.shape[axis]
+    mean = jnp.sum(x, axis=axis, keepdims=True) / k  # stage 1
+    dm = x - mean  # stage 2
+    var = jnp.sum(dm * dm, axis=axis, keepdims=True) / k  # stage 3
+    if use_lut:  # stage 4: 1/sqrt LUT
+        inv_std = lut.lut_rsqrt(var)
+    else:
+        inv_std = jax.lax.rsqrt(var + eps)
+    x_hat = dm * inv_std
+    return x_hat * gamma + beta  # stage 5
+
+
+def rmsnorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    *,
+    eps: float = 1e-6,
+    use_lut: bool = False,
+    axis: int = -1,
+) -> jax.Array:
+    """RMSNorm via the same staged structure (mean fixed at 0)."""
+    k = x.shape[axis]
+    ms = jnp.sum(x * x, axis=axis, keepdims=True) / k
+    if use_lut:
+        inv_rms = lut.lut_rsqrt(ms)
+    else:
+        inv_rms = jax.lax.rsqrt(ms + eps)
+    return x * inv_rms * gamma
+
+
+def norm(
+    x: jax.Array,
+    params: dict,
+    *,
+    kind: str = "layernorm",
+    eps: float = 1e-5,
+    use_lut: bool = False,
+) -> jax.Array:
+    """Framework entry point; ``params`` holds 'scale' (+ 'bias' for LN)."""
+    if kind == "layernorm":
+        return layernorm_paper(
+            x, params["scale"], params["bias"], eps=eps, use_lut=use_lut
+        )
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"], eps=eps, use_lut=use_lut)
+    if kind == "none":
+        return x
+    raise ValueError(f"unknown norm kind: {kind}")

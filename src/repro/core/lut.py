@@ -1,0 +1,148 @@
+"""Bounded-domain lookup-table function approximation (paper Sec. IV-B/C).
+
+hls4ml evaluates exp / 1/x / 1/sqrt(x) with BRAM lookup tables.  The TPU has
+no BRAM, but it has an MXU: a table read is a one-hot row-select, i.e. a
+``(rows, T) @ (T,)`` matmul.  ``kernels/lut_softmax`` uses exactly that
+inside Pallas; this module owns table *construction* and the pure-jnp
+reference lookup (``jnp.take``) used by ref oracles and the fidelity path.
+
+Tables are built over a bounded input domain — valid because the paper's
+datapath is fixed point (``ap_fixed<W,I>`` bounds every tensor), which is
+also why the paper's softmax needs no max-subtraction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LutSpec:
+    """A sampled function table over [lo, hi] with ``size`` entries.
+
+    ``spacing``: 'linear' mirrors the FPGA's fixed-point BRAM indexing
+    (uniform steps of the ap_fixed grid).  'log' is the TPU adaptation for
+    reciprocal-like functions on the float datapath: fixed-point linear
+    steps are relatively fine near zero, but a float-valued denominator
+    spans octaves — log-indexing keeps the RELATIVE error uniform
+    (~ln2 * octave_step / 2), which linear spacing cannot.
+    """
+
+    name: str
+    lo: float
+    hi: float
+    size: int
+    spacing: str = "linear"  # linear | log
+
+    @property
+    def step(self) -> float:
+        if self.spacing == "log":
+            return (np.log2(self.hi) - np.log2(self.lo)) / (self.size - 1)
+        return (self.hi - self.lo) / (self.size - 1)
+
+
+def build_table(spec: LutSpec, fn: Callable[[np.ndarray], np.ndarray]) -> jax.Array:
+    if spec.spacing == "log":
+        xs = np.logspace(
+            np.log2(spec.lo), np.log2(spec.hi), spec.size, base=2.0,
+            dtype=np.float64,
+        )
+    else:
+        xs = np.linspace(spec.lo, spec.hi, spec.size, dtype=np.float64)
+    return jnp.asarray(fn(xs), dtype=jnp.float32)
+
+
+def lut_index(x: jax.Array, spec: LutSpec) -> jax.Array:
+    """Nearest-entry index with saturation (AP_SAT analogue).
+
+    Pure-jnp expression (also valid inside Pallas kernel bodies)."""
+    if spec.spacing == "log":
+        xl = jnp.log2(jnp.maximum(x, 1e-30))
+        idx = jnp.round((xl - np.log2(spec.lo)) / spec.step)
+    else:
+        idx = jnp.round((x - spec.lo) / spec.step)
+    return jnp.clip(idx, 0, spec.size - 1).astype(jnp.int32)
+
+
+def lut_lookup(x: jax.Array, table: jax.Array, spec: LutSpec) -> jax.Array:
+    """Reference lookup (gather).  Kernels use the one-hot-matmul form."""
+    return jnp.take(table, lut_index(x, spec), axis=0)
+
+
+def lut_lookup_onehot(x: jax.Array, table: jax.Array, spec: LutSpec) -> jax.Array:
+    """MXU-native lookup: one_hot(idx) @ table.
+
+    This is the TPU translation of a BRAM read — it runs on the systolic
+    array and is what the Pallas kernels emit.  Bit-identical to
+    ``lut_lookup`` (both select exactly one table row).
+    """
+    idx = lut_index(x, spec)
+    onehot = jax.nn.one_hot(idx, spec.size, dtype=table.dtype)
+    return onehot @ table
+
+
+# --- standard tables used by the paper's three layers ----------------------
+
+# exp over the (scaled) attention-score domain.  hls4ml default table range
+# is [-8, 8) with 1024 entries; exp saturates hard below -8 anyway.
+# Linear spacing == the paper's fixed-point BRAM indexing.
+EXP_SPEC = LutSpec("exp", lo=-8.0, hi=8.0, size=1024)
+
+# 1/x over the softmax-denominator domain.  Log-indexed (see LutSpec): the
+# denominator of a CAUSAL row can be as small as e^{-8} (one masked-in
+# term) and as large as 512k * e^8 for the long-context cells — 45 octaves
+# that a linear fixed-point table cannot cover with uniform relative error.
+INV_SPEC = LutSpec("inv", lo=2.0 ** -12, hi=2.0 ** 33, size=4096, spacing="log")
+
+# 1/sqrt(var) for layernorm; same octave-spanning argument.
+RSQRT_SPEC = LutSpec("rsqrt", lo=2.0 ** -20, hi=2.0 ** 12, size=4096, spacing="log")
+
+
+def exp_table() -> jax.Array:
+    return build_table(EXP_SPEC, np.exp)
+
+
+def inv_table() -> jax.Array:
+    return build_table(INV_SPEC, lambda x: 1.0 / x)
+
+
+def rsqrt_table() -> jax.Array:
+    return build_table(RSQRT_SPEC, lambda x: 1.0 / np.sqrt(x))
+
+
+def lut_exp(x: jax.Array) -> jax.Array:
+    return lut_lookup(x, exp_table(), EXP_SPEC)
+
+
+def lut_inv(x: jax.Array) -> jax.Array:
+    return lut_lookup(x, inv_table(), INV_SPEC)
+
+
+def lut_rsqrt(x: jax.Array) -> jax.Array:
+    return lut_lookup(x, rsqrt_table(), RSQRT_SPEC)
+
+
+def lut_max_abs_error(spec: LutSpec, fn: Callable[[np.ndarray], np.ndarray]) -> float:
+    """Worst-case interpolation error of nearest-entry lookup on the grid
+    midpoints — used by property tests to bound LUT softmax error."""
+    if spec.spacing == "log":
+        grid = np.logspace(
+            np.log2(spec.lo), np.log2(spec.hi), spec.size, base=2.0
+        )
+        xs = np.sqrt(grid[:-1] * grid[1:])  # geometric midpoints
+        idx = np.clip(
+            np.round((np.log2(xs) - np.log2(spec.lo)) / spec.step),
+            0, spec.size - 1,
+        ).astype(int)
+    else:
+        xs = np.linspace(spec.lo, spec.hi - spec.step, spec.size - 1) + spec.step / 2
+        idx = np.clip(
+            np.round((xs - spec.lo) / spec.step), 0, spec.size - 1
+        ).astype(int)
+    table = np.asarray(build_table(spec, fn))
+    return float(np.max(np.abs(table[idx] - fn(xs))))

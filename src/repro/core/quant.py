@@ -1,0 +1,230 @@
+"""Quantization engine: QAT fake-quant, PTQ calibration, int8 tensors.
+
+Two paths, mirroring the paper's split:
+
+* **Fidelity path** — ``ap_fixed`` fake-quant (``core.fixed_point``) applied
+  to weights/activations during training (QAT, straight-through estimator)
+  or after training (PTQ).  Arbitrary bit widths; used for the
+  AUC-ratio-vs-bits sweeps (paper Figs. 9-11).
+
+* **Performance path** — symmetric int8 with per-tensor or per-channel
+  scales and int32 accumulation, feeding ``kernels/qmatmul`` (the MXU
+  analogue of the paper's DSP fixed-point datapath).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# int8 symmetric quantization (performance path)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QTensor:
+    """A quantized tensor: int codes + float scale.
+
+    ``values``: int8 (or int16) codes.
+    ``scale``: per-tensor scalar or per-axis vector such that
+    ``dequant = values * scale`` broadcast along ``axis``.
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    axis: int | None = None  # channel axis of per-channel scale, None = per-tensor
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        scale = self.scale
+        if self.axis is not None:
+            bshape = [1] * self.values.ndim
+            bshape[self.axis] = self.values.shape[self.axis]
+            scale = scale.reshape(bshape)
+        return self.values.astype(dtype) * scale.astype(dtype)
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda q: ((q.values, q.scale), q.axis),
+    lambda axis, leaves: QTensor(leaves[0], leaves[1], axis),
+)
+
+
+def quantize_int8(
+    x: jax.Array, axis: int | None = None, bits: int = 8
+) -> QTensor:
+    """Symmetric linear quantization to ``bits`` (default int8)."""
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    if axis is None:
+        codes = jnp.round(x / scale)
+    else:
+        bshape = [1] * x.ndim
+        bshape[axis] = x.shape[axis]
+        codes = jnp.round(x / scale.reshape(bshape))
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    codes = jnp.clip(codes, -qmax - 1, qmax).astype(dtype)
+    return QTensor(codes, scale.astype(jnp.float32), axis)
+
+
+def fake_quant_int8(x: jax.Array, axis: int | None = None, bits: int = 8) -> jax.Array:
+    """Quantize-dequantize with STE gradient (int8 QAT)."""
+    q = quantize_int8(jax.lax.stop_gradient(x), axis=axis, bits=bits)
+    deq = q.dequantize(x.dtype)
+    return x + jax.lax.stop_gradient(deq - x)
+
+
+# --------------------------------------------------------------------------
+# PTQ calibration (fidelity + performance paths)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibrationStats:
+    """Running activation statistics collected over calibration batches."""
+
+    amax: float = 0.0
+    amin: float = 0.0
+    n: int = 0
+
+    def update(self, x: jax.Array) -> "CalibrationStats":
+        return CalibrationStats(
+            amax=max(self.amax, float(jnp.max(x))),
+            amin=min(self.amin, float(jnp.min(x))),
+            n=self.n + 1,
+        )
+
+    def required_int_bits(self) -> int:
+        """Smallest signed integer width covering the observed range."""
+        bound = max(abs(self.amax), abs(self.amin), 1e-8)
+        import math
+
+        return max(1, math.ceil(math.log2(bound) + 1e-12) + 1)
+
+
+class PTQCalibrator:
+    """Collects per-name activation stats and emits FixedPointConfigs.
+
+    Usage::
+
+        calib = PTQCalibrator(frac_bits=8)
+        for batch in data: model_apply(params, batch, observer=calib)
+        cfgs = calib.configs()
+    """
+
+    def __init__(self, frac_bits: int, max_int_bits: int = fxp.ACCUM_INT_BITS):
+        self.frac_bits = frac_bits
+        self.max_int_bits = max_int_bits
+        self.stats: dict[str, CalibrationStats] = {}
+
+    def observe(self, name: str, x: jax.Array) -> jax.Array:
+        self.stats[name] = self.stats.get(name, CalibrationStats()).update(x)
+        return x
+
+    def configs(self) -> dict[str, fxp.FixedPointConfig]:
+        out = {}
+        for name, st in self.stats.items():
+            int_bits = min(st.required_int_bits(), self.max_int_bits)
+            out[name] = fxp.ap_fixed(int_bits + self.frac_bits, int_bits)
+        return out
+
+
+# --------------------------------------------------------------------------
+# Model-level quantization transforms
+# --------------------------------------------------------------------------
+
+def quantize_pytree_fixed(params: PyTree, cfg: fxp.FixedPointConfig) -> PyTree:
+    """PTQ: snap every float leaf onto the ap_fixed grid (fidelity path)."""
+
+    def _q(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            return fxp.quantize(leaf, cfg)
+        return leaf
+
+    return jax.tree.map(_q, params)
+
+
+def fake_quant_pytree(params: PyTree, cfg: fxp.FixedPointConfig) -> PyTree:
+    """QAT: fake-quant every float leaf with STE gradients."""
+
+    def _q(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            return fxp.quantize_ste(leaf, cfg)
+        return leaf
+
+    return jax.tree.map(_q, params)
+
+
+def quantize_pytree_int8(params: PyTree, axis: int | None = 0) -> PyTree:
+    """Performance path: every float matrix leaf -> QTensor (per-channel).
+
+    1-D leaves (biases, norm scales) stay float — the paper also keeps
+    accumulator/bias precision higher than the datapath.
+    """
+
+    def _q(leaf):
+        if (
+            isinstance(leaf, jax.Array)
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and leaf.ndim >= 2
+        ):
+            ch_axis = (leaf.ndim - 1) if axis is not None else None
+            return quantize_int8(leaf, axis=ch_axis)
+        return leaf
+
+    return jax.tree.map(_q, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Framework-level quantization selection (configs/*.py reference this)."""
+
+    mode: str = "none"  # none | ptq | qat | int8
+    weight_cfg: fxp.FixedPointConfig | None = None
+    act_cfg: fxp.FixedPointConfig | None = None
+    accum_cfg: fxp.FixedPointConfig = fxp.ACCUM_CONFIG
+    int8_weights: bool = False
+    int8_kv_cache: bool = False
+    lut_softmax: bool = False
+
+    def maybe_fake_quant_act(self, x: jax.Array) -> jax.Array:
+        if self.mode == "qat" and self.act_cfg is not None:
+            return fxp.quantize_ste(x, self.act_cfg)
+        return x
+
+    def maybe_fake_quant_weight(self, w: jax.Array) -> jax.Array:
+        if self.mode == "qat" and self.weight_cfg is not None:
+            return fxp.quantize_ste(w, self.weight_cfg)
+        return w
+
+
+def sweep_frac_bits(
+    apply_fn: Callable[[PyTree, jax.Array], jax.Array],
+    params: PyTree,
+    x: jax.Array,
+    int_bits: int,
+    frac_bits_list: list[int],
+) -> dict[int, jax.Array]:
+    """PTQ bit-width sweep helper used by the Fig. 9-11 benchmark."""
+    out = {}
+    for fb in frac_bits_list:
+        cfg = fxp.ap_fixed(int_bits + fb, int_bits)
+        qparams = quantize_pytree_fixed(params, cfg)
+        out[fb] = apply_fn(qparams, x)
+    return out

@@ -1,0 +1,88 @@
+"""The paper's restructured 3-stage softmax (Sec. IV-B), module-level API.
+
+Original hls4ml form (k^2 exponent evaluations):
+    S_i = ( sum_j exp(z_j - z_i) )^{-1}
+
+Paper's restructured form (k evaluations):
+    S_i = exp(z_i) * ( sum_j exp(z_j) )^{-1}
+
+computed in 3 pipeline stages:
+  1. element-wise exp via LUT,
+  2. sum + inversion via LUT (once per row),
+  3. element-wise multiply.
+
+There is deliberately *no max subtraction*: in the paper's fixed-point
+datapath the score domain is bounded, so exp never overflows.  We keep that
+behaviour for the quantized path (scores are clipped to the LUT domain,
+which is exactly what ap_fixed saturation does), and provide the numerically
+safe variant for the float path.
+
+The Pallas kernel version lives in ``kernels/lut_softmax``; this module is
+the framework-facing API and jnp fallback.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut
+
+
+def softmax_paper_exact(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Paper's 3-stage dataflow with exact exp/reciprocal (no max-sub)."""
+    e = jnp.exp(x)  # stage 1
+    inv = 1.0 / jnp.sum(e, axis=axis, keepdims=True)  # stage 2
+    return e * inv  # stage 3
+
+
+def softmax_lut(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Paper's 3-stage softmax with LUT exp + LUT inversion.
+
+    Inputs outside the exp-LUT domain saturate (ap_fixed AP_SAT analogue).
+    """
+    if axis != -1:
+        x = jnp.moveaxis(x, axis, -1)
+    e = lut.lut_exp(x)  # stage 1: exp LUT
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    inv = lut.lut_inv(s)  # stage 2: inversion LUT
+    out = e * inv  # stage 3: multiply
+    if axis != -1:
+        out = jnp.moveaxis(out, -1, axis)
+    return out
+
+
+def softmax_legacy_hls4ml(x: jax.Array, axis: int = -1) -> jax.Array:
+    """The ORIGINAL hls4ml softmax the paper replaced — k^2 exponent terms.
+
+    Implemented as the baseline the paper compares against (kept for the
+    benchmark that reproduces the k vs k^2 operation-count argument).
+    """
+    # S_i = (sum_j exp(z_j - z_i))^{-1}
+    diff = jnp.expand_dims(x, -2) - jnp.expand_dims(x, -1)  # [..., i, j]
+    if axis != -1:
+        raise NotImplementedError("legacy softmax only supports axis=-1")
+    return 1.0 / jnp.sum(jnp.exp(diff), axis=-1)
+
+
+def softmax_safe(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Float-path softmax with max subtraction (jax.nn.softmax semantics)."""
+    return jax.nn.softmax(x, axis=axis)
+
+
+def softmax(x: jax.Array, axis: int = -1, mode: str = "safe") -> jax.Array:
+    """Framework entry point.  ``mode``: safe | paper | lut | legacy."""
+    if mode == "safe":
+        return softmax_safe(x, axis)
+    if mode == "paper":
+        return softmax_paper_exact(x, axis)
+    if mode == "lut":
+        return softmax_lut(x, axis)
+    if mode == "legacy":
+        return softmax_legacy_hls4ml(x, axis)
+    raise ValueError(f"unknown softmax mode: {mode}")
+
+
+def op_count(k: int, mode: str) -> int:
+    """Exponent-evaluation count — the paper's k vs k^2 argument."""
+    return k * k if mode == "legacy" else k

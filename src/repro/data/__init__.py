@@ -1,0 +1,10 @@
+from repro.data.loader import PrefetchLoader  # noqa: F401
+from repro.data.physics import (  # noqa: F401
+    GENERATORS,
+    auc_score,
+    btagging_data,
+    engine_anomaly_data,
+    gw_data,
+    multiclass_auc,
+)
+from repro.data.synthetic import SyntheticLM, SyntheticLMConfig  # noqa: F401

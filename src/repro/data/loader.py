@@ -1,0 +1,63 @@
+"""Host data loader: background prefetch + sharded device_put.
+
+The loader wraps a pure ``batch_fn(step, shard, n_shards) -> dict`` (see
+synthetic.py) with a prefetch thread and places each global batch with the
+mesh batch sharding, so the train loop overlaps host-side generation with
+device compute.  Restart-exactness: state is just the step counter.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+class PrefetchLoader:
+    def __init__(
+        self,
+        batch_fn: Callable[[int, int, int], dict],
+        sharding=None,
+        start_step: int = 0,
+        prefetch: int = 2,
+    ):
+        self.batch_fn = batch_fn
+        self.sharding = sharding
+        self.step = start_step
+        self.prefetch = prefetch
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.batch_fn(step, 0, 1)
+            if self.sharding is not None:
+                batch = {
+                    k: jax.device_put(v, self.sharding) for k, v in batch.items()
+                }
+            try:
+                self._q.put((step, batch), timeout=1.0)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self.step = step + 1
+        return batch
+
+    def close(self):
+        self._stop.set()
+        # drain so the worker can exit
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,4 @@
+"""Distribution layer: sharding rules (DP/FSDP/TP/EP/SP), compressed
+collectives, and compute/communication overlap primitives."""
+
+from repro.distributed.sharding import ShardingRules  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The paper optimizes four compute layers on the FPGA (quantized GEMMs, the
+restructured softmax, the staged LayerNorm, and the streaming MHA stages);
+each maps to one kernel subpackage here, plus ``ssd_scan`` for the Mamba2
+hot spot of the assigned ssm/hybrid archs.  Each ships ``<name>.py``
+(pl.pallas_call + BlockSpec), ``ops.py`` (jit'd public wrapper) and
+``ref.py`` (pure-jnp oracle), validated in interpret mode on CPU against
+its oracle across shape/dtype sweeps (tests/test_kernels_*.py).
+"""

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["mha", "flash_attention_pallas", "attention_ref"]

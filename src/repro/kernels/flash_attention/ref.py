@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused streaming attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softmax as sm
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (..., Lq, D) — any leading batch/head dims
+    k: jax.Array,  # (..., Lkv, D)
+    v: jax.Array,  # (..., Lkv, D)
+    *,
+    scale: float,
+    causal: bool = False,
+    window: int | None = None,
+    mode: str = "safe",
+    kv_len: int | None = None,
+) -> jax.Array:
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    # ``attnvol`` named_scope: tags the O(L^2) attention volume in HLO
+    # metadata so the roofline parser can price it separately (the fused
+    # Pallas kernel replaces exactly this volume on TPU).
+    with jax.named_scope("attnvol"):
+        s = jnp.einsum("...qd,...kd->...qk", qf, kf) * scale
+        lq, lkv = s.shape[-2], s.shape[-1]
+        kv_len = lkv if kv_len is None else kv_len
+        q_pos = jnp.arange(lq)[:, None]
+        k_pos = jnp.arange(lkv)[None, :]
+        mask = k_pos < kv_len
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window is not None:
+            mask = mask & (q_pos - k_pos < window)
+
+        if mode == "safe":
+            s = jnp.where(mask, s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+        else:  # paper's LUT softmax, masked entries contribute zero weight
+            e = sm.lut.lut_exp(s)
+            e = jnp.where(mask, e, 0.0)
+            denom = jnp.sum(e, axis=-1, keepdims=True)
+            p = e * sm.lut.lut_inv(denom)
+        out = jnp.einsum("...qk,...kd->...qd", p, vf)
+    return out.astype(q.dtype)

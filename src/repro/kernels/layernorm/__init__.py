@@ -1,0 +1,5 @@
+from repro.kernels.layernorm.layernorm import layernorm_pallas
+from repro.kernels.layernorm.ops import layernorm
+from repro.kernels.layernorm.ref import layernorm_ref
+
+__all__ = ["layernorm", "layernorm_pallas", "layernorm_ref"]

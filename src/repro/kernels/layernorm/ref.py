@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the staged LayerNorm kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layernorm as ln_core
+
+
+def layernorm_ref(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    use_lut: bool = False,
+    rms: bool = False,
+    eps: float = 1e-5,
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if rms:
+        out = ln_core.rmsnorm(xf, gamma.reshape(-1), eps=eps, use_lut=use_lut)
+    else:
+        out = ln_core.layernorm_paper(
+            xf, gamma.reshape(-1), beta.reshape(-1), eps=eps, use_lut=use_lut
+        )
+    return out.astype(x.dtype)

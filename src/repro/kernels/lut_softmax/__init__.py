@@ -1,0 +1,10 @@
+from repro.kernels.lut_softmax.lut_softmax import lut_softmax_pallas
+from repro.kernels.lut_softmax.ops import lut_softmax
+from repro.kernels.lut_softmax.ref import lut_softmax_ref, softmax_exact_ref
+
+__all__ = [
+    "lut_softmax",
+    "lut_softmax_pallas",
+    "lut_softmax_ref",
+    "softmax_exact_ref",
+]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the LUT softmax kernel (gather-based lookup)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import lut
+
+
+def lut_softmax_ref(x: jax.Array) -> jax.Array:
+    """Bit-identical reference: same tables, gather instead of MXU one-hot."""
+    import jax.numpy as jnp
+
+    e = lut.lut_lookup(x.astype(jnp.float32), lut.exp_table(), lut.EXP_SPEC)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    inv = lut.lut_lookup(s, lut.inv_table(), lut.INV_SPEC)
+    return (e * inv).astype(x.dtype)
+
+
+def softmax_exact_ref(x: jax.Array) -> jax.Array:
+    """Float oracle (what the LUT approximates)."""
+    import jax.numpy as jnp
+
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.qmatmul.ops import qmatmul, qmatmul_prequantized
+from repro.kernels.qmatmul.qmatmul import qmatmul_pallas
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+__all__ = ["qmatmul", "qmatmul_prequantized", "qmatmul_pallas", "qmatmul_ref"]

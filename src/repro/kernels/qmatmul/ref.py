@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the int8 GEMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmatmul_ref(
+    x: jax.Array,  # (M, K) int8
+    w: jax.Array,  # (K, N) int8
+    x_scale: jax.Array,  # (M, 1) f32
+    w_scale: jax.Array,  # (1, N) f32
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    acc = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * (x_scale * w_scale)).astype(out_dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_scan_naive, ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+__all__ = ["ssd", "ssd_scan_pallas", "ssd_scan_ref", "ssd_scan_naive"]

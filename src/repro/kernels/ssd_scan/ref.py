@@ -1,0 +1,31 @@
+"""Oracle for the SSD scan kernel: the pure-jnp chunked implementation and
+the step-by-step recurrence from models/ssm."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.ssm import ssd_chunked, ssd_naive_ref
+
+
+def ssd_scan_ref(xdt, a, bmat, cmat, *, chunk: int = 64):
+    """(BH, L, ...) layout -> (BH, L, P), via models.ssm.ssd_chunked
+    (which is itself validated against the naive recurrence)."""
+    # models.ssm uses (b, l, h, p); fold BH into b with h=1
+    import jax.numpy as jnp
+
+    x4 = xdt[:, :, None, :]
+    a3 = a[..., 0][:, :, None]
+    b4 = bmat[:, :, None, :]
+    c4 = cmat[:, :, None, :]
+    y, _ = ssd_chunked(x4, a3, b4, c4, chunk=chunk)
+    return y[:, :, 0, :]
+
+
+def ssd_scan_naive(xdt, a, bmat, cmat):
+    x4 = xdt[:, :, None, :]
+    a3 = a[..., 0][:, :, None]
+    b4 = bmat[:, :, None, :]
+    c4 = cmat[:, :, None, :]
+    y, _ = ssd_naive_ref(x4, a3, b4, c4)
+    return y[:, :, 0, :]

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, the multi-pod dry-run, and the train /
+serve drivers.  NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import —
+import it only in dedicated processes."""
+
+from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,351 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on 512 placeholder host devices, record memory analysis, cost
+analysis and collective schedule for §Dry-run / §Roofline.
+
+The two lines above MUST stay the first statements in this file — jax
+locks the device count at first init, and smoke tests/benches must not
+inherit them (they import repro.* directly, never this module).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells x 2 meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod # single-pod only
+
+Results are cached as JSON under --out (default experiments/dryrun); a
+cell is recompiled only with --force.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, ModelConfig, ParallelismConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models import params as params_lib
+from repro.optim import AdamW
+from repro.roofline.analysis import analyze_cell
+from repro.train import step as step_lib
+
+MESHES = {
+    "pod": dict(multi_pod=False),
+    "multipod": dict(multi_pod=True),
+}
+
+
+def make_mesh(name: str):
+    if name in MESHES:
+        return make_production_mesh(**MESHES[name])
+    if name == "pod2":  # head-aligned small TP: 128-way data x 2-way model
+        return jax.make_mesh(
+            (128, 2), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    if name == "pod8":  # alternate aspect ratio: 32-way data x 8-way model
+        return jax.make_mesh(
+            (32, 8), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    if name == "pod32":  # 8-way data x 32-way model
+        return jax.make_mesh(
+            (8, 32), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    if name == "tiny":  # tests: 2x2 from the same 512-device pool
+        return jax.make_mesh(
+            (2, 2), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    if name == "tinypod":
+        return jax.make_mesh(
+            (2, 2, 2), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    raise KeyError(name)
+
+
+def plan_for(cfg: ModelConfig, shape: ShapeConfig) -> ParallelismConfig:
+    """Default parallelism plan per cell kind (the baseline the §Perf
+    hillclimb starts from)."""
+    remat = "minimal" if shape.kind == "train" else "none"
+    # long-context cells shard the sequence/cache dim (SP)
+    sp = shape.seq_len >= 32768 and shape.kind != "train"
+    return ParallelismConfig(sp=sp, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# per-kind lowering
+# ---------------------------------------------------------------------------
+
+
+def _kernel_cfg(cfg, shape, mesh, rules, kernel=None):
+    """Default kernel dict for dry-run lowering: pins activation sharding
+    (batch over data axes; seq over 'model' under SP for long contexts)."""
+    kernel = dict(kernel or {})
+    sharded_dims = {1: "seq"} if (rules.plan.sp and shape.kind != "decode") else None
+    kernel.setdefault(
+        "act_sharding",
+        rules.batch_sharding(
+            3, sharded_dims,
+            shape=(shape.global_batch, shape.seq_len, cfg.d_model),
+        ),
+    )
+    return kernel
+
+
+def lower_train(cfg, shape, mesh, rules, kernel=None):
+    kernel = _kernel_cfg(cfg, shape, mesh, rules, kernel)
+    optimizer = AdamW(schedule=lambda s: 3e-4)
+    abstract = step_lib.abstract_train_state(cfg, optimizer)
+    axes = step_lib.train_state_logical_axes(cfg)
+    state_sh = rules.tree_shardings(abstract, axes)
+    specs = lm.input_specs(cfg, shape)
+    batch_sh = {
+        k: rules.batch_sharding(len(v.shape), shape=v.shape)
+        for k, v in specs.items()
+    }
+    fn = functools.partial(
+        step_lib.train_step,
+        cfg=cfg,
+        optimizer=optimizer,
+        kernel=kernel,
+        remat=rules.plan.remat,
+        grad_accum=rules.plan.grad_accum,
+    )
+    jitted = jax.jit(
+        fn,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    with mesh:
+        return jitted.lower(abstract, specs)
+
+
+def lower_prefill(cfg, shape, mesh, rules, kernel=None):
+    kernel = _kernel_cfg(cfg, shape, mesh, rules, kernel)
+    aparams = lm.abstract_params(cfg)
+    axes = params_lib.logical_axes(lm.param_spec(cfg))
+    params_sh = rules.tree_shardings(aparams, axes)
+    acaches = lm.abstract_caches(cfg, shape.global_batch, shape.seq_len)
+    cache_axes = lm.cache_logical_axes(cfg)
+    cache_sh = _cache_shardings(rules, acaches, cache_axes, cfg)
+    specs = lm.input_specs(cfg, shape)
+    batch_sh = {
+        k: rules.batch_sharding(len(v.shape), shape=v.shape)
+        for k, v in specs.items()
+    }
+
+    def fn(params, batch, caches):
+        logits, new_caches, _ = lm.forward(
+            params, cfg, batch, mode="prefill", caches=caches, kernel=kernel
+        )
+        return logits[:, -1], new_caches
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, batch_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    with mesh:
+        return jitted.lower(aparams, specs, acaches)
+
+
+def lower_decode(cfg, shape, mesh, rules, kernel=None, quantized=False):
+    kernel = _kernel_cfg(cfg, shape, mesh, rules, kernel)
+    aparams = lm.abstract_params(cfg)
+    axes = params_lib.logical_axes(lm.param_spec(cfg))
+    params_sh = rules.tree_shardings(aparams, axes)
+    acaches = lm.abstract_caches(
+        cfg, shape.global_batch, shape.seq_len, quantized=quantized
+    )
+    cache_axes = lm.cache_logical_axes(cfg, quantized=quantized)
+    cache_sh = _cache_shardings(rules, acaches, cache_axes, cfg)
+    specs = lm.input_specs(cfg, shape)
+    batch_sh = {
+        "tokens": rules.batch_sharding(2, shape=specs["tokens"].shape),
+        "positions": rules.batch_sharding(1, shape=specs["positions"].shape),
+    }
+
+    def fn(params, tokens, positions, caches):
+        return lm.decode_step(
+            params, cfg, tokens, positions, caches, kernel=kernel
+        )
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(
+            params_sh, batch_sh["tokens"], batch_sh["positions"], cache_sh,
+        ),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(3,),
+    )
+    with mesh:
+        return jitted.lower(
+            aparams, specs["tokens"], specs["positions"], acaches
+        )
+
+
+def _cache_shardings(rules, acaches, cache_axes, cfg):
+    def walk(abs_node, axes_node):
+        if isinstance(abs_node, jax.ShapeDtypeStruct):
+            return rules.sharding_for(tuple(axes_node), abs_node.shape)
+        return {k: walk(abs_node[k], axes_node[k]) for k in abs_node}
+
+    sh = {}
+    for key in acaches:
+        axes_key = "layers" if key == "shared" else key
+        # hybrid 'shared' uses the same per-entry axes as dense kv caches
+        node_axes = cache_axes.get(key) or cache_axes["layers"]
+        sh[key] = walk(acaches[key], node_axes)
+    return sh
+
+
+LOWER = {"train": lower_train, "prefill": lower_prefill, "decode": lower_decode}
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    *,
+    out_dir: str,
+    force: bool = False,
+    reduced: bool = False,
+    plan: ParallelismConfig | None = None,
+    tag: str = "",
+    kernel: dict | None = None,
+    cfg_transform=None,
+    overrides: dict | None = None,
+    quantized_cache: bool = False,
+) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}{('__' + tag) if tag else ''}.json"
+    path = os.path.join(out_dir, fname)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    ok, reason = configs.cell_status(arch, shape_name)
+    if not ok:
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skip", "reason": reason,
+        }
+        with open(path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    cfg = configs.get_config(arch, reduced=reduced)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = SHAPES[shape_name]
+    if reduced:
+        shape = dataclasses.replace(
+            shape, seq_len=min(shape.seq_len, 128),
+            global_batch=min(shape.global_batch, 8),
+        )
+    mesh = make_mesh(mesh_name)
+    plan = plan or plan_for(cfg, shape)
+    rules = ShardingRules(mesh=mesh, plan=plan, overrides=overrides or {})
+    t0 = time.time()
+    try:
+        kw = {"quantized": True} if (quantized_cache and shape.kind == "decode") else {}
+        lowered = LOWER[shape.kind](cfg, shape, mesh, rules, kernel=kernel, **kw)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        analysis = analyze_cell(
+            arch=arch,
+            shape_cfg=shape,
+            cfg=cfg,
+            mesh_name=mesh_name,
+            n_devices=mesh.size,
+            compiled=compiled,
+        )
+        result = analysis.to_json()
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            fallbacks=rules.fallbacks,
+            plan=dataclasses.asdict(plan),
+            params=cfg.param_count_estimate(),
+            active_params=cfg.active_param_count_estimate(),
+        )
+        print(
+            f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+            f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+            f"dominant={analysis.dominant})",
+            flush=True,
+        )
+    except Exception as e:  # noqa: BLE001 - record and continue
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAILED {e}",
+              flush=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both", "tiny", "tinypod", "pod2", "pod8", "pod32"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reduced", action="store_true", help="reduced configs (tests)")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a, s, _, _ in configs.dryrun_cells()]
+    else:
+        archs = [args.arch] if args.arch else configs.ARCH_NAMES
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            r = run_cell(
+                arch, shape, mesh_name,
+                out_dir=args.out, force=args.force, reduced=args.reduced,
+            )
+            st = r.get("status")
+            n_ok += st == "ok"
+            n_skip += st == "skip"
+            n_err += st == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,15 @@
+"""Architecture zoo: composable model definitions over the param-spec
+system (see params.py), covering dense / MoE / SSM / hybrid / VLM / audio
+families for the 10 assigned architectures plus the paper's three physics
+models (models/physics.py)."""
+
+from repro.models import (  # noqa: F401
+    attention,
+    blocks,
+    layers,
+    lm,
+    mlp,
+    moe,
+    params,
+    ssm,
+)

@@ -1,0 +1,152 @@
+"""Transformer / MoE / Mamba / hybrid blocks (pre-norm residual).
+
+MiniCPM-style muP scaling is supported via ``cfg.residual_scale`` (each
+residual branch is scaled — "scale_depth / sqrt(n_layers)").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, mlp, moe, ssm
+
+
+def block_kind(cfg: ModelConfig, layer_idx: int | None = None) -> str:
+    if cfg.family in ("ssm", "hybrid"):
+        return "mamba"
+    if cfg.moe is not None:
+        return "moe"
+    return "dense"
+
+
+def block_spec(cfg: ModelConfig, dtype=jnp.float32):
+    kind = block_kind(cfg)
+    if kind == "mamba":
+        return {
+            "ln1": layers.norm_spec(cfg.d_model, cfg.norm_kind, dtype),
+            "mamba": ssm.mamba_spec(cfg, dtype),
+        }
+    spec = {
+        "ln1": layers.norm_spec(cfg.d_model, cfg.norm_kind, dtype),
+        "attn": attention.attention_spec(cfg, dtype),
+        "ln2": layers.norm_spec(cfg.d_model, cfg.norm_kind, dtype),
+    }
+    if kind == "moe":
+        spec["ffn"] = moe.moe_spec(cfg, dtype)
+    else:
+        spec["ffn"] = mlp.mlp_spec(cfg, dtype)
+    return spec
+
+
+def block_apply(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str = "train",
+    cache=None,
+    kernel: dict | None = None,
+):
+    """Returns (x, new_cache, aux)."""
+    kind = block_kind(cfg)
+    rs = cfg.residual_scale
+    aux = {}
+    if kind == "mamba":
+        h = layers.norm(params["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        out, new_cache = ssm.mamba_apply(
+            params["mamba"], cfg, h, mode=mode, cache=cache
+        )
+        x = x + rs * out
+        return x, new_cache, aux
+
+    h = layers.norm(params["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    attn_out, new_cache = attention.attention_apply(
+        params["attn"], cfg, h, positions, mode=mode, cache=cache, kernel=kernel
+    )
+    x = x + rs * attn_out
+    h = layers.norm(params["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    if kind == "moe":
+        ffn_out, aux = moe.moe_apply(params["ffn"], cfg, h)
+    else:
+        ffn_out = mlp.mlp_apply(params["ffn"], cfg, h)
+    x = x + rs * ffn_out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style shared attention block (hybrid family)
+# ---------------------------------------------------------------------------
+
+
+def shared_attn_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Derived attention config for the shared block: it attends in the
+    concat(x, x_embed) space (width 2*d_model) and projects back to d."""
+    width = 2 * cfg.d_model if cfg.hybrid.concat_residual else cfg.d_model
+    return dataclasses.replace(
+        cfg,
+        attn_kind="gqa",
+        head_dim=width // cfg.n_heads,
+        sliding_window=None,
+        ssm=None,
+    )
+
+
+def shared_attn_spec(cfg: ModelConfig, dtype=jnp.float32):
+    """Zamba2 shared block: a full transformer block (attention + MLP) in
+    the concat(x, x_embed) width-W space, followed by a W->d down-projector.
+    Weights are shared across all applications (every ``attn_every`` layers);
+    each application has its own KV cache."""
+    acfg = shared_attn_cfg(cfg)
+    w = 2 * cfg.d_model if cfg.hybrid.concat_residual else cfg.d_model
+    hd = acfg.resolved_head_dim
+    wcfg = dataclasses.replace(acfg, d_model=w)
+    return {
+        "ln1": layers.norm_spec(w, cfg.norm_kind, dtype),
+        "attn": {
+            "wq": layers.dense_spec(w, cfg.n_heads * hd, axes=("embed", "heads"), dtype=dtype),
+            "wk": layers.dense_spec(w, cfg.n_kv_heads * hd, axes=("embed", "kv_heads"), dtype=dtype),
+            "wv": layers.dense_spec(w, cfg.n_kv_heads * hd, axes=("embed", "kv_heads"), dtype=dtype),
+            "wo": layers.dense_spec(cfg.n_heads * hd, w, axes=("heads", "embed"), dtype=dtype),
+        },
+        "ln2": layers.norm_spec(w, cfg.norm_kind, dtype),
+        "mlp": mlp.mlp_spec(wcfg, dtype),
+        "out_proj": layers.dense_spec(w, cfg.d_model, axes=("mlp", "embed"), dtype=dtype),
+    }
+
+
+def shared_attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return attention.cache_spec(shared_attn_cfg(cfg), batch, max_len, dtype)
+
+
+def shared_attn_apply(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    x_embed: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str = "train",
+    cache=None,
+    kernel: dict | None = None,
+):
+    acfg = shared_attn_cfg(cfg)
+    wcfg = dataclasses.replace(acfg, d_model=2 * cfg.d_model)
+    h = (
+        jnp.concatenate([x, x_embed], axis=-1)
+        if cfg.hybrid.concat_residual
+        else x
+    )
+    a = layers.norm(params["ln1"], h, cfg.norm_kind, cfg.norm_eps)
+    a, new_cache = attention.gqa_apply(
+        params["attn"], acfg, a, positions, mode=mode, cache=cache, kernel=kernel
+    )
+    h = h + a
+    m = layers.norm(params["ln2"], h, cfg.norm_kind, cfg.norm_eps)
+    h = h + mlp.mlp_apply(params["mlp"], wcfg, m)
+    out = layers.dense(params["out_proj"], h, cfg.quant)
+    return x + cfg.residual_scale * out, new_cache

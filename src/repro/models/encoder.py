@@ -1,0 +1,23 @@
+"""Encoder-only backbone (hubert-xlarge) — thin wrapper over models.lm.
+
+The audio frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (the wav2vec2-style conv feature extractor is
+out of scope); ``frontend_proj`` maps them into d_model.  Training uses a
+HuBERT-style masked-unit prediction objective over ``vocab_size`` units
+(labels supplied by the data pipeline).
+
+Encoder models have no decode step (bidirectional attention, no KV cache) —
+``decode_32k``/``long_500k`` dry-run cells are skipped for this family.
+"""
+
+from __future__ import annotations
+
+from repro.models.lm import (  # noqa: F401
+    abstract_params,
+    count_params,
+    forward,
+    init_params,
+    input_specs,
+    loss_fn,
+    param_spec,
+)

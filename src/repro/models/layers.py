@@ -1,0 +1,130 @@
+"""Shared primitive layers: dense (quantizable), norms, rope, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layernorm as ln_core
+from repro.models.params import ArraySpec
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(
+    d_in: int,
+    d_out: int,
+    *,
+    axes=("embed", "mlp"),
+    bias: bool = False,
+    dtype=jnp.float32,
+    init: str = "fan_in",
+):
+    spec = {"kernel": ArraySpec((d_in, d_out), dtype, tuple(axes), init)}
+    if bias:
+        spec["bias"] = ArraySpec((d_out,), dtype, (axes[1],), "zeros")
+    return spec
+
+
+def dense(params, x: jax.Array, quant_cfg=None) -> jax.Array:
+    """x @ kernel (+ bias), with optional QAT fake-quant hooks."""
+    w = params["kernel"]
+    if quant_cfg is not None:
+        w = quant_cfg.maybe_fake_quant_weight(w)
+        x = quant_cfg.maybe_fake_quant_act(x)
+    y = jnp.einsum("...i,io->...o", x, w)
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_spec(d: int, kind: str, dtype=jnp.float32):
+    if kind == "none":
+        return {}
+    spec = {"scale": ArraySpec((d,), dtype, ("embed",), "ones")}
+    if kind == "layernorm":
+        spec["bias"] = ArraySpec((d,), dtype, ("embed",), "zeros")
+    return spec
+
+
+def norm(params, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    if kind == "none":
+        return x
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        out = ln_core.rmsnorm(xf, params["scale"].astype(jnp.float32), eps=eps)
+    elif kind == "layernorm":
+        out = ln_core.layernorm_paper(
+            xf,
+            params["scale"].astype(jnp.float32),
+            params["bias"].astype(jnp.float32),
+            eps=eps,
+        )
+    else:
+        raise ValueError(f"unknown norm kind {kind}")
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (..., seq, head_dim)
+    positions: jax.Array,  # (..., seq) or (seq,)
+    theta: float = 10000.0,
+) -> jax.Array:
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations & embedding
+# ---------------------------------------------------------------------------
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {kind}")
+
+
+def embedding_spec(vocab: int, d: int, dtype=jnp.float32):
+    return {
+        "table": ArraySpec(
+            (vocab, d), dtype, ("vocab", "embed"), "embed", init_scale=0.02
+        )
+    }
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: x @ table.T"""
+    return jnp.einsum("...d,vd->...v", x, params["table"])

@@ -1,0 +1,117 @@
+"""Mixture-of-experts with sort-based capacity dispatch (GShard/MaxText
+"dropping" strategy) — static shapes, expert-parallel shardable.
+
+Dispatch: top-k routing -> stable sort by expert id -> position-in-expert
+rank -> scatter into (E, C, d) expert batches (overflow tokens dropped,
+matching capacity-factor semantics) -> per-expert GEMMs (einsum over the
+stacked expert weights, EP-shardable over the 'experts' logical axis) ->
+weighted scatter back.
+
+The router softmax uses the paper's restructured 3-stage form
+(``core/softmax.softmax_paper_exact``) — one of the places the paper's
+technique lands in a modern architecture (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import softmax as sm
+from repro.models import layers
+from repro.models.params import ArraySpec
+
+
+def moe_spec(cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    e = cfg.moe.n_experts
+    ff = cfg.moe.d_expert
+    spec = {
+        "router": layers.dense_spec(d, e, axes=("embed", "experts"), dtype=dtype),
+        "w_up": ArraySpec((e, d, ff), dtype, ("experts", "embed", "mlp"), "fan_in"),
+        "w_down": ArraySpec((e, ff, d), dtype, ("experts", "mlp", "embed"), "fan_in"),
+    }
+    if cfg.gated_mlp:
+        spec["w_gate"] = ArraySpec(
+            (e, d, ff), dtype, ("experts", "embed", "mlp"), "fan_in"
+        )
+    return spec
+
+
+def moe_apply(
+    params, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Returns (output, aux) where aux carries router losses/metrics."""
+    mcfg = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = mcfg.n_experts, mcfg.top_k
+    flat = x.reshape(t, d)
+
+    # ---- routing ----------------------------------------------------------
+    logits = layers.dense(params["router"], flat.astype(jnp.float32), None)
+    probs = sm.softmax_paper_exact(logits, axis=-1)  # paper's 3-stage form
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = jnp.mean(probs, axis=0)  # mean prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, e), axis=1), axis=0
+    )  # fraction routed
+    aux_loss = e * jnp.sum(me * ce) * mcfg.router_aux_weight
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * mcfg.router_z_weight
+
+    # ---- sort-based dispatch ---------------------------------------------
+    capacity = int(max(1, round(t * k / e * mcfg.capacity_factor)))
+    flat_expert = expert_ids.reshape(t * k)
+    flat_gate = gate_vals.reshape(t * k)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # rank of each entry within its expert segment
+    counts = jnp.bincount(flat_expert, length=e)  # (e,)
+    seg_start = jnp.cumsum(counts) - counts  # exclusive prefix
+    rank = jnp.arange(t * k) - seg_start[sorted_expert]
+    keep = rank < capacity
+    dropped = jnp.sum(~keep)
+
+    # scatter tokens into (e, capacity, d); overflow -> dropped
+    slot = jnp.where(keep, sorted_expert * capacity + rank, e * capacity)
+    expert_in = jnp.zeros((e * capacity, d), x.dtype).at[slot].set(
+        flat[sorted_token], mode="drop"
+    )
+    expert_in = expert_in.reshape(e, capacity, d)
+
+    # ---- expert compute (EP: 'experts' axis shardable) --------------------
+    up = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"])
+        h = layers.activation(gate, cfg.act) * up
+    else:
+        h = layers.activation(up, cfg.act)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    # ---- weighted combine --------------------------------------------------
+    gathered = expert_out.reshape(e * capacity, d)
+    # value for each kept (token, slot) entry
+    vals = jnp.where(
+        keep[:, None], gathered[jnp.clip(slot, 0, e * capacity - 1)], 0.0
+    )
+    out = jnp.zeros((t, d), x.dtype).at[sorted_token].add(
+        vals * sorted_gate[:, None].astype(x.dtype)
+    )
+
+    aux = {
+        "moe_aux_loss": aux_loss,
+        "moe_z_loss": z_loss,
+        "moe_dropped_frac": dropped / (t * k),
+    }
+    return out.reshape(b, s, d), aux

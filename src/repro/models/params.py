@@ -1,0 +1,134 @@
+"""Parameter-spec system: one source of truth for init, abstract shapes,
+and sharding.
+
+Each layer declares a *spec tree*: a nested dict whose leaves are
+``ArraySpec(shape, dtype, logical_axes, init)``.  From a spec tree we derive
+
+* ``init_params``      — real parameters (deterministic per-leaf RNG),
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` tree (dry-run: no alloc),
+* ``logical_axes``     — pytree of logical-axis tuples, consumed by
+  ``distributed/sharding.py`` to produce ``NamedSharding`` trees.
+
+Scan-over-layers is expressed by ``stack_spec(spec, n)``, which prepends a
+``layers`` axis to every leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SpecTree = Any  # nested dict[str, ArraySpec | SpecTree]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    logical_axes: tuple[str | None, ...] = ()
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed | small
+    init_scale: float | None = None
+
+    def __post_init__(self):
+        if self.logical_axes and len(self.logical_axes) != len(self.shape):
+            raise ValueError(
+                f"logical_axes {self.logical_axes} rank != shape {self.shape}"
+            )
+
+
+def _leaf_init(spec: ArraySpec, key: jax.Array) -> jax.Array:
+    shape, dtype = spec.shape, spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "embed":
+        scale = spec.init_scale or 1.0
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    if spec.init == "normal":
+        scale = spec.init_scale or 0.02
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    if spec.init == "small":
+        scale = spec.init_scale or 1e-3
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    # fan_in: truncated-normal-ish with 1/sqrt(fan_in); fan-in = prod of all
+    # axes but the last (works for stacked (layers, in, out) leaves too).
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    if len(shape) >= 3:  # stacked (layers, in, out): fan-in is axis -2
+        fan_in = shape[-2]
+    scale = spec.init_scale or (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _iter_leaves(spec: SpecTree, path=()):
+    if isinstance(spec, ArraySpec):
+        yield path, spec
+        return
+    for name in sorted(spec):
+        yield from _iter_leaves(spec[name], path + (name,))
+
+
+def _map_leaves(fn: Callable[[tuple, ArraySpec], Any], spec: SpecTree, path=()):
+    if isinstance(spec, ArraySpec):
+        return fn(path, spec)
+    return {
+        name: _map_leaves(fn, child, path + (name,))
+        for name, child in spec.items()
+    }
+
+
+def init_params(spec: SpecTree, key: jax.Array) -> Any:
+    """Deterministic init: each leaf's key is fold_in(hash(path))."""
+
+    def _init(path, leaf_spec):
+        h = np.uint32(
+            abs(hash("/".join(path))) % np.iinfo(np.uint32).max
+        )
+        return _leaf_init(leaf_spec, jax.random.fold_in(key, h))
+
+    return _map_leaves(_init, spec)
+
+
+def abstract_params(spec: SpecTree) -> Any:
+    return _map_leaves(
+        lambda _, s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec
+    )
+
+
+def logical_axes(spec: SpecTree) -> Any:
+    return _map_leaves(lambda _, s: s.logical_axes, spec)
+
+
+def count_params(spec: SpecTree) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _iter_leaves(spec))
+
+
+def stack_spec(spec: SpecTree, n: int) -> SpecTree:
+    """Prepend a ``layers`` axis to every leaf (scan-over-layers params)."""
+
+    def _stack(_, s: ArraySpec) -> ArraySpec:
+        axes = ("layers",) + tuple(s.logical_axes) if s.logical_axes else (
+            ("layers",) + (None,) * len(s.shape)
+        )
+        return ArraySpec(
+            shape=(n,) + s.shape,
+            dtype=s.dtype,
+            logical_axes=axes,
+            init=s.init,
+            init_scale=s.init_scale,
+        )
+
+    return _map_leaves(_stack, spec)
+
+
+def cast_floats(tree: Any, dtype) -> Any:
+    def _cast(x):
+        if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)

@@ -1,0 +1,100 @@
+"""The paper's three benchmark models (Sec. V / Table I).
+
+Small encoder transformers over continuous time-series inputs:
+
+  engine_anomaly : seq 50 x 1,  3 blocks, d=16,  2-class softmax, NO norm
+  btagging       : seq 15 x 6,  3 blocks, d=64,  3-class softmax
+  gw             : seq 100 x 2, 2 blocks, d=32,  1-logit sigmoid, layernorm
+
+Structure per the paper: input projection -> learned positional embedding ->
+N transformer blocks (MHA + FFN, residual connections; the engine model
+"forgoes the normalization layer") -> pooling -> two dense layers -> output.
+
+These run through the same quantization machinery as the big LMs
+(QAT fake-quant via cfg.quant, PTQ via core.quant.quantize_pytree_fixed)
+and feed the AUC-ratio-vs-bits benchmark (paper Figs. 9-11).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, layers
+from repro.models import params as params_lib
+from repro.models.params import ArraySpec
+
+
+def param_spec(cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    spec = {
+        "input_proj": layers.dense_spec(
+            cfg.input_vec_size, d, axes=(None, "embed"), bias=True, dtype=dtype
+        ),
+        "pos_embed": ArraySpec(
+            (cfg.seq_len, d), dtype, (None, "embed"), "normal", init_scale=0.02
+        ),
+        "blocks": params_lib.stack_spec(
+            blocks.block_spec(cfg, dtype), cfg.n_layers
+        ),
+        "head1": layers.dense_spec(d, d, axes=("embed", "mlp"), bias=True, dtype=dtype),
+        "head2": layers.dense_spec(
+            d, cfg.n_classes, axes=("mlp", None), bias=True, dtype=dtype
+        ),
+    }
+    if cfg.norm_kind != "none":
+        spec["final_norm"] = layers.norm_spec(d, cfg.norm_kind, dtype)
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return params_lib.init_params(param_spec(cfg, dtype), key)
+
+
+def forward(
+    params, cfg: ModelConfig, x: jax.Array, *, kernel: dict | None = None
+) -> jax.Array:
+    """x: (batch, seq_len, input_vec_size) -> logits (batch, n_classes)."""
+    qc = cfg.quant
+    h = layers.dense(params["input_proj"], x, qc)
+    h = h + params["pos_embed"]
+    positions = jnp.arange(cfg.seq_len, dtype=jnp.int32)
+
+    def body(carry, bparams):
+        hh = carry
+        hh, _, _ = blocks.block_apply(
+            bparams, cfg, hh, positions, mode="train", cache=None, kernel=kernel
+        )
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    if cfg.norm_kind != "none":
+        h = layers.norm(params["final_norm"], h, cfg.norm_kind, cfg.norm_eps)
+    h = jnp.mean(h, axis=1)  # pool over time
+    h = jax.nn.relu(layers.dense(params["head1"], h, qc))
+    return layers.dense(params["head2"], h, qc)
+
+
+def predict_proba(params, cfg: ModelConfig, x: jax.Array, **kw) -> jax.Array:
+    """Probability of the positive / per-class probabilities (AUC input)."""
+    logits = forward(params, cfg, x, **kw)
+    if cfg.n_classes == 1:
+        return jax.nn.sigmoid(logits[..., 0])
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, **kw):
+    logits = forward(params, cfg, batch["x"], **kw)
+    y = batch["y"]
+    if cfg.n_classes == 1:
+        logit = logits[..., 0]
+        loss = jnp.mean(
+            jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+        )
+        acc = jnp.mean((logit > 0) == (y > 0.5))
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+    return loss, {"loss": loss, "accuracy": acc}

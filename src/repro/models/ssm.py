@@ -1,0 +1,296 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) in pure JAX.
+
+Implements the chunked SSD algorithm for train/prefill (quadratic within
+Q-sized chunks + linear inter-chunk state recurrence) and the O(1) single
+-token state update for decode.  A naive step-by-step recurrence is kept as
+the test oracle (``ssd_naive_ref``).
+
+Paper-technique note (DESIGN.md §Arch-applicability): Mamba2 has no softmax
+attention, so the LUT-softmax/streaming-MHA parts of the paper do not apply
+here; quantized projections and the staged RMSNorm do.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.params import ArraySpec
+
+
+# ---------------------------------------------------------------------------
+# Param spec
+# ---------------------------------------------------------------------------
+
+
+def mamba_spec(cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.state_dim
+    d_in_proj = 2 * di + 2 * s.n_groups * s.state_dim + h
+    return {
+        "in_proj": layers.dense_spec(d, d_in_proj, axes=("embed", "inner"), dtype=dtype),
+        "conv_w": ArraySpec((s.conv_width, conv_dim), dtype, (None, "inner"), "fan_in"),
+        "conv_b": ArraySpec((conv_dim,), dtype, ("inner",), "zeros"),
+        "A_log": ArraySpec((h,), jnp.float32, ("ssm_heads",), "zeros"),
+        "dt_bias": ArraySpec((h,), jnp.float32, ("ssm_heads",), "zeros"),
+        "D": ArraySpec((h,), jnp.float32, ("ssm_heads",), "ones"),
+        "gate_norm": layers.norm_spec(di, "rmsnorm", dtype),
+        "out_proj": layers.dense_spec(di, d, axes=("inner", "embed"), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., q) -> (..., q, q) with [i, j] = sum_{m=j+1..i} a_m (i>=j)."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    q = a.shape[-1]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xdt: jax.Array,  # (b, l, h, p) inputs pre-multiplied by dt
+    a: jax.Array,  # (b, l, h) log-decay = dt * A  (A < 0)
+    bmat: jax.Array,  # (b, l, h, n) per-head B
+    cmat: jax.Array,  # (b, l, h, n) per-head C
+    *,
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (b, h, p, n)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    b, l, h, p = xdt.shape
+    n = bmat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    def tochunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc = tochunks(xdt)  # (b,c,q,h,p)
+    ac = tochunks(a).transpose(0, 3, 1, 2)  # (b,h,c,q)
+    bc = tochunks(bmat)  # (b,c,q,h,n)
+    cc = tochunks(cmat)  # (b,c,q,h,n)
+
+    a_cumsum = jnp.cumsum(ac, axis=-1)  # (b,h,c,q)
+
+    # 1. intra-chunk (quadratic, the "attention-like" term)
+    el = jnp.exp(_segsum(ac))  # (b,h,c,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bhcqk", cc, bc)
+    y_diag = jnp.einsum("bhcqk,bckhp->bcqhp", scores * el, xc)
+
+    # 2. chunk states (what each chunk contributes to the running state)
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)  # (b,h,c,q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence (linear scan over chunk states)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), xdt.dtype)
+    a_last = a_cumsum[..., -1]  # (b,h,c)
+    a_pad = jnp.pad(a_last, ((0, 0), (0, 0), (1, 0)))  # (b,h,c+1)
+    decay_chunk = jnp.exp(_segsum(a_pad))  # (b,h,c+1,c+1)
+    all_states = jnp.concatenate([initial_state[:, None], states], axis=1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, all_states)
+    states_in, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(a_cumsum)  # (b,h,c,q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", cc, states_in, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_step(
+    state: jax.Array,  # (b, h, p, n)
+    x: jax.Array,  # (b, h, p) single token (NOT pre-multiplied by dt)
+    dt: jax.Array,  # (b, h)
+    a_log_decay: jax.Array,  # (b, h) = dt * A
+    bvec: jax.Array,  # (b, h, n)
+    cvec: jax.Array,  # (b, h, n)
+) -> tuple[jax.Array, jax.Array]:
+    """O(1) decode update: h' = exp(dt*A) h + dt * x  B^T ;  y = C . h'."""
+    da = jnp.exp(a_log_decay)[..., None, None]  # (b,h,1,1)
+    upd = jnp.einsum("bhp,bhn->bhpn", x * dt[..., None], bvec)
+    new_state = state * da + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cvec)
+    return y, new_state
+
+
+def ssd_naive_ref(
+    xdt: jax.Array,  # (b, l, h, p)
+    a: jax.Array,  # (b, l, h)
+    bmat: jax.Array,  # (b, l, h, n)
+    cmat: jax.Array,  # (b, l, h, n)
+    initial_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Step-by-step recurrence oracle for tests."""
+    b, l, h, p = xdt.shape
+    n = bmat.shape[-1]
+    state = (
+        jnp.zeros((b, h, p, n), xdt.dtype)
+        if initial_state is None
+        else initial_state
+    )
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        da = jnp.exp(a_t)[..., None, None]
+        state = state * da + jnp.einsum("bhp,bhn->bhpn", x_t, b_t)
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y
+
+    xs = (
+        xdt.transpose(1, 0, 2, 3),
+        a.transpose(1, 0, 2),
+        bmat.transpose(1, 0, 2, 3),
+        cmat.transpose(1, 0, 2, 3),
+    )
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: x (b, l, c), w (width, c)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :],  # (width, 1, c) HIO for depthwise
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.state_dim
+    return {
+        "ssm_state": jax.ShapeDtypeStruct((batch, h, s.head_dim, s.state_dim), dtype),
+        "conv_state": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        k: jnp.zeros(v.shape, v.dtype)
+        for k, v in mamba_cache_spec(cfg, batch, dtype).items()
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.state_dim
+    h = s.n_heads(cfg.d_model)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn :]
+    assert dt.shape[-1] == h, (dt.shape, h)
+    return z, xbc, dt
+
+
+def _expand_groups(t: jax.Array, h: int, g: int) -> jax.Array:
+    """(b, l, g*n) -> (b, l, h, n) broadcasting groups across heads."""
+    b, l, _ = t.shape
+    n = t.shape[-1] // g
+    t = t.reshape(b, l, g, n)
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def mamba_apply(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (b, l, d)
+    *,
+    mode: str = "train",
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    s = cfg.ssm
+    qc = cfg.quant
+    b, l, d = x.shape
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    p = s.head_dim
+    g = s.n_groups
+    n = s.state_dim
+
+    zxbcdt = layers.dense(params["in_proj"], x, qc)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,l,h)
+    a_neg = -jnp.exp(params["A_log"])  # (h,) negative decay rates
+
+    new_cache = cache
+    if mode == "decode" and cache is not None:
+        # conv via rolling window
+        window = jnp.concatenate([cache["conv_state"], xbc.astype(jnp.float32)], axis=1)
+        conv_out = (
+            jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+        )[:, None]
+        new_conv_state = window[:, 1:].astype(cache["conv_state"].dtype)
+        xbc_c = jax.nn.silu(conv_out)
+        x_in = xbc_c[..., :di].reshape(b, 1, h, p)[:, 0]
+        bmat = _expand_groups(xbc_c[..., di : di + g * n], h, g)[:, 0]
+        cmat = _expand_groups(xbc_c[..., di + g * n :], h, g)[:, 0]
+        dt0 = dt[:, 0]
+        y, new_state = ssd_step(
+            cache["ssm_state"].astype(jnp.float32),
+            x_in.astype(jnp.float32),
+            dt0,
+            dt0 * a_neg,
+            bmat.astype(jnp.float32),
+            cmat.astype(jnp.float32),
+        )
+        y = y + x_in.astype(jnp.float32) * params["D"][:, None]
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        new_cache = {
+            "ssm_state": new_state.astype(cache["ssm_state"].dtype),
+            "conv_state": new_conv_state,
+        }
+    else:
+        xbc_c = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+        x_in = xbc_c[..., :di].reshape(b, l, h, p)
+        bmat = _expand_groups(xbc_c[..., di : di + g * n], h, g)
+        cmat = _expand_groups(xbc_c[..., di + g * n :], h, g)
+        xdt = x_in.astype(jnp.float32) * dt[..., None]
+        a = dt * a_neg  # (b,l,h)
+        y, final_state = ssd_chunked(
+            xdt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            chunk=min(s.chunk_size, l),
+        )
+        y = y + x_in.astype(jnp.float32) * params["D"].reshape(1, 1, h, 1)
+        y = y.reshape(b, l, di).astype(x.dtype)
+        if cache is not None:  # prefill: hand the final state to decode
+            width = s.conv_width
+            tail = xbc[:, -(width - 1) :].astype(jnp.float32)
+            if l < width - 1:
+                tail = jnp.pad(tail, ((0, 0), (width - 1 - l, 0), (0, 0)))
+            new_cache = {
+                "ssm_state": final_state.astype(cache["ssm_state"].dtype),
+                "conv_state": tail.astype(cache["conv_state"].dtype),
+            }
+
+    # gated output: RMSNorm(y * silu(z)) -> out_proj
+    y = y * jax.nn.silu(z)
+    y = layers.norm(params["gate_norm"], y, "rmsnorm", cfg.norm_eps)
+    return layers.dense(params["out_proj"], y, qc), new_cache

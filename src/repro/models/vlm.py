@@ -1,0 +1,22 @@
+"""VLM backbone (internvl2-1b) — thin wrapper over models.lm.
+
+The vision frontend is a stub per the assignment: ``input_specs`` provides
+precomputed InternViT patch embeddings (``frontend_dim=1024``); the
+``frontend_proj`` MLP projector maps them into the LM embedding space, where
+they are prepended to the text tokens.  Decode operates on text tokens with
+the image prefix resident in the KV cache from prefill.
+"""
+
+from __future__ import annotations
+
+from repro.models.lm import (  # noqa: F401
+    abstract_params,
+    count_params,
+    decode_step,
+    forward,
+    init_params,
+    input_specs,
+    loss_fn,
+    param_spec,
+    prefill,
+)

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamW, global_norm  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    cosine_schedule,
+    linear_schedule,
+    make_schedule,
+    wsd_schedule,
+)

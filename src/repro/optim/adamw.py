@@ -1,0 +1,81 @@
+"""AdamW in pure JAX (no optax dependency), pytree-native.
+
+Optimizer state mirrors the parameter tree (fp32 moments) and therefore
+shards with the same rules as FSDP parameters (distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float | None = 1.0
+
+    def init(self, params: PyTree) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(
+        self, grads: PyTree, state: dict, params: PyTree
+    ) -> tuple[PyTree, dict, dict]:
+        """Returns (new_params, new_state, metrics)."""
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        if self.grad_clip is not None:
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads,
+        )
+        lr = self.schedule(step)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = {"step": step, "mu": mu, "nu": nu}
+        return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+    def abstract_state(self, abstract_params: PyTree) -> dict:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return {
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "mu": jax.tree.map(f32, abstract_params),
+            "nu": jax.tree.map(f32, abstract_params),
+        }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )

@@ -1,0 +1,62 @@
+"""LR schedules: linear warmup + {cosine, WSD, linear} decay.
+
+WSD (Warmup-Stable-Decay) is the MiniCPM schedule (arXiv:2404.06395):
+constant LR through the stable phase, then a short exponential-style decay
+over the final ``decay_fraction`` of training.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup(step, warmup_steps):
+    return jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup_steps, 1))
+
+
+def cosine_schedule(step, *, base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    w = warmup(step, warmup_steps)
+    t = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * w * cos
+
+
+def wsd_schedule(
+    step, *, base_lr, warmup_steps, total_steps, decay_fraction=0.1, min_ratio=0.01
+):
+    """Warmup -> Stable (constant) -> Decay (MiniCPM; exponential-like)."""
+    w = warmup(step, warmup_steps)
+    decay_steps = jnp.maximum(total_steps * decay_fraction, 1)
+    decay_start = total_steps - decay_steps
+    in_decay = step >= decay_start
+    t = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    decay = jnp.power(min_ratio, t)  # min_ratio**t: 1 -> min_ratio
+    return base_lr * w * jnp.where(in_decay, decay, 1.0)
+
+
+def linear_schedule(step, *, base_lr, warmup_steps, total_steps, min_ratio=0.0):
+    w = warmup(step, warmup_steps)
+    t = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    return base_lr * w * (1 - (1 - min_ratio) * t)
+
+
+def make_schedule(train_cfg):
+    kind = train_cfg.schedule
+    kw = dict(
+        base_lr=train_cfg.learning_rate,
+        warmup_steps=train_cfg.warmup_steps,
+        total_steps=train_cfg.total_steps,
+    )
+    if kind == "cosine":
+        return lambda s: cosine_schedule(s, **kw)
+    if kind == "wsd":
+        return lambda s: wsd_schedule(
+            s, decay_fraction=train_cfg.decay_fraction, **kw
+        )
+    if kind == "linear":
+        return lambda s: linear_schedule(s, **kw)
+    raise ValueError(f"unknown schedule {kind}")

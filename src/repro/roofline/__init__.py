@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (  # noqa: F401
+    CellAnalysis,
+    analyze_cell,
+    attention_flops,
+    model_flops,
+)
+from repro.roofline.hlo_parser import total_cost, type_bytes  # noqa: F401

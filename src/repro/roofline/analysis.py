@@ -1,0 +1,213 @@
+"""§Roofline: three-term analysis of a compiled dry-run cell.
+
+    compute_s    = HLO_FLOPs_per_device   / peak_FLOP/s
+    memory_s     = HLO_bytes_per_device   / HBM_bw
+    collective_s = coll_bytes_per_device  / (ICI links x link_bw)
+
+HLO_FLOPs/bytes come from the trip-count-aware HLO parser
+(``hlo_parser.total_cost``) because XLA's ``cost_analysis`` visits scan
+bodies once (verified; see hlo_parser docstring).  The compiled module is
+the per-device SPMD program, so costs are already per-device.
+
+Two variants are reported per cell:
+
+* **baseline** — the module exactly as XLA lowered it (attention volume
+  materialized in HBM, as any non-fused deployment would run it);
+* **fused-attention** — the ``attnvol``-tagged volume re-priced as the
+  fused streaming Pallas kernel (``kernels/flash_attention``): causal/
+  window-aware FLOPs, and HBM traffic = q/k/v/out (+ cache reads) only.
+  This is the paper's stage-2+3 fusion applied at datacenter scale and is
+  the first entry of every §Perf hillclimb.
+
+MODEL_FLOPS uses the 6ND rule (6 x params x tokens for training; 2ND for
+a forward-only pass) with N = active params for MoE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.latency_model import TPU_V5E, HardwareSpec, RooflineTerms, roofline
+from repro.roofline.hlo_parser import ModuleCost, total_cost
+
+
+# ---------------------------------------------------------------------------
+# analytic attention-kernel cost model (the fused Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def _attn_geometry(cfg: ModelConfig):
+    """(layers_with_attention, n_heads, qk_head_dim, v_head_dim, kv_heads)."""
+    if cfg.attn_kind == "none":
+        return 0, 0, 0, 0, 0
+    if cfg.family == "hybrid":
+        n_apps = math.ceil(cfg.n_layers / cfg.hybrid.attn_every)
+        width = 2 * cfg.d_model if cfg.hybrid.concat_residual else cfg.d_model
+        hd = width // cfg.n_heads
+        return n_apps, cfg.n_heads, hd, hd, cfg.n_kv_heads
+    if cfg.attn_kind == "mla" and cfg.mla is not None:
+        qk = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        return cfg.n_layers, cfg.n_heads, qk, cfg.mla.v_head_dim, cfg.n_heads
+    hd = cfg.resolved_head_dim
+    return cfg.n_layers, cfg.n_heads, hd, hd, cfg.n_kv_heads
+
+
+def attention_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global fused-kernel attention FLOPs: 2*(QK^T) + 2*(PV) per position
+    pair, causal-halved, window-clipped; x3 for training (fwd+bwd)."""
+    layers, h, qk_hd, v_hd, _ = _attn_geometry(cfg)
+    if layers == 0:
+        return 0.0
+    b, l = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        ctx = min(l, cfg.sliding_window or l)
+        per_layer = 2.0 * b * ctx * h * (qk_hd + v_hd)
+        return per_layer * layers
+    if cfg.sliding_window is not None and cfg.sliding_window < l:
+        pairs = l * cfg.sliding_window  # each query sees <= window keys
+    else:
+        pairs = l * l / 2.0  # causal
+        if cfg.is_encoder:
+            pairs = l * l
+    per_layer = 2.0 * b * pairs * h * (qk_hd + v_hd)
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return per_layer * mult * layers
+
+
+def attention_io_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global HBM traffic of the fused kernel: q/k/v/out streamed once
+    (train: ~3x for fwd+bwd), plus cache reads for decode."""
+    layers, h, qk_hd, v_hd, hkv = _attn_geometry(cfg)
+    if layers == 0:
+        return 0.0
+    b, l = shape.global_batch, shape.seq_len
+    bpe = 2.0  # bf16 activations
+    if shape.kind == "decode":
+        ctx = min(l, cfg.sliding_window or l)
+        if cfg.attn_kind == "mla" and cfg.mla is not None:
+            cache = b * ctx * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim)
+        else:
+            cache = 2.0 * b * hkv * ctx * qk_hd
+        per_layer = cache * bpe + b * h * (qk_hd + v_hd) * bpe
+        return per_layer * layers
+    qo = 2.0 * b * l * h * max(qk_hd, v_hd)
+    kv = 2.0 * b * l * hkv * qk_hd
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return (qo + kv) * bpe * mult * layers
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6ND (train) / 2ND (prefill) / 2ND per token (decode)."""
+    n_active = cfg.active_param_count_estimate()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# cell analysis
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellAnalysis:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # baseline (module as lowered)
+    flops: float
+    hbm_bytes: float
+    coll_bytes: dict[str, float]
+    terms: RooflineTerms
+    # fused-attention variant (attnvol re-priced as the Pallas kernel)
+    flops_fused: float
+    hbm_bytes_fused: float
+    terms_fused: RooflineTerms
+    attn_flops_hlo: float
+    attn_hbm_hlo: float
+    model_flops_global: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs x devices), baseline
+    useful_ratio_fused: float
+    memory_stats: dict[str, int]
+    trip_counts: list[int]
+
+    @property
+    def dominant(self) -> str:
+        return self.terms.dominant
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        for key, t in (("terms", self.terms), ("terms_fused", self.terms_fused)):
+            d[key] = {
+                "compute_s": t.compute_s,
+                "memory_s": t.memory_s,
+                "collective_s": t.collective_s,
+                "dominant": t.dominant,
+            }
+        return d
+
+
+def analyze_cell(
+    *,
+    arch: str,
+    shape_cfg: ShapeConfig,
+    cfg: ModelConfig,
+    mesh_name: str,
+    n_devices: int,
+    compiled,
+    hw: HardwareSpec = TPU_V5E,
+) -> CellAnalysis:
+    text = compiled.as_text()
+    mc: ModuleCost = total_cost(text, default_trip_count=cfg.n_layers)
+    coll_total = sum(mc.coll_bytes.values())
+    terms = roofline(mc.flops, mc.hbm_bytes, coll_total, hw)
+
+    # fused-attention re-pricing (per-device shares of global kernel cost)
+    attn_f_model = attention_flops(cfg, shape_cfg) / max(n_devices, 1)
+    attn_io_model = attention_io_bytes(cfg, shape_cfg) / max(n_devices, 1)
+    flops_fused = mc.flops - mc.attn_flops + attn_f_model
+    hbm_fused = max(mc.hbm_bytes - mc.attn_hbm_bytes, 0.0) + attn_io_model
+    terms_fused = roofline(flops_fused, hbm_fused, coll_total, hw)
+
+    try:
+        ms = compiled.memory_analysis()
+        memory_stats = {
+            "argument_bytes": int(ms.argument_size_in_bytes),
+            "output_bytes": int(ms.output_size_in_bytes),
+            "temp_bytes": int(ms.temp_size_in_bytes),
+            "alias_bytes": int(ms.alias_size_in_bytes),
+        }
+    except Exception:  # pragma: no cover - backend-dependent
+        memory_stats = {}
+
+    mf = model_flops(cfg, shape_cfg) + attention_flops(cfg, shape_cfg)
+    total_hlo = mc.flops * n_devices
+    total_fused = flops_fused * n_devices
+    return CellAnalysis(
+        arch=arch,
+        shape=shape_cfg.name,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        flops=mc.flops,
+        hbm_bytes=mc.hbm_bytes,
+        coll_bytes=dict(mc.coll_bytes),
+        terms=terms,
+        flops_fused=flops_fused,
+        hbm_bytes_fused=hbm_fused,
+        terms_fused=terms_fused,
+        attn_flops_hlo=mc.attn_flops,
+        attn_hbm_hlo=mc.attn_hbm_bytes,
+        model_flops_global=mf,
+        useful_ratio=(mf / total_hlo) if total_hlo else 0.0,
+        useful_ratio_fused=(mf / total_fused) if total_fused else 0.0,
+        memory_stats=memory_stats,
+        trip_counts=mc.trip_counts,
+    )

@@ -1,0 +1,396 @@
+"""HLO-text cost model: per-computation FLOPs / HBM bytes / collective
+bytes with while-loop trip-count multiplication.
+
+Why this exists: ``compiled.cost_analysis()`` visits each ``while`` body
+ONCE — for scan-over-layers models it under-counts FLOPs and bytes by a
+factor of n_layers (verified empirically in this repo; see DESIGN.md).
+This parser walks the optimized HLO, prices dots/convs per computation,
+and multiplies while-body costs by the trip count recovered from the loop
+condition's comparison constant (falling back to a caller default).
+
+This is the "profile" of the dry-run methodology: no wall clock exists on
+CPU, so the lowered module IS the measurement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops whose operands+result approximate HBM traffic (post-fusion HLO)
+_MEM_OPS_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list[str]
+    attrs: str
+    raw_operands: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: dict[str, Instr] = dataclasses.field(default_factory=dict)
+    order: list[str] = dataclasses.field(default_factory=list)
+
+
+_COMP_START = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)(?:\.clone)?\s*\(.*\)\s*->\s*.*\{\s*$"
+)
+# `  %name = TYPE op-name(operands), attrs`  (TYPE may be a tuple)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*?)\)(.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry: str | None = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line.rstrip().endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = _COMP_START.match(line.strip())
+            if m:
+                name = m.group(2)
+                cur = Computation(name)
+                comps[name] = cur
+                if m.group(1):
+                    entry = name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, operand_str, attrs = m.groups()
+        operands = _OPERAND_RE.findall(operand_str)
+        instr = Instr(name, rtype, op, operands, attrs, operand_str)
+        cur.instrs[name] = instr
+        cur.order.append(name)
+    return comps, entry
+
+
+def _dot_flops(comp: Computation, instr: Instr) -> float:
+    result_elems = 1
+    for d in _first_shape_dims(instr.result_type):
+        result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs = comp.instrs.get(instr.operands[0]) if instr.operands else None
+    csize = 1
+    if lhs is not None:
+        dims = _first_shape_dims(lhs.result_type)
+        for c in cdims:
+            if c < len(dims):
+                csize *= dims[c]
+    return 2.0 * result_elems * csize
+
+
+def _conv_flops(comp: Computation, instr: Instr) -> float:
+    result_elems = 1
+    rdims = _first_shape_dims(instr.result_type)
+    for d in rdims:
+        result_elems *= d
+    kernel = comp.instrs.get(instr.operands[1]) if len(instr.operands) > 1 else None
+    if kernel is None:
+        return 2.0 * result_elems
+    kdims = _first_shape_dims(kernel.result_type)
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    # flops = 2 * result * (kernel elems / out_channels); out_channels is
+    # the last kernel dim under the default (.., I, O) kernel layout
+    out_ch = kdims[-1] if kdims else 1
+    return 2.0 * result_elems * (kelems / max(out_ch, 1))
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # attention-volume subset (instructions tagged with the ``attnvol``
+    # named_scope in models/attention.py) — priced separately so the
+    # analysis can swap the XLA-fallback attention for the fused Pallas
+    # kernel's cost model (§Perf fused-attention step)
+    attn_flops: float = 0.0
+    attn_hbm_bytes: float = 0.0
+    coll_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    # (instr, body_comp, cond_comp) for while; branch list for conditional
+    whiles: list[tuple[str, str, str]] = dataclasses.field(default_factory=list)
+    conditionals: list[list[str]] = dataclasses.field(default_factory=list)
+    fusions: list[str] = dataclasses.field(default_factory=list)
+
+
+def _attr_computations(attrs: str, key: str) -> list[str]:
+    m = re.search(key + r"=%([\w\.\-]+)", attrs)
+    return [m.group(1)] if m else []
+
+
+_SLICE_OPS = {"dynamic-slice", "dynamic-update-slice", "gather", "slice"}
+
+
+def _operand_read_bytes(
+    comps: dict[str, Computation], comp: Computation, ins: Instr
+) -> float:
+    """Bytes read for one instruction's operands, slice-aware.
+
+    A fusion whose operand is only dynamic-sliced inside reads the slice,
+    not the whole buffer (loop-carried stacked activations would otherwise
+    be charged n_layers times over).  Same for top-level slice ops.
+    """
+    if ins.op in _SLICE_OPS:
+        # read = result (ds/gather/slice); dus: read + write the update
+        if ins.op == "dynamic-update-slice" and len(ins.operands) > 1:
+            upd = comp.instrs.get(ins.operands[1])
+            return 2.0 * type_bytes(upd.result_type) if upd else 0.0
+        return type_bytes(ins.result_type)
+
+    called = None
+    if ins.op == "fusion":
+        m = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+        called = comps.get(m.group(1)) if m else None
+
+    total = 0.0
+    for idx, o in enumerate(ins.operands):
+        src = comp.instrs.get(o)
+        if src is None or src.op == "tuple":
+            continue
+        full = type_bytes(src.result_type)
+        if called is not None:
+            sliced = _fusion_param_read(called, idx)
+            if sliced is not None:
+                total += min(sliced, full)
+                continue
+        total += full
+    return total
+
+
+def _fusion_param_read(called: Computation, param_idx: int) -> float | None:
+    """If parameter ``param_idx`` of a fused computation is consumed only
+    by slice ops, return the sliced read size; else None (full read)."""
+    pname = None
+    for iname in called.order:
+        ins = called.instrs[iname]
+        if ins.op == "parameter" and ins.raw_operands.strip() == str(param_idx):
+            pname = iname
+            break
+    if pname is None:
+        return None
+    uses = [
+        called.instrs[i]
+        for i in called.order
+        if pname in called.instrs[i].operands
+    ]
+    if not uses:
+        return 0.0
+    read = 0.0
+    for u in uses:
+        if u.op not in _SLICE_OPS:
+            return None
+        if u.op == "dynamic-update-slice" and len(u.operands) > 1:
+            upd = called.instrs.get(u.operands[1])
+            read += type_bytes(upd.result_type) if upd else 0.0
+        else:
+            read += type_bytes(u.result_type)
+    return read
+
+
+def direct_costs(comps: dict[str, Computation]) -> dict[str, CompCost]:
+    out: dict[str, CompCost] = {}
+    for cname, comp in comps.items():
+        cost = CompCost()
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            op = ins.op
+            tagged_attn = "attnvol" in ins.attrs
+            if op == "dot":
+                f = _dot_flops(comp, ins)
+                cost.flops += f
+                if tagged_attn:
+                    cost.attn_flops += f
+            elif op == "convolution":
+                cost.flops += _conv_flops(comp, ins)
+            elif op in COLLECTIVE_OPS:
+                cost.coll_bytes[op] += type_bytes(ins.result_type)
+            elif op == "while":
+                body = _attr_computations(ins.attrs, "body")
+                cond = _attr_computations(ins.attrs, "condition")
+                if body and cond:
+                    cost.whiles.append((iname, body[0], cond[0]))
+            elif op == "conditional":
+                branches = re.search(
+                    r"branch_computations=\{([^}]*)\}", ins.attrs
+                )
+                names = []
+                if branches:
+                    names = _OPERAND_RE.findall(branches.group(1))
+                else:
+                    names = _attr_computations(
+                        ins.attrs, "true_computation"
+                    ) + _attr_computations(ins.attrs, "false_computation")
+                if names:
+                    cost.conditionals.append(names)
+            elif op == "fusion":
+                called = _attr_computations(ins.attrs, "calls")
+                if called:
+                    cost.fusions.append(called[0])
+            if op not in _MEM_OPS_SKIP and op not in ("while", "conditional"):
+                nbytes = type_bytes(ins.result_type)
+                if op == "dynamic-update-slice":
+                    # in-place DUS writes only the update region
+                    nbytes = 0.0
+                nbytes += _operand_read_bytes(comps, comp, ins)
+                cost.hbm_bytes += nbytes
+                if tagged_attn:
+                    cost.attn_hbm_bytes += nbytes
+        out[cname] = cost
+    return out
+
+
+def _while_trip_count(
+    comps: dict[str, Computation], cond_name: str, default: int
+) -> int:
+    """Recover the trip count from the loop condition's comparison
+    constant (scan loops compare an induction var against n).
+
+    The value is the *operand string* of the constant's defining line
+    (``%n = s32[] constant(6)`` parses op='constant', raw_operands='6').
+    """
+    cond = comps.get(cond_name)
+    if cond is None:
+        return default
+    # The comparison may be a bare `compare` or wrapped in a kLoop fusion
+    # (`ROOT %wrapped_compare = pred[] fusion(%gte, %const)` after SPMD),
+    # so collect integer constants referenced by ANY instruction of this
+    # (tiny) condition computation.
+    consts = []
+    for iname in cond.order:
+        ins = cond.instrs[iname]
+        if ins.op in ("compare", "fusion"):
+            for o in ins.operands:
+                src = cond.instrs.get(o)
+                if src is not None and src.op == "constant":
+                    m = re.fullmatch(r"\s*(-?\d+)\s*", src.raw_operands)
+                    if m:
+                        consts.append(int(m.group(1)))
+    consts = [c for c in consts if c > 0]
+    if consts:
+        # a scan condition has exactly one compare; with several constants
+        # the smallest positive one is the safe (under-)estimate
+        return min(consts)
+    return default
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: dict[str, float]
+    trip_counts: list[int]
+    attn_flops: float = 0.0
+    attn_hbm_bytes: float = 0.0
+
+
+def total_cost(
+    text: str, *, default_trip_count: int = 1
+) -> ModuleCost:
+    """Price the whole module, multiplying while bodies by trip counts and
+    charging conditionals at their most expensive branch."""
+    comps, entry = parse_module(text)
+    direct = direct_costs(comps)
+    memo: dict[str, tuple] = {}
+    trips: list[int] = []
+    ZERO = (0.0, 0.0, {}, 0.0, 0.0)
+
+    def total(cname: str, depth=0) -> tuple:
+        if cname in memo:
+            return memo[cname]
+        if depth > 64 or cname not in direct:
+            return ZERO
+        c = direct[cname]
+        flops, hbm = c.flops, c.hbm_bytes
+        af, ah = c.attn_flops, c.attn_hbm_bytes
+        coll = defaultdict(float, c.coll_bytes)
+        for fusion_comp in c.fusions:
+            f, _, _, faf, _ = total(fusion_comp, depth + 1)
+            flops += f  # fused internals: flops only (no HBM round trip)
+            af += faf
+        for _, body, cond in c.whiles:
+            trip = _while_trip_count(comps, cond, default_trip_count)
+            trips.append(trip)
+            for sub in (body, cond):
+                sf, sh, sc, saf, sah = total(sub, depth + 1)
+                flops += trip * sf
+                hbm += trip * sh
+                af += trip * saf
+                ah += trip * sah
+                for k, v in sc.items():
+                    coll[k] += trip * v
+        for branches in c.conditionals:
+            best = max(
+                (total(b, depth + 1) for b in branches),
+                key=lambda t: t[0] + t[1],
+                default=ZERO,
+            )
+            flops += best[0]
+            hbm += best[1]
+            af += best[3]
+            ah += best[4]
+            for k, v in best[2].items():
+                coll[k] += v
+        memo[cname] = (flops, hbm, dict(coll), af, ah)
+        return memo[cname]
+
+    if entry is None:
+        return ModuleCost(0.0, 0.0, {}, [])
+    f, h, c, af, ah = total(entry)
+    return ModuleCost(f, h, dict(c), trips, af, ah)

@@ -1,0 +1,2 @@
+from repro.serve.engine import Request, ServingEngine  # noqa: F401
+from repro.serve.sampling import sample  # noqa: F401

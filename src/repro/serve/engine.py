@@ -1,0 +1,227 @@
+"""Serving engine: continuous batching over slot-structured KV caches.
+
+The paper's subject is low-latency *inference*; this engine is its
+datacenter-scale counterpart: a fixed pool of ``max_batch`` cache slots,
+prompts prefilled into free slots while resident sequences keep decoding
+(continuous batching / "in-flight batching"), greedy or temperature
+sampling, optional int8 weights (PTQ), int8 KV cache, and the paper's LUT
+softmax in the attention score path.
+
+All device work happens in two jitted programs: ``_prefill_one`` (batch-1
+prompt -> slot-cache insert) and ``_decode_all`` (one token for every
+resident slot).  Host-side state is just the slot table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.core import fixed_point as fxp
+from repro.core import quant
+from repro.models import lm
+from repro.serve.sampling import sample
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.eos_id is not None and self.generated and self.generated[-1] == self.eos_id:
+            return True
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class _Slot:
+    active: bool = False
+    request: Request | None = None
+    pos: int = 0  # next position to write (== current length)
+    last_token: int = 0
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: PyTree,
+        serve_cfg: ServeConfig | None = None,
+        kernel: dict | None = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg or ServeConfig()
+        self.kernel = kernel or {}
+        if self.serve_cfg.lut_softmax:
+            self.kernel.setdefault("softmax_mode", "lut")
+        self.key = jax.random.PRNGKey(seed)
+
+        if self.serve_cfg.int8_weights:
+            # PTQ int8 numerics on weights (quantize-dequantize; the true
+            # int8 GEMM path is kernels/qmatmul on TPU)
+            params = self._int8_params(params)
+        self.params = params
+
+        sc = self.serve_cfg
+        self.quant_cache = bool(
+            sc.int8_kv_cache
+            and cfg.attn_kind in ("gqa", "mla")
+            and cfg.family not in ("ssm", "hybrid")
+        )
+        self.caches = lm.init_caches(
+            cfg, sc.max_batch, sc.max_seq_len,
+            dtype=jnp.float32, quantized=self.quant_cache,
+        )
+        self.slots = [_Slot() for _ in range(sc.max_batch)]
+        self._queue: list[Request] = []
+        self._finished: dict[int, Request] = {}
+        self._uid = 0
+
+        self._decode_fn = jax.jit(self._decode_all)
+        self._prefill_fn = {}  # jit cache per prompt length
+
+    # ------------------------------------------------------------- utils --
+    @staticmethod
+    def _int8_params(params: PyTree) -> PyTree:
+        def _q(leaf):
+            if (
+                isinstance(leaf, jax.Array)
+                and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and leaf.ndim >= 2
+            ):
+                return quant.quantize_int8(leaf, axis=leaf.ndim - 1).dequantize(
+                    leaf.dtype
+                )
+            return leaf
+
+        return jax.tree.map(_q, params)
+
+    # ----------------------------------------------------------- requests --
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               eos_id: int | None = None) -> int:
+        self._uid += 1
+        self._queue.append(
+            Request(self._uid, list(prompt), max_new_tokens, eos_id)
+        )
+        return self._uid
+
+    def result(self, uid: int) -> Request | None:
+        return self._finished.get(uid)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s.active for s in self.slots)
+
+    # ------------------------------------------------------------ device --
+    def _prefill_one(self, params, tokens, caches, slot_idx):
+        """Prefill a batch-1 prompt and insert its cache into slot_idx."""
+        cfg = self.cfg
+        small = lm.init_caches(
+            cfg, 1, self.serve_cfg.max_seq_len,
+            dtype=jnp.float32, quantized=self.quant_cache,
+        )
+        logits, filled, _ = lm.forward(
+            params, cfg, {"tokens": tokens}, mode="prefill",
+            caches=small, kernel=self.kernel,
+        )
+
+        def insert(big, one):
+            # batch axis is axis 1 on every stacked cache leaf
+            return jax.lax.dynamic_update_index_in_dim(
+                big, one[:, 0].astype(big.dtype), slot_idx, 1
+            )
+
+        new_caches = jax.tree.map(insert, caches, filled)
+        return logits[:, -1], new_caches
+
+    def _decode_all(self, params, tokens, positions, caches, key):
+        logits, new_caches, _ = lm.forward(
+            params, self.cfg, {"tokens": tokens}, mode="decode",
+            caches=caches, positions=positions, kernel=self.kernel,
+        )
+        nxt = sample(
+            logits[:, -1], key, temperature=self.serve_cfg.temperature
+        )
+        return nxt, new_caches
+
+    # -------------------------------------------------------------- step --
+    def step(self) -> dict:
+        """One engine iteration: admit waiting prompts, then decode."""
+        stats = {"prefilled": 0, "decoded": 0}
+        # 1. admission: fill free slots with queued prompts
+        for idx, slot in enumerate(self.slots):
+            if not self._queue:
+                break
+            if slot.active:
+                continue
+            req = self._queue.pop(0)
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            n = len(req.prompt)
+            fn = self._prefill_fn.get(n)
+            if fn is None:
+                fn = jax.jit(self._prefill_one, static_argnames=())
+                self._prefill_fn[n] = fn
+            logits, self.caches = fn(
+                self.params, toks, self.caches, idx
+            )
+            self.key, sub = jax.random.split(self.key)
+            nxt = int(
+                sample(logits, sub, temperature=self.serve_cfg.temperature)[0]
+            )
+            req.generated.append(nxt)
+            slot.active, slot.request = True, req
+            slot.pos = n  # next write position
+            slot.last_token = nxt
+            stats["prefilled"] += 1
+            self._retire(idx)
+
+        # 2. batched decode for all active slots
+        if any(s.active for s in self.slots):
+            tokens = jnp.asarray(
+                [[s.last_token] for s in self.slots], jnp.int32
+            )
+            positions = jnp.asarray(
+                [s.pos if s.active else 0 for s in self.slots], jnp.int32
+            )
+            self.key, sub = jax.random.split(self.key)
+            nxt, self.caches = self._decode_fn(
+                self.params, tokens, positions, self.caches, sub
+            )
+            nxt = np.asarray(nxt)
+            for idx, slot in enumerate(self.slots):
+                if not slot.active:
+                    continue
+                slot.pos += 1
+                slot.last_token = int(nxt[idx])
+                slot.request.generated.append(slot.last_token)
+                stats["decoded"] += 1
+                self._retire(idx)
+        return stats
+
+    def _retire(self, idx: int):
+        slot = self.slots[idx]
+        if slot.active and (
+            slot.request.done or slot.pos + 1 >= self.serve_cfg.max_seq_len
+        ):
+            self._finished[slot.request.uid] = slot.request
+            self.slots[idx] = _Slot()
+
+    def run(self, max_steps: int = 10_000) -> dict[int, Request]:
+        steps = 0
+        while self.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+        return dict(self._finished)

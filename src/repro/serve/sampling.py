@@ -1,0 +1,24 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jax.Array,  # (B, V)
+    key: jax.Array,
+    *,
+    temperature: float = 0.0,
+    top_k: int | None = None,
+) -> jax.Array:
+    """Greedy when temperature == 0, else (top-k) temperature sampling."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    if top_k is not None:
+        vals, _ = jax.lax.top_k(scaled, top_k)
+        cut = vals[..., -1:]
+        scaled = jnp.where(scaled < cut, -1e30, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -1,0 +1,14 @@
+from repro.train.fault_tolerance import (  # noqa: F401
+    FailureInjector,
+    Heartbeat,
+    PreemptionHandler,
+    StepTimer,
+)
+from repro.train.loop import LoopResult, run_training  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    abstract_train_state,
+    make_train_state,
+    make_train_step,
+    train_state_logical_axes,
+    train_step,
+)

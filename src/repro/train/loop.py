@@ -1,0 +1,135 @@
+"""Training loop with checkpoint/restart, preemption handling, straggler
+detection and heartbeat — the fault-tolerant driver for launch/train.py.
+
+Restart-exactness contract: (data step <- state step) and a deterministic
+``batch_fn`` mean a run killed at any point resumes bit-identically from
+the latest checkpoint (tested in tests/test_fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.optim import AdamW, make_schedule
+from repro.train import step as step_lib
+from repro.train.fault_tolerance import (
+    FailureInjector,
+    Heartbeat,
+    PreemptionHandler,
+    StepTimer,
+)
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopResult:
+    final_step: int
+    metrics_history: list[dict]
+    stragglers: list[tuple[int, float, float]]
+    stopped_early: bool
+
+
+def run_training(
+    cfg: ModelConfig,
+    train_cfg: TrainConfig,
+    batch_fn: Callable[[int, int, int], dict],
+    *,
+    workdir: str,
+    mesh=None,
+    rules=None,
+    kernel: dict | None = None,
+    remat: str = "none",
+    preemption: PreemptionHandler | None = None,
+    failure_injector: FailureInjector | None = None,
+    log_every: int = 10,
+) -> LoopResult:
+    os.makedirs(workdir, exist_ok=True)
+    optimizer = AdamW(
+        schedule=make_schedule(train_cfg),
+        b1=train_cfg.b1,
+        b2=train_cfg.b2,
+        eps=train_cfg.eps,
+        weight_decay=train_cfg.weight_decay,
+        grad_clip=train_cfg.grad_clip,
+    )
+    ckpt = Checkpointer(
+        os.path.join(workdir, "checkpoints"), keep=train_cfg.keep_checkpoints
+    )
+    update = step_lib.make_train_step(
+        cfg, optimizer, mesh=mesh, rules=rules, kernel=kernel, remat=remat
+    )
+
+    # ---- restore or init -------------------------------------------------
+    key = jax.random.PRNGKey(train_cfg.seed)
+    state = step_lib.make_train_state(cfg, optimizer, key)
+    start_step = 0
+    if ckpt.latest_step() is not None:
+        shardings = None
+        if mesh is not None and rules is not None:
+            abstract = step_lib.abstract_train_state(cfg, optimizer)
+            axes = step_lib.train_state_logical_axes(cfg)
+            shardings = rules.tree_shardings(abstract, axes)
+        state = ckpt.restore(state, shardings=shardings)
+        start_step = int(np.asarray(state["opt"]["step"]))
+        log.info("restored checkpoint at step %d", start_step)
+
+    preemption = preemption or PreemptionHandler(signals=())
+    timer = StepTimer()
+    hb = Heartbeat(os.path.join(workdir, "heartbeat")).start()
+    history: list[dict] = []
+    stopped_early = False
+
+    try:
+        step = start_step
+        while step < train_cfg.total_steps:
+            if preemption.should_stop:
+                log.warning("preemption requested: checkpointing at %d", step)
+                ckpt.save(step, state, blocking=True)
+                stopped_early = True
+                break
+            batch = {
+                k: jax.numpy.asarray(v)
+                for k, v in batch_fn(step, 0, 1).items()
+            }
+            timer.start()
+            if failure_injector is not None:
+                failure_injector.maybe_fail(step)
+            state, metrics = update(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt, straggler = timer.stop()
+            step += 1
+            if straggler:
+                log.warning("straggler step %d: %.3fs", step, dt)
+            if step % log_every == 0 or step == train_cfg.total_steps:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m["step"] = step
+                m["step_time_s"] = dt
+                history.append(m)
+                log.info(
+                    "step %d loss %.4f lr %.2e (%.3fs)",
+                    step, m.get("loss", float("nan")), m.get("lr", 0), dt,
+                )
+            if step % train_cfg.checkpoint_every == 0:
+                ckpt.save(step, state)
+        else:
+            ckpt.save(train_cfg.total_steps, state, blocking=True)
+        ckpt.wait()
+    finally:
+        hb.stop()
+
+    return LoopResult(
+        final_step=step,
+        metrics_history=history,
+        stragglers=timer.straggler_events,
+        stopped_early=stopped_early,
+    )

@@ -1,0 +1,138 @@
+"""Train-step factory: loss -> grads -> optimizer, pjit-shardable.
+
+``make_train_step`` builds the jitted update; with a mesh + ShardingRules
+the step is fully sharded (params/opt-state per the logical rules,
+batch over the data axes) and buffers are donated.  This same factory is
+what the dry-run lowers for the ``train_4k`` cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models import params as params_lib
+from repro.optim.adamw import AdamW
+
+PyTree = Any
+
+
+def make_train_state(cfg: ModelConfig, optimizer: AdamW, key) -> dict:
+    params = lm.init_params(cfg, key)
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer: AdamW) -> dict:
+    ap = lm.abstract_params(cfg)
+    return {"params": ap, "opt": optimizer.abstract_state(ap)}
+
+
+def train_state_logical_axes(cfg: ModelConfig) -> dict:
+    spec = lm.param_spec(cfg)
+    axes = params_lib.logical_axes(spec)
+    return {
+        "params": axes,
+        "opt": {"step": (), "mu": axes, "nu": axes},
+    }
+
+
+def make_loss_fn(
+    cfg: ModelConfig,
+    *,
+    kernel: dict | None = None,
+    remat: str = "none",
+    loss_impl: Callable = lm.loss_fn,
+):
+    def _loss(params, batch):
+        return loss_impl(params, cfg, batch, kernel=kernel, remat=remat)
+
+    return _loss
+
+
+def train_step(
+    state: dict,
+    batch: dict,
+    *,
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    kernel: dict | None = None,
+    remat: str = "none",
+    grad_accum: int = 1,
+):
+    """One synchronous update. Pure; jit/pjit-able; donate-friendly.
+
+    ``grad_accum > 1`` scans over microbatches (batch axis split), summing
+    gradients before the optimizer — the standard lever for fitting large
+    per-device token counts in HBM (activation live-set / grad_accum).
+    """
+    loss_fn = make_loss_fn(cfg, kernel=kernel, remat=remat)
+    if grad_accum <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+    else:
+        micro = jax.tree.map(
+            lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+            batch,
+        )
+
+        def body(acc, mb):
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], mb
+            )
+            m = {k: m[k] for k in acc["m"]}  # fixed metric subset
+            acc = jax.tree.map(jnp.add, acc, {"g": g, "m": m})
+            return acc, None
+
+        zero = {
+            "g": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            ),
+            "m": {
+                k: jnp.float32(0.0)
+                for k in ("loss", "ce_loss", "accuracy")
+            },
+        }
+        acc, _ = jax.lax.scan(body, zero, micro)
+        grads = jax.tree.map(lambda g: g / grad_accum, acc["g"])
+        metrics = {k: v / grad_accum for k, v in acc["m"].items()}
+    new_params, new_opt, opt_metrics = optimizer.update(
+        grads, state["opt"], state["params"]
+    )
+    metrics = dict(metrics)
+    metrics.update(opt_metrics)
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    *,
+    mesh=None,
+    rules=None,
+    kernel: dict | None = None,
+    remat: str = "none",
+    donate: bool = True,
+):
+    """jit-compiled train step; sharded when (mesh, rules) are given."""
+    fn = functools.partial(
+        train_step, cfg=cfg, optimizer=optimizer, kernel=kernel, remat=remat
+    )
+    if mesh is None or rules is None:
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    abstract = abstract_train_state(cfg, optimizer)
+    axes = train_state_logical_axes(cfg)
+    state_sh = rules.tree_shardings(abstract, axes)
+    batch_sh = rules.batch_sharding(2)
+    return jax.jit(
+        fn,
+        in_shardings=(state_sh, {"tokens": batch_sh}),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )

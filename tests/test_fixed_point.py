@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) for ap_fixed semantics — the paper's
+numeric foundation."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fixed_point as fxp
+
+cfg_strategy = (
+    st.tuples(st.integers(4, 18), st.integers(2, 8))
+    .filter(lambda t: t[1] <= t[0])
+    .map(lambda t: fxp.ap_fixed(t[0], t[1]))
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg_strategy, st.lists(st.floats(-100, 100), min_size=1, max_size=32))
+def test_quantize_is_idempotent(cfg, xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q1 = fxp.quantize(x, cfg)
+    q2 = fxp.quantize(q1, cfg)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg_strategy, st.lists(st.floats(-100, 100), min_size=1, max_size=32))
+def test_quantize_saturates_to_range(cfg, xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q = np.asarray(fxp.quantize(x, cfg))
+    assert (q <= cfg.max_value + 1e-9).all()
+    assert (q >= cfg.min_value - 1e-9).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg_strategy)
+def test_in_range_error_bounded_by_half_step(cfg):
+    rng = np.random.default_rng(cfg.total_bits)
+    x = rng.uniform(cfg.min_value, cfg.max_value, 64).astype(np.float32)
+    q = np.asarray(fxp.quantize(jnp.asarray(x), cfg))
+    bound = fxp.quantization_error_bound(cfg) + 1e-6
+    assert np.max(np.abs(q - x)) <= bound
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg_strategy)
+def test_grid_values_roundtrip_through_ints(cfg):
+    """float carrier <-> integer codes must be lossless on the grid."""
+    lo = int(cfg.min_value / cfg.step)
+    hi = int(cfg.max_value / cfg.step)
+    codes = np.arange(lo, hi + 1, max(1, (hi - lo) // 256), dtype=np.int64)
+    x = jnp.asarray(codes * cfg.step, jnp.float32)
+    back = fxp.from_int(fxp.to_int(x, cfg), cfg)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg_strategy, st.lists(st.floats(-4, 4), min_size=2, max_size=16))
+def test_quantize_is_monotone(cfg, xs):
+    x = np.sort(np.asarray(xs, np.float32))
+    q = np.asarray(fxp.quantize(jnp.asarray(x), cfg))
+    assert (np.diff(q) >= -1e-9).all()
+
+
+def test_ste_gradient_is_identity_in_range():
+    import jax
+
+    cfg = fxp.ap_fixed(12, 6)
+    g = jax.grad(lambda x: jnp.sum(fxp.quantize_ste(x, cfg) * 2.0))(
+        jnp.asarray([0.5, -1.25, 3.0], jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(g), 2.0)
+
+
+def test_ste_gradient_zero_outside_range():
+    import jax
+
+    cfg = fxp.ap_fixed(8, 4)  # range ~ [-8, 7.94]
+    g = jax.grad(lambda x: jnp.sum(fxp.quantize_ste(x, cfg)))(
+        jnp.asarray([100.0, -100.0], jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(g), 0.0)
+
+
+def test_paper_accumulator_width():
+    """Paper Sec. VI-A: accumulator has 10 integer bits incl. sign."""
+    assert fxp.ACCUM_INT_BITS == 10
+    assert fxp.ACCUM_CONFIG.int_bits == 10

@@ -1,0 +1,86 @@
+"""Fused streaming-attention kernel: sweep shapes x masks x softmax modes
+against the jnp oracle; GQA broadcasting; block-size invariance."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, mha
+
+
+def _qkv(b, hq, hkv, lq, lkv, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, hq, lq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, lkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, lkv, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("mode", ["safe", "lut"])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("window", [None, 24])
+def test_kernel_vs_ref(mode, causal, window):
+    q, k, v = _qkv(2, 4, 2, 100, 100, 32, seed=1)
+    out = mha(q, k, v, causal=causal, window=window, mode=mode,
+              use_pallas=True, interpret=True, block_q=32, block_kv=32)
+    ref = mha(q, k, v, causal=causal, window=window, mode=mode,
+              use_pallas=False)
+    # lut mode: the kernel accumulates the denominator blockwise while the
+    # ref sums whole rows — float ordering can flip a nearest-table-entry
+    # at bin boundaries (observed <=4e-5 on ~0.01% of elements)
+    atol = 1e-4 if mode == "lut" else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=atol)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,l,d", [(1, 1, 1, 16, 8), (2, 8, 1, 64, 16), (1, 6, 3, 128, 64)]
+)
+def test_shape_sweep(b, hq, hkv, l, d):
+    q, k, v = _qkv(b, hq, hkv, l, l, d, seed=l + d)
+    out = mha(q, k, v, causal=True, use_pallas=True, interpret=True,
+              block_q=32, block_kv=32)
+    ref = mha(q, k, v, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_block_size_invariance():
+    """Streaming block decomposition must not change the math — the FIFO
+    depth never changes the answer on the FPGA either."""
+    q, k, v = _qkv(1, 2, 2, 96, 96, 32, seed=3)
+    outs = [
+        mha(q, k, v, causal=True, use_pallas=True, interpret=True,
+            block_q=bq, block_kv=bkv)
+        for bq, bkv in [(96, 96), (32, 96), (96, 32), (16, 48)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=2e-5)
+
+
+def test_cross_attention_lengths():
+    q, k, v = _qkv(2, 4, 4, 32, 80, 16, seed=5)
+    out = mha(q, k, v, use_pallas=True, interpret=True, block_q=16, block_kv=16)
+    ref = mha(q, k, v, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_bf16_inputs():
+    q, k, v = _qkv(1, 2, 2, 64, 64, 32, seed=7)
+    qb, kb, vb = (t.astype(jnp.bfloat16) for t in (q, k, v))
+    out = mha(qb, kb, vb, causal=True, use_pallas=True, interpret=True,
+              block_q=32, block_kv=32)
+    ref = mha(q, k, v, causal=True, use_pallas=False)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), atol=0.03
+    )
+
+
+def test_lut_mode_matches_safe_in_bounded_domain():
+    """With scores inside the exp-LUT domain, the paper's no-max-sub
+    softmax must agree closely with the safe variant."""
+    q, k, v = _qkv(1, 2, 2, 48, 48, 16, seed=9)
+    q = q * 0.3  # keep scores well inside [-8, 8]
+    lut_out = mha(q, k, v, causal=True, mode="lut", use_pallas=True,
+                  interpret=True, block_q=16, block_kv=16)
+    safe = mha(q, k, v, causal=True, mode="safe", use_pallas=False)
+    assert float(jnp.max(jnp.abs(lut_out - safe))) < 0.02

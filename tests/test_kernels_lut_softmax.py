@@ -1,0 +1,72 @@
+"""LUT softmax kernel vs oracle; the paper's k-vs-k^2 restructure; LUT
+error bounds vs exact softmax."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut
+from repro.core import softmax as sm
+from repro.kernels.lut_softmax import (
+    lut_softmax,
+    lut_softmax_ref,
+    softmax_exact_ref,
+)
+
+
+def _rand(shape, seed=0, scale=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "shape", [(64, 64), (2, 4, 48, 48), (1, 16), (128, 100), (3, 5, 7)]
+)
+def test_kernel_matches_ref_bit_exact(shape):
+    x = _rand(shape, seed=hash(shape) % 97)
+    out = lut_softmax(x, use_pallas=True, interpret=True)
+    ref = lut_softmax_ref(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_lut_close_to_exact_softmax():
+    x = _rand((64, 64), 1)
+    approx = lut_softmax_ref(x)
+    exact = softmax_exact_ref(x)
+    assert float(jnp.max(jnp.abs(approx - exact))) < 0.02
+
+
+def test_rows_sum_to_one():
+    x = _rand((32, 50), 2)
+    out = lut_softmax(x, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.sum(out, -1)), 1.0, atol=0.02)
+
+
+def test_restructured_matches_legacy_hls4ml():
+    """Paper Sec. IV-B: S_i = e^{z_i} (sum e^{z_j})^{-1} must equal the
+    original S_i = (sum e^{z_j - z_i})^{-1} exactly (in exact arithmetic)."""
+    x = _rand((8, 24), 3, scale=1.0)
+    new = sm.softmax_paper_exact(x)
+    legacy = sm.softmax_legacy_hls4ml(x)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(legacy), rtol=2e-5)
+
+
+def test_op_count_k_vs_k_squared():
+    """The whole point of the restructure: k exponentials, not k^2."""
+    assert sm.op_count(128, "paper") == 128
+    assert sm.op_count(128, "legacy") == 128 * 128
+
+
+def test_saturation_matches_ap_fixed_semantics():
+    """Out-of-domain scores saturate (AP_SAT) instead of overflowing."""
+    x = jnp.asarray([[100.0, 0.0, -100.0]], jnp.float32)
+    out = lut_softmax(x, use_pallas=True, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(out[0, 0]) > float(out[0, 1]) > float(out[0, 2])
+
+
+def test_lut_interpolation_error_bound():
+    err = lut.lut_max_abs_error(lut.EXP_SPEC, np.exp)
+    # nearest-entry error <= step/2 * max|f'| on the domain
+    bound = lut.EXP_SPEC.step / 2 * np.exp(lut.EXP_SPEC.hi) * 1.01
+    assert err <= bound

@@ -1,0 +1,76 @@
+"""Per-kernel validation: int8 GEMM vs pure-jnp oracle, shape/dtype sweep,
+reuse-factor invariance (paper Sec. VI-B: R changes schedule, not math)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant, reuse
+from repro.kernels.qmatmul import qmatmul, qmatmul_pallas, qmatmul_ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 16, 8), (100, 300, 200), (128, 128, 128), (7, 130, 65), (1, 256, 512)],
+)
+def test_qmatmul_matches_ref(m, k, n):
+    x, w = _rand((m, k), 1), _rand((k, n), 2)
+    out = qmatmul(x, w, use_pallas=True, interpret=True)
+    xq = quant.quantize_int8(x, axis=0)
+    wq = quant.quantize_int8(w, axis=1)
+    ref = qmatmul_ref(
+        xq.values, wq.values, xq.scale.reshape(-1, 1), wq.scale.reshape(1, -1)
+    )
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("r", [1, 2, 4, 8])
+def test_reuse_factor_does_not_change_result(r):
+    x, w = _rand((64, 512), 3), _rand((512, 96), 4)
+    base = qmatmul(x, w, reuse_factor=1, interpret=True)
+    out = qmatmul(x, w, reuse_factor=r, interpret=True)
+    np.testing.assert_allclose(out, base, rtol=1e-5, atol=1e-4)
+
+
+def test_reuse_factor_shrinks_vmem_and_grows_interval():
+    """The paper's R trade-off: resources (VMEM) down, interval up."""
+    plans = [
+        reuse.plan_matmul(512, 2048, 512, reuse_factor=r) for r in (1, 2, 4, 8)
+    ]
+    vmem = [p.vmem_bytes for p in plans]
+    intervals = [p.interval for p in plans]
+    assert intervals == sorted(intervals)
+    assert intervals[-1] > intervals[0]
+    assert vmem[-1] < vmem[0]
+
+
+def test_quantization_error_bounded():
+    x, w = _rand((32, 64), 5), _rand((64, 32), 6)
+    out = qmatmul(x, w, interpret=True)
+    exact = x @ w
+    rel = float(
+        jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact)
+    )
+    assert rel < 0.05, rel
+
+
+def test_int8_accumulation_is_int32_exact():
+    """Products of int8 codes must accumulate exactly (no float rounding):
+    compare kernel int32 path against numpy int64."""
+    rng = np.random.default_rng(7)
+    xq = rng.integers(-127, 128, (64, 256), dtype=np.int8)
+    wq = rng.integers(-127, 128, (256, 64), dtype=np.int8)
+    ones_m = jnp.ones((64, 1), jnp.float32)
+    ones_n = jnp.ones((1, 64), jnp.float32)
+    out = qmatmul_pallas(
+        jnp.asarray(xq), jnp.asarray(wq), ones_m, ones_n,
+        block_m=64, block_n=64, block_k=128, interpret=True,
+    )
+    expected = xq.astype(np.int64) @ wq.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(out), expected.astype(np.float32))

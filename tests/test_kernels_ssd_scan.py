@@ -1,0 +1,70 @@
+"""SSD chunked-scan Pallas kernel vs the jnp chunked oracle and the naive
+step-by-step recurrence, across shape/chunk sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd, ssd_scan_naive
+
+
+def _inputs(b=2, l=64, h=3, p=16, n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    xdt = jnp.asarray(rng.normal(size=(b, l, h, p)) * 0.5, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(size=(b, l, h))) * 0.3, jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, l, h, n)) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, l, h, n)) * 0.5, jnp.float32)
+    return xdt, a, bm, cm
+
+
+def _naive(xdt, a, bm, cm):
+    b, l, h, p = xdt.shape
+
+    def fold(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, l, t.shape[-1])
+
+    out = ssd_scan_naive(fold(xdt), fold(a[..., None]), fold(bm), fold(cm))
+    return out.reshape(b, h, l, p).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+def test_kernel_matches_naive(chunk):
+    xdt, a, bm, cm = _inputs(seed=chunk)
+    out = ssd(xdt, a, bm, cm, chunk=chunk, use_pallas=True, interpret=True)
+    ref = _naive(xdt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "b,l,h,p,n", [(1, 32, 1, 8, 8), (2, 128, 2, 32, 16), (1, 64, 4, 64, 64)]
+)
+def test_shape_sweep(b, l, h, p, n):
+    xdt, a, bm, cm = _inputs(b, l, h, p, n, seed=l + p)
+    out = ssd(xdt, a, bm, cm, chunk=32, use_pallas=True, interpret=True)
+    ref = ssd(xdt, a, bm, cm, chunk=32, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_chunk_size_invariance():
+    """Chunking is a schedule, not math — outputs must match across
+    chunk sizes (same invariant as the attention FIFO depth)."""
+    xdt, a, bm, cm = _inputs(seed=9)
+    outs = [
+        ssd(xdt, a, bm, cm, chunk=c, use_pallas=True, interpret=True)
+        for c in (8, 16, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), atol=1e-4
+        )
+
+
+def test_strong_decay_truncates_history():
+    xdt, a, bm, cm = _inputs(seed=11)
+    out1 = ssd(xdt, a * 50.0, bm, cm, chunk=16, use_pallas=True, interpret=True)
+    xdt0 = xdt.at[:, 0].set(0.0)
+    out2 = ssd(xdt0, a * 50.0, bm, cm, chunk=16, use_pallas=True, interpret=True)
+    # with near-total decay, zeroing token 0 must not affect late tokens
+    np.testing.assert_allclose(
+        np.asarray(out1[:, -1]), np.asarray(out2[:, -1]), atol=1e-5
+    )

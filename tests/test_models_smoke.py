@@ -1,0 +1,138 @@
+"""Per-arch smoke tests (assignment requirement): instantiate a REDUCED
+config of each family and run one forward/train step on CPU, asserting
+output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16):
+    if cfg.frontend == "audio":
+        return {
+            "frames": jax.random.normal(KEY, (b, s, cfg.frontend_dim)),
+            "labels": jnp.zeros((b, s), jnp.int32),
+        }, b, s
+    if cfg.frontend == "patch":
+        return {
+            "patches": jax.random.normal(
+                KEY, (b, cfg.n_frontend_tokens, cfg.frontend_dim)
+            ),
+            "tokens": jnp.ones((b, s), jnp.int32),
+        }, b, s + cfg.n_frontend_tokens
+    return {"tokens": jnp.ones((b, s), jnp.int32)}, b, s
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_forward_shapes_and_no_nans(arch):
+    cfg = configs.get_config(arch, reduced=True)
+    params = lm.init_params(cfg, KEY)
+    batch, b, total_s = _batch(cfg)
+    logits, _, _ = lm.forward(params, cfg, batch, mode="train")
+    assert logits.shape == (b, total_s, cfg.padded_vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_one_train_step_no_nans(arch):
+    from repro.optim import AdamW
+    from repro.train import step as step_lib
+
+    cfg = configs.get_config(arch, reduced=True)
+    opt = AdamW(schedule=lambda s: 1e-3)
+    state = step_lib.make_train_state(cfg, opt, KEY)
+    batch, _, _ = _batch(cfg)
+    new_state, metrics = step_lib.train_step(
+        state, batch, cfg=cfg, optimizer=opt
+    )
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x))),
+        jax.tree.map(lambda a, b: a - b, new_state["params"], state["params"]),
+        0.0,
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "granite-8b", "zamba2-1.2b"])
+def test_full_config_param_counts(arch):
+    """Full (non-reduced) configs match their published parameter scale."""
+    cfg = configs.get_config(arch)
+    n = cfg.param_count_estimate()
+    expected = {
+        "minicpm3-4b": 4.0e9,
+        "granite-8b": 8.0e9,
+        "zamba2-1.2b": 1.2e9,
+    }[arch]
+    assert 0.5 * expected < n < 1.8 * expected, (arch, n)
+
+
+def test_dbrx_moe_param_count():
+    cfg = configs.get_config("dbrx-132b")
+    n = cfg.param_count_estimate()
+    assert 1.0e11 < n < 1.7e11, n  # ~132B total
+    na = cfg.active_param_count_estimate()
+    assert 2.0e10 < na < 4.5e10, na  # ~36B active
+
+
+def test_physics_model_param_counts_near_paper():
+    """Paper Table I: engine 3244, btagging 9135, gw 3394 trainable params.
+    Head count/ffn width are unspecified in the paper, so we require the
+    same order of magnitude."""
+    from repro.models import physics
+    from repro.models.params import count_params
+
+    for name, target in [("engine_anomaly", 3244), ("btagging", 9135), ("gw", 3394)]:
+        cfg = configs.get_config(name)
+        n = count_params(physics.param_spec(cfg))
+        # head-count / FFN width are under-specified in the paper — require
+        # the same order of magnitude rather than an exact match
+        assert 0.2 * target < n < 15 * target, (name, n, target)
+
+
+def test_tp_safe_cross_entropy_equivalent():
+    """kernel['tp_loss'] switches the label gather to a one-hot einsum;
+    the loss must be bit-comparable to the take_along_axis form."""
+    import jax.numpy as jnp
+
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+    l1, m1 = lm.loss_fn(params, cfg, batch)
+    l2, m2 = lm.loss_fn(params, cfg, batch, kernel={"tp_loss": True})
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(m1["accuracy"]), float(m2["accuracy"]), rtol=1e-6
+    )
+
+
+def test_mla_absorb_decode_equivalent():
+    """The beyond-paper absorbed MLA decode (§Perf Cell A) must produce
+    the same logits as the paper-faithful materialized form."""
+    import jax.numpy as jnp
+
+    cfg = configs.get_config("minicpm3-4b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    b, s = 2, 10
+    toks = jax.random.randint(KEY, (b, s + 2), 0, cfg.vocab_size)
+    outs = {}
+    for absorb in (False, True):
+        caches = lm.init_caches(cfg, b, s + 2, dtype=jnp.float32)
+        kernel = {"mla_absorb": absorb}
+        last, caches = lm.prefill(
+            params, cfg, {"tokens": toks[:, :s]}, caches, kernel=kernel
+        )
+        pos = jnp.full((b,), s, jnp.int32)
+        last, _ = lm.decode_step(
+            params, cfg, toks[:, s : s + 1], pos, caches, kernel=kernel
+        )
+        outs[absorb] = np.asarray(last)
+    np.testing.assert_allclose(outs[False], outs[True], atol=2e-4)

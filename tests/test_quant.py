@@ -1,0 +1,95 @@
+"""Property tests for the int8 quantization engine (performance path) and
+the PTQ calibrator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fixed_point as fxp
+from repro.core import quant
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.floats(-50, 50), min_size=4, max_size=64).filter(
+        lambda l: len(l) % 2 == 0
+    ),
+    st.sampled_from([None, 0]),
+)
+def test_int8_roundtrip_error_bounded(xs, axis):
+    x = jnp.asarray(np.asarray(xs, np.float32).reshape(-1, 2))
+    q = quant.quantize_int8(x, axis=axis)
+    deq = q.dequantize()
+    # error <= scale/2 per element
+    if axis is None:
+        bound = float(q.scale) / 2 + 1e-6
+        assert float(jnp.max(jnp.abs(deq - x))) <= bound
+    else:
+        scales = np.asarray(q.scale)
+        err = np.abs(np.asarray(deq - x))
+        assert (err <= scales[:, None] / 2 + 1e-6).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-50, 50), min_size=4, max_size=64))
+def test_int8_codes_in_range(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q = quant.quantize_int8(x)
+    codes = np.asarray(q.values)
+    assert codes.dtype == np.int8
+    assert codes.min() >= -128 and codes.max() <= 127
+
+
+def test_fake_quant_preserves_gradient_flow():
+    x = jnp.asarray([[0.5, -1.0], [2.0, 0.1]], jnp.float32)
+    g = jax.grad(lambda t: jnp.sum(quant.fake_quant_int8(t) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_ptq_calibrator_tracks_range():
+    calib = quant.PTQCalibrator(frac_bits=8)
+    calib.observe("layer0", jnp.asarray([-3.0, 5.0]))
+    calib.observe("layer0", jnp.asarray([-7.5, 2.0]))
+    cfgs = calib.configs()
+    c = cfgs["layer0"]
+    # needs ceil(log2(7.5)) + sign = 4 integer bits
+    assert c.int_bits == 4
+    assert c.frac_bits == 8
+
+
+def test_quantize_pytree_fixed_only_touches_floats():
+    params = {
+        "w": jnp.asarray([[0.123456]], jnp.float32),
+        "idx": jnp.asarray([3], jnp.int32),
+    }
+    out = quant.quantize_pytree_fixed(params, fxp.ap_fixed(8, 4))
+    assert out["idx"].dtype == jnp.int32
+    assert float(out["w"][0, 0]) != 0.123456  # snapped to the grid
+    step = fxp.ap_fixed(8, 4).step
+    assert abs(float(out["w"][0, 0]) / step - round(float(out["w"][0, 0]) / step)) < 1e-6
+
+
+def test_int8_pytree_quantizes_matrices_only():
+    params = {
+        "w": jnp.ones((4, 4), jnp.float32),
+        "b": jnp.ones((4,), jnp.float32),
+    }
+    out = quant.quantize_pytree_int8(params)
+    assert isinstance(out["w"], quant.QTensor)
+    assert isinstance(out["b"], jax.Array)  # 1-D left in float
+
+
+def test_sweep_frac_bits_improves_with_bits():
+    """More fractional bits -> better fidelity (paper Figs. 9-11 trend)."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    exact = x @ w
+    errs = []
+    for fb in (1, 3, 5, 8):
+        cfg = fxp.ap_fixed(6 + fb, 6)
+        qw = fxp.quantize(w, cfg)
+        errs.append(float(jnp.max(jnp.abs(x @ qw - exact))))
+    assert errs == sorted(errs, reverse=True) or errs[-1] < errs[0]

@@ -1,0 +1,162 @@
+"""Serving-path tests: prefill/decode equivalence across attention
+families, continuous batching vs reference greedy decode, int8 KV cache,
+rolling-buffer (sliding window) correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ServeConfig
+from repro.models import lm
+from repro.serve import ServingEngine
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["granite-8b", "minicpm3-4b", "starcoder2-7b", "mamba2-130m",
+     "zamba2-1.2b", "internvl2-1b"],
+)
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = configs.get_config(arch, reduced=True)
+    params = lm.init_params(cfg, KEY)
+    b, s, extra = 2, 12, 4
+    toks = jax.random.randint(KEY, (b, s + extra), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend == "patch":
+        patches = jax.random.normal(
+            KEY, (b, cfg.n_frontend_tokens, cfg.frontend_dim)
+        )
+        batch = {"patches": patches, "tokens": toks}
+    full_logits, _, _ = lm.forward(params, cfg, batch, mode="train")
+    off = cfg.n_frontend_tokens if cfg.frontend == "patch" else 0
+    caches = lm.init_caches(cfg, b, off + s + extra, dtype=jnp.float32)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = toks[:, :s]
+    last, caches = lm.prefill(params, cfg, pre_batch, caches)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, off + s - 1]), atol=5e-4
+    )
+    for i in range(extra):
+        pos = jnp.full((b,), off + s + i, jnp.int32)
+        last, caches = lm.decode_step(
+            params, cfg, toks[:, s + i : s + i + 1], pos, caches
+        )
+        np.testing.assert_allclose(
+            np.asarray(last),
+            np.asarray(full_logits[:, off + s + i]),
+            atol=5e-4,
+        )
+
+
+def test_sliding_window_rolling_buffer_long_decode():
+    """Decode far past the window: rolling buffer must agree with a full
+    forward whose attention uses the same window."""
+    cfg = configs.get_config("starcoder2-7b", reduced=True)  # window 8
+    params = lm.init_params(cfg, KEY)
+    b, total = 1, 24
+    toks = jax.random.randint(KEY, (b, total), 0, cfg.vocab_size)
+    full_logits, _, _ = lm.forward(params, cfg, {"tokens": toks}, mode="train")
+    s = 6
+    caches = lm.init_caches(cfg, b, total, dtype=jnp.float32)
+    last, caches = lm.prefill(params, cfg, {"tokens": toks[:, :s]}, caches)
+    for i in range(total - s):
+        pos = jnp.full((b,), s + i, jnp.int32)
+        last, caches = lm.decode_step(
+            params, cfg, toks[:, s + i : s + i + 1], pos, caches
+        )
+        np.testing.assert_allclose(
+            np.asarray(last), np.asarray(full_logits[:, s + i]), atol=1e-3
+        )
+
+
+def _greedy_ref(cfg, params, prompt, n_new, max_len=64):
+    toks = list(prompt)
+    caches = lm.init_caches(cfg, 1, max_len, dtype=jnp.float32)
+    last, caches = lm.prefill(
+        params, cfg, {"tokens": jnp.asarray([toks], jnp.int32)}, caches
+    )
+    out, pos = [], len(toks)
+    nxt = int(jnp.argmax(last[0]))
+    out.append(nxt)
+    for _ in range(n_new - 1):
+        last, caches = lm.decode_step(
+            params, cfg, jnp.asarray([[nxt]], jnp.int32),
+            jnp.asarray([pos], jnp.int32), caches,
+        )
+        nxt = int(jnp.argmax(last[0]))
+        out.append(nxt)
+        pos += 1
+    return out
+
+
+def test_continuous_batching_matches_reference():
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    prompts = [[5, 9, 3, 7], [11, 2, 6], [1, 2, 3, 4, 5, 6]]
+    refs = [_greedy_ref(cfg, params, p, 6) for p in prompts]
+    eng = ServingEngine(cfg, params, ServeConfig(max_batch=2, max_seq_len=64))
+    uids = [eng.submit(p, 6) for p in prompts]
+    res = eng.run()
+    for uid, ref in zip(uids, refs):
+        assert res[uid].generated == ref
+
+
+def test_int8_kv_cache_quality():
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    prompt = [4, 8, 15, 16, 23, 42]
+    ref = _greedy_ref(cfg, params, prompt, 8)
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=1, max_seq_len=64, int8_kv_cache=True),
+    )
+    uid = eng.submit(prompt, 8)
+    res = eng.run()
+    agree = sum(a == b for a, b in zip(res[uid].generated, ref))
+    assert agree >= 6, (res[uid].generated, ref)
+
+
+def test_lut_softmax_serving_runs():
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=2, max_seq_len=48, lut_softmax=True,
+                    int8_weights=True),
+    )
+    uid = eng.submit([3, 1, 4], 4)
+    res = eng.run()
+    assert len(res[uid].generated) == 4
+
+
+def test_quantized_cache_memory_is_4x_smaller():
+    cfg = configs.get_config("granite-8b", reduced=True)
+    fp = lm.abstract_caches(cfg, 4, 32, dtype=jnp.bfloat16)
+    q = lm.abstract_caches(cfg, 4, 32, quantized=True)
+    fp_kv = fp["layers"]["k"]
+    q_kv = q["layers"]["k"]
+    assert fp_kv.dtype == jnp.bfloat16 and q_kv.dtype == jnp.int8
+    assert np.prod(fp_kv.shape) * 2 == 2 * np.prod(q_kv.shape) * 1
+    assert "k_scale" in q["layers"]
+
+
+def test_int8_mla_latent_cache_quality():
+    """Beyond-paper §Perf A4: int8 latent cache for MLA decode must track
+    the fp cache closely."""
+    cfg = configs.get_config("minicpm3-4b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    prompt = [7, 3, 11, 2, 9]
+    ref = _greedy_ref(cfg, params, prompt, 8)
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=1, max_seq_len=64, int8_kv_cache=True),
+    )
+    assert eng.quant_cache
+    uid = eng.submit(prompt, 8)
+    res = eng.run()
+    agree = sum(a == b for a, b in zip(res[uid].generated, ref))
+    assert agree >= 6, (res[uid].generated, ref)

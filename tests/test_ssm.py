@@ -1,0 +1,106 @@
+"""Mamba2 SSD: chunked scan vs naive recurrence oracle; decode-step
+consistency; full block prefill->decode continuity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import ssm
+
+
+def _inputs(b=2, l=32, h=3, p=8, n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    xdt = jnp.asarray(rng.normal(size=(b, l, h, p)) * 0.5, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(size=(b, l, h))) * 0.3, jnp.float32)
+    bmat = jnp.asarray(rng.normal(size=(b, l, h, n)) * 0.5, jnp.float32)
+    cmat = jnp.asarray(rng.normal(size=(b, l, h, n)) * 0.5, jnp.float32)
+    return xdt, a, bmat, cmat
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_chunked_matches_naive(chunk):
+    xdt, a, bmat, cmat = _inputs()
+    y_ref, s_ref = ssm.ssd_naive_ref(xdt, a, bmat, cmat)
+    y, s = ssm.ssd_chunked(xdt, a, bmat, cmat, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-4)
+
+
+def test_initial_state_threading():
+    xdt, a, bmat, cmat = _inputs(seed=3)
+    # run halves with state handoff == full run
+    y_full, s_full = ssm.ssd_chunked(xdt, a, bmat, cmat, chunk=8)
+    y1, s1 = ssm.ssd_chunked(
+        xdt[:, :16], a[:, :16], bmat[:, :16], cmat[:, :16], chunk=8
+    )
+    y2, s2 = ssm.ssd_chunked(
+        xdt[:, 16:], a[:, 16:], bmat[:, 16:], cmat[:, 16:],
+        chunk=8, initial_state=s1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=1e-4
+    )
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+def test_step_matches_scan():
+    xdt, a, bmat, cmat = _inputs(b=1, l=8, seed=5)
+    y_ref, s_ref = ssm.ssd_naive_ref(xdt, a, bmat, cmat)
+    state = jnp.zeros_like(s_ref)
+    ys = []
+    for t in range(8):
+        # ssd_step takes raw x and dt separately; fold dt=1, x=xdt
+        y, state = ssm.ssd_step(
+            state,
+            xdt[:, t],
+            jnp.ones((xdt.shape[0], xdt.shape[2]), jnp.float32),  # dt = 1
+            a[:, t],
+            bmat[:, t],
+            cmat[:, t],
+        )
+        ys.append(y)
+    ys = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_ref), atol=1e-4)
+
+
+def test_mamba_block_prefill_decode_continuity():
+    """Full mamba block: prefill a prompt, then decode tokens; must match
+    the same sequence run in one pass."""
+    cfg = configs.get_config("mamba2-130m", reduced=True)
+    from repro.models import lm
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, s, extra = 2, 12, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + extra), 0, cfg.vocab_size)
+    full_logits, _, _ = lm.forward(params, cfg, {"tokens": toks}, mode="train")
+    caches = lm.init_caches(cfg, b, s + extra, dtype=jnp.float32)
+    last, caches = lm.prefill(params, cfg, {"tokens": toks[:, :s]}, caches)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, s - 1]), atol=2e-4
+    )
+    for i in range(extra):
+        pos = jnp.full((b,), s + i, jnp.int32)
+        last, caches = lm.decode_step(
+            params, cfg, toks[:, s + i : s + i + 1], pos, caches
+        )
+        np.testing.assert_allclose(
+            np.asarray(last), np.asarray(full_logits[:, s + i]), atol=2e-4
+        )
+
+
+def test_decay_monotonicity():
+    """More negative a (stronger decay) -> state forgets faster."""
+    xdt, a, bmat, cmat = _inputs(seed=7)
+    _, s_weak = ssm.ssd_chunked(xdt, a * 0.1, bmat, cmat, chunk=8)
+    _, s_strong = ssm.ssd_chunked(xdt, a * 10.0, bmat, cmat, chunk=8)
+    # strong decay: final state dominated by recent inputs only; compare
+    # sensitivity to the first token by zeroing it
+    xdt0 = xdt.at[:, 0].set(0.0)
+    _, s_weak0 = ssm.ssd_chunked(xdt0, a * 0.1, bmat, cmat, chunk=8)
+    _, s_strong0 = ssm.ssd_chunked(xdt0, a * 10.0, bmat, cmat, chunk=8)
+    weak_sens = float(jnp.linalg.norm(s_weak - s_weak0))
+    strong_sens = float(jnp.linalg.norm(s_strong - s_strong0))
+    assert strong_sens < weak_sens
