@@ -1,10 +1,11 @@
 """Benchmark orchestrator — one benchmark per paper table/figure.
 
-    latency_tables  <-> paper Tables II-IV   (latency vs reuse factor)
-    auc_vs_bits     <-> paper Figs. 9-11     (fidelity vs fractional bits)
-    resources       <-> paper Figs. 12-14    (resources vs reuse factor)
-    kernel_micro    <-> per-kernel validation
-    roofline_table  <-> EXPERIMENTS.md §Roofline (from the dry-run cache)
+    latency_tables      <-> paper Tables II-IV   (latency vs reuse factor)
+    auc_vs_bits         <-> paper Figs. 9-11     (fidelity vs fractional bits)
+    resources           <-> paper Figs. 12-14    (resources vs reuse factor)
+    kernel_micro        <-> per-kernel validation
+    roofline_table      <-> EXPERIMENTS.md §Roofline (from the dry-run cache)
+    serving_throughput  <-> engine v2 tokens/s (batch x bucket x decode_steps)
 
 Prints ``name,us_per_call,derived`` style CSV blocks per benchmark.
 """
@@ -22,6 +23,7 @@ def main() -> None:
         latency_tables,
         resources,
         roofline_table,
+        serving_throughput,
     )
 
     benches = [
@@ -30,6 +32,7 @@ def main() -> None:
         ("kernel_micro", kernel_micro.run),
         ("auc_vs_bits", auc_vs_bits.run),
         ("roofline_table", roofline_table.run),
+        ("serving_throughput", serving_throughput.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

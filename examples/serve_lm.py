@@ -26,6 +26,13 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--quantized", action="store_true",
                     help="int8 weights + int8 KV cache + LUT softmax")
+    ap.add_argument("--prefill-buckets", type=int, nargs="*", default=None,
+                    help="prompt-length buckets (default: powers of two; "
+                         "pass with no values for exact-length v1 prefill)")
+    ap.add_argument("--decode-steps", type=int, default=4,
+                    help="decode tokens per host dispatch (lax.scan)")
+    ap.add_argument("--max-prefill-per-step", type=int, default=0,
+                    help="cap on prompts admitted per step (0 = all free slots)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=True)
@@ -37,10 +44,18 @@ def main():
         int8_weights=args.quantized,
         int8_kv_cache=args.quantized,
         lut_softmax=args.quantized,
+        prefill_buckets=(
+            None if args.prefill_buckets is None
+            else tuple(args.prefill_buckets)
+        ),
+        decode_steps=args.decode_steps,
+        max_prefill_per_step=args.max_prefill_per_step,
     )
     eng = ServingEngine(cfg, params, serve_cfg)
     print(f"serving {cfg.name} ({lm.count_params(cfg):,} params), "
-          f"max_batch={args.max_batch}, quantized={args.quantized}")
+          f"max_batch={args.max_batch}, quantized={args.quantized}, "
+          f"buckets={eng.prefill_buckets or 'exact'}, "
+          f"decode_steps={serve_cfg.decode_steps}")
 
     rng = np.random.default_rng(0)
     uids = []
@@ -63,6 +78,11 @@ def main():
     total_tokens = sum(len(r.generated) for r in results.values())
     print(f"\ncompleted {len(results)} requests / {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on CPU host)")
+    tel = eng.telemetry
+    print(f"telemetry: queue wait mean {tel['queue_wait_s_total']/max(tel['prompts_admitted'],1)*1e3:.1f} ms | "
+          f"{tel['prefill_compiles']} prefill programs, "
+          f"{tel['decode_compiles']} decode program | "
+          f"prefill {tel['prefill_time_s']:.2f}s / decode {tel['decode_time_s']:.2f}s")
     for u in uids[:3]:
         r = results[u]
         print(f"  req {u}: prompt {r.prompt[:6]}... -> {r.generated}")

@@ -224,3 +224,26 @@ class ServeConfig:
     int8_weights: bool = False
     int8_kv_cache: bool = False
     lut_softmax: bool = False
+    # --- engine v2: bucketed prefill + scan decode ---
+    # Prompt-length buckets for prefill padding.  None = auto powers of two
+    # up to max_seq_len; () = exact-length prefill (the v1 behavior, one
+    # compiled program per distinct prompt length).
+    prefill_buckets: tuple[int, ...] | None = None
+    # Decode tokens generated per host dispatch (lax.scan over the fused
+    # decode program).  1 = the v1 one-token-per-step path.
+    decode_steps: int = 4
+    # Max prompts admitted (prefilled) per engine step; 0 = fill every
+    # free slot (v1 behavior).
+    max_prefill_per_step: int = 0
+
+    def resolved_buckets(self) -> tuple[int, ...]:
+        """Prefill buckets, ascending.  Auto mode: powers of two in
+        [8, max_seq_len]."""
+        if self.prefill_buckets is not None:
+            return tuple(sorted(self.prefill_buckets))
+        buckets, b = [], 8
+        while b < self.max_seq_len:
+            buckets.append(b)
+            b *= 2
+        buckets.append(self.max_seq_len)
+        return tuple(buckets)

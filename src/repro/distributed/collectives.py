@@ -136,8 +136,12 @@ def ring_collective_matmul(
             return acc, w_nxt
 
         acc = jnp.zeros((x_local.shape[0], w_local.shape[1]), x_local.dtype)
-        # the carry becomes device-varying over `axis` inside the loop
-        acc = jax.lax.pcast(acc, (axis,), to="varying")
+        # the carry becomes device-varying over `axis` inside the loop;
+        # older JAX lines have no varying-type system (and no lax.pcast) —
+        # there the unannotated carry is already fine under check_rep=False
+        pcast = getattr(jax.lax, "pcast", None)
+        if pcast is not None:
+            acc = pcast(acc, (axis,), to="varying")
         acc, _ = jax.lax.fori_loop(0, n_shards, step, (acc, w_local))
         return acc
 

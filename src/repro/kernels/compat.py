@@ -1,0 +1,28 @@
+"""Version-tolerant shims over the Pallas TPU API.
+
+The ``compiler_params`` container class has been renamed across JAX
+releases (``pltpu.TPUCompilerParams`` on 0.4.3x, ``pltpu.CompilerParams``
+on newer/older lines, a plain dict on the oldest ones).  Every kernel in
+this package routes through :func:`tpu_compiler_params` so the rename is
+absorbed in exactly one place.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(*, dimension_semantics: tuple[str, ...], **kwargs):
+    """Build the Pallas TPU ``compiler_params`` object for this JAX version.
+
+    Accepts the keyword arguments of the underlying params class
+    (``dimension_semantics`` is the only one our kernels use) and returns
+    whichever container the installed JAX expects.
+    """
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is not None:
+        return cls(dimension_semantics=dimension_semantics, **kwargs)
+    # very old JAX: pallas_call accepted a {"mosaic": {...}} mapping
+    return {"mosaic": {"dimension_semantics": dimension_semantics, **kwargs}}

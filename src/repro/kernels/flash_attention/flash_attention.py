@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 from repro.core import lut
 
 NEG_INF = -1e30
@@ -193,7 +195,7 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),  # running sum l
             pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

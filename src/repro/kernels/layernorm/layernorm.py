@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 from repro.core import lut
 
 
@@ -90,7 +92,7 @@ def layernorm_pallas(
         ],
         out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, k), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.configs.base import SHAPES, ModelConfig, ParallelismConfig, ShapeConfig
 from repro.distributed.sharding import ShardingRules
+from repro.launch import mesh as mesh_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.models import params as params_lib
@@ -49,29 +50,24 @@ def make_mesh(name: str):
     if name in MESHES:
         return make_production_mesh(**MESHES[name])
     if name == "pod2":  # head-aligned small TP: 128-way data x 2-way model
-        return jax.make_mesh(
-            (128, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        return mesh_lib.make_mesh(
+            (128, 2), ("data", "model")
         )
     if name == "pod8":  # alternate aspect ratio: 32-way data x 8-way model
-        return jax.make_mesh(
-            (32, 8), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        return mesh_lib.make_mesh(
+            (32, 8), ("data", "model")
         )
     if name == "pod32":  # 8-way data x 32-way model
-        return jax.make_mesh(
-            (8, 32), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        return mesh_lib.make_mesh(
+            (8, 32), ("data", "model")
         )
     if name == "tiny":  # tests: 2x2 from the same 512-device pool
-        return jax.make_mesh(
-            (2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        return mesh_lib.make_mesh(
+            (2, 2), ("data", "model")
         )
     if name == "tinypod":
-        return jax.make_mesh(
-            (2, 2, 2), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        return mesh_lib.make_mesh(
+            (2, 2, 2), ("pod", "data", "model")
         )
     raise KeyError(name)
 

@@ -8,7 +8,21 @@ module never touches jax device state — required for the dry-run's
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_mesh(shape, axes):
+    """Version-tolerant ``jax.make_mesh``.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types`` kwarg) only exist on
+    newer JAX lines; on older ones every axis is implicitly Auto, which is
+    exactly what we want — so pass it only when available.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,9 +30,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips across DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int | None = None):
@@ -27,10 +39,7 @@ def make_host_mesh(model: int | None = None):
     n = len(jax.devices())
     model = model or 1
     assert n % model == 0, (n, model)
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def mesh_axis_names(mesh) -> tuple[str, ...]:

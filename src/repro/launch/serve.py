@@ -28,6 +28,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--prefill-buckets", type=int, nargs="*", default=None,
+                    help="prompt-length buckets (default: powers of two; "
+                         "pass with no values for exact-length v1 prefill)")
+    ap.add_argument("--decode-steps", type=int, default=4,
+                    help="decode tokens per host dispatch (lax.scan)")
+    ap.add_argument("--max-prefill-per-step", type=int, default=0,
+                    help="cap on prompts admitted per step (0 = all free slots)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=not args.full_config)
@@ -39,6 +46,12 @@ def main():
             temperature=args.temperature,
             int8_weights=args.quantized, int8_kv_cache=args.quantized,
             lut_softmax=args.quantized,
+            prefill_buckets=(
+                None if args.prefill_buckets is None
+                else tuple(args.prefill_buckets)
+            ),
+            decode_steps=args.decode_steps,
+            max_prefill_per_step=args.max_prefill_per_step,
         ),
     )
     rng = np.random.default_rng(0)
@@ -55,6 +68,13 @@ def main():
     toks = sum(len(results[u].generated) for u in uids)
     print(f"{len(uids)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s host throughput)")
+    tel = eng.telemetry
+    print(f"telemetry: {tel['tokens_per_s']:.1f} tok/s | "
+          f"queue wait mean {tel['queue_wait_s_mean']*1e3:.1f} ms | "
+          f"{tel['prefill_compiles']} prefill programs "
+          f"(buckets={eng.prefill_buckets or 'exact'}), "
+          f"{tel['decode_compiles']} decode program "
+          f"(decode_steps={eng.serve_cfg.decode_steps})")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,35 @@
-"""Serving engine: continuous batching over slot-structured KV caches.
+"""Serving engine v2: continuous batching with bucketed prefill and
+multi-token scan decode.
 
-The paper's subject is low-latency *inference*; this engine is its
-datacenter-scale counterpart: a fixed pool of ``max_batch`` cache slots,
-prompts prefilled into free slots while resident sequences keep decoding
-(continuous batching / "in-flight batching"), greedy or temperature
-sampling, optional int8 weights (PTQ), int8 KV cache, and the paper's LUT
-softmax in the attention score path.
+The paper's subject is low-latency *inference* with a bounded, pre-compiled
+set of fixed-iteration datapaths (hls4ml pipelines); this engine is the
+datacenter-scale counterpart and inherits that discipline:
 
-All device work happens in two jitted programs: ``_prefill_one`` (batch-1
-prompt -> slot-cache insert) and ``_decode_all`` (one token for every
-resident slot).  Host-side state is just the slot table.
+* **Bucketed prefill** — prompts are right-padded to power-of-two length
+  buckets with an explicit length mask, so the jit cache holds at most
+  ``len(prefill_buckets)`` prefill programs instead of one per distinct
+  prompt length.  The mask selects the true last-token logits and zeroes
+  the padded tail of the freshly filled KV cache; decode-side position
+  masking (``kv_pos <= pos``) keeps the pad region inert from then on.
+* **Scan decode** — ``decode_steps`` tokens per host dispatch via
+  ``jax.lax.scan`` over the fused decode program, with per-slot active
+  masks so finished slots (eos / max-tokens / sequence cap) freeze their
+  position and stop emitting mid-scan.
+* **Telemetry** — tokens/s, queue wait, and prefill/decode compile
+  counters exposed from ``step()``/``run()``.
+
+Families whose caches are not safely right-paddable (SSM/hybrid state,
+rolling sliding-window buffers) transparently fall back to exact-length
+prefill through the same program, so every architecture keeps working.
+
+Host-side state is just the slot table; all device work happens in the
+per-bucket prefill programs and one decode-scan program.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -22,12 +37,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.core import fixed_point as fxp
 from repro.core import quant
 from repro.models import lm
 from repro.serve.sampling import sample
 
 PyTree = Any
+
+# cache leaves with a sequence axis: name -> axis from the right
+_SEQ_AXIS_FROM_RIGHT = {
+    "k": 2, "v": 2, "latent": 2,  # (..., cache_len, feature)
+    "k_scale": 1, "v_scale": 1, "latent_scale": 1,  # (..., cache_len)
+}
 
 
 @dataclasses.dataclass
@@ -37,12 +57,18 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    admitted_at: float = 0.0
 
     @property
     def done(self) -> bool:
         if self.eos_id is not None and self.generated and self.generated[-1] == self.eos_id:
             return True
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(0.0, self.admitted_at - self.submitted_at)
 
 
 @dataclasses.dataclass
@@ -64,6 +90,14 @@ class ServingEngine:
     ):
         self.cfg = cfg
         self.serve_cfg = serve_cfg or ServeConfig()
+        if self.serve_cfg.decode_steps < 1:
+            raise ValueError(
+                f"decode_steps must be >= 1, got {self.serve_cfg.decode_steps}"
+            )
+        if self.serve_cfg.max_prefill_per_step < 0:
+            raise ValueError(
+                "max_prefill_per_step must be >= 0 (0 = fill all free slots)"
+            )
         self.kernel = kernel or {}
         if self.serve_cfg.lut_softmax:
             self.kernel.setdefault("softmax_mode", "lut")
@@ -90,8 +124,38 @@ class ServingEngine:
         self._finished: dict[int, Request] = {}
         self._uid = 0
 
-        self._decode_fn = jax.jit(self._decode_all)
-        self._prefill_fn = {}  # jit cache per prompt length
+        # right-padding the prompt is only sound when the cache is
+        # position-addressed and decode masks by position: true for dense
+        # GQA / MLA caches, false for SSM/hybrid state and for rolling
+        # sliding-window buffers (padding would evict real tokens).
+        rolling = (
+            cfg.sliding_window is not None
+            and cfg.sliding_window < sc.max_seq_len
+        )
+        self._bucketable = (
+            cfg.attn_kind in ("gqa", "mla")
+            and cfg.family not in ("ssm", "hybrid")
+            and not rolling
+        )
+        # a bucket longer than the cache could not be inserted; drop those
+        self._buckets = (
+            tuple(b for b in sc.resolved_buckets() if b <= sc.max_seq_len)
+            if self._bucketable
+            else ()
+        )
+
+        self._decode_fn = jax.jit(self._decode_scan)
+        self._prefill_fn: dict[int, Any] = {}  # jit cache per bucket length
+        self.telemetry = {
+            "tokens_generated": 0,
+            "prompts_admitted": 0,
+            "prefill_compiles": 0,
+            "decode_compiles": 0,
+            "queue_wait_s_total": 0.0,
+            "prefill_time_s": 0.0,
+            "decode_time_s": 0.0,
+            "steps": 0,
+        }
 
     # ------------------------------------------------------------- utils --
     @staticmethod
@@ -109,12 +173,33 @@ class ServingEngine:
 
         return jax.tree.map(_q, params)
 
+    @property
+    def prefill_buckets(self) -> tuple[int, ...]:
+        """Active buckets; empty for exact-length (v1-style) prefill."""
+        return self._buckets
+
+    def bucket_for(self, n: int) -> int:
+        """Padded prefill length for an n-token prompt: the smallest bucket
+        >= n, or n itself for unbucketable families / oversized prompts."""
+        for b in self._buckets:
+            if b >= n:
+                return b
+        return n
+
     # ----------------------------------------------------------- requests --
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                eos_id: int | None = None) -> int:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.serve_cfg.max_seq_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_seq_len "
+                f"{self.serve_cfg.max_seq_len}"
+            )
         self._uid += 1
         self._queue.append(
-            Request(self._uid, list(prompt), max_new_tokens, eos_id)
+            Request(self._uid, list(prompt), max_new_tokens, eos_id,
+                    submitted_at=time.perf_counter())
         )
         return self._uid
 
@@ -126,9 +211,41 @@ class ServingEngine:
         return bool(self._queue) or any(s.active for s in self.slots)
 
     # ------------------------------------------------------------ device --
-    def _prefill_one(self, params, tokens, caches, slot_idx):
-        """Prefill a batch-1 prompt and insert its cache into slot_idx."""
+    def _mask_cache_tail(self, filled: PyTree, length: jax.Array) -> PyTree:
+        """Zero cache entries at positions >= length (the explicit bucket
+        length mask).  Leaves without a sequence axis (SSM state, slot_pos)
+        pass through; those families use exact-length prefill anyway."""
+
+        def _mask_group(group):
+            out = {}
+            for name, leaf in group.items():
+                axis_r = _SEQ_AXIS_FROM_RIGHT.get(name)
+                if axis_r is None:
+                    out[name] = leaf
+                    continue
+                axis = leaf.ndim - axis_r
+                seq = jnp.arange(leaf.shape[axis])
+                mask = seq < length
+                mask = mask.reshape(
+                    (1,) * axis + (-1,) + (1,) * (leaf.ndim - axis - 1)
+                )
+                out[name] = jnp.where(mask, leaf, jnp.zeros((), leaf.dtype))
+            return out
+
+        return {k: _mask_group(v) for k, v in filled.items()}
+
+    def _prefill_bucket(self, params, tokens, length, caches, slot_idx):
+        """Prefill one right-padded batch-1 prompt and insert its cache.
+
+        ``tokens``: (1, bucket) int32, positions >= length are padding.
+        ``length``: scalar int32 true prompt length (traced, so every
+        prompt sharing a bucket reuses one compiled program).
+        Returns (true last-token logits (1, V), updated slot caches).
+        """
         cfg = self.cfg
+        bucket = tokens.shape[1]
+        mask = jnp.arange(bucket, dtype=jnp.int32) < length
+        tokens = jnp.where(mask[None, :], tokens, 0)  # canonical pad id
         small = lm.init_caches(
             cfg, 1, self.serve_cfg.max_seq_len,
             dtype=jnp.float32, quantized=self.quant_cache,
@@ -137,6 +254,10 @@ class ServingEngine:
             params, cfg, {"tokens": tokens}, mode="prefill",
             caches=small, kernel=self.kernel,
         )
+        # causal attention keeps positions < length independent of the pad
+        # tail; the true prompt's logits live at index length-1
+        last = jax.lax.dynamic_slice_in_dim(logits, length - 1, 1, axis=1)
+        filled = self._mask_cache_tail(filled, length)
 
         def insert(big, one):
             # batch axis is axis 1 on every stacked cache leaf
@@ -145,70 +266,150 @@ class ServingEngine:
             )
 
         new_caches = jax.tree.map(insert, caches, filled)
-        return logits[:, -1], new_caches
+        return last[:, 0], new_caches
 
-    def _decode_all(self, params, tokens, positions, caches, key):
-        logits, new_caches, _ = lm.forward(
-            params, self.cfg, {"tokens": tokens}, mode="decode",
-            caches=caches, positions=positions, kernel=self.kernel,
+    def _decode_scan(self, params, tokens, positions, active, rem, eos,
+                     caches, key):
+        """Run ``decode_steps`` fused decode steps under one dispatch.
+
+        All arrays are per-slot (B,): ``tokens`` last sampled token,
+        ``positions`` next write position, ``active`` live mask, ``rem``
+        generation budget left, ``eos`` per-request eos id (-1 = none).
+        Inactive slots freeze (token, position); re-running a frozen
+        position is idempotent for position-addressed caches and harmless
+        for retired SSM slots (their state is overwritten on re-prefill).
+        """
+        sc = self.serve_cfg
+        keys = jax.random.split(key, sc.decode_steps)
+
+        def body(carry, k):
+            tok, pos, act, budget, c = carry
+            logits, new_c, _ = lm.forward(
+                params, self.cfg, {"tokens": tok[:, None]}, mode="decode",
+                caches=c, positions=pos, kernel=self.kernel,
+            )
+            nxt = sample(logits[:, -1], k, temperature=sc.temperature)
+            nxt = jnp.where(act, nxt, tok)
+            emitted = (nxt, act)
+            budget = jnp.where(act, budget - 1, budget)
+            new_pos = jnp.where(act, pos + 1, pos)
+            new_act = (
+                act
+                & (nxt != eos)
+                & (budget > 0)
+                & (new_pos + 1 < sc.max_seq_len)
+            )
+            return (nxt, new_pos, new_act, budget, new_c), emitted
+
+        init = (tokens, positions, active, rem, caches)
+        (tok, pos, act, rem, caches), (toks_t, act_t) = jax.lax.scan(
+            body, init, keys
         )
-        nxt = sample(
-            logits[:, -1], key, temperature=self.serve_cfg.temperature
-        )
-        return nxt, new_caches
+        return toks_t, act_t, pos, act, caches
 
     # -------------------------------------------------------------- step --
     def step(self) -> dict:
-        """One engine iteration: admit waiting prompts, then decode."""
+        """One engine iteration: admit waiting prompts, then scan-decode."""
+        tel = self.telemetry
+        tel["steps"] += 1
         stats = {"prefilled": 0, "decoded": 0}
-        # 1. admission: fill free slots with queued prompts
+        sc = self.serve_cfg
+        # 1. admission: fill free slots with queued prompts (bucketed)
+        cap = sc.max_prefill_per_step or sc.max_batch
         for idx, slot in enumerate(self.slots):
-            if not self._queue:
+            if not self._queue or stats["prefilled"] >= cap:
                 break
             if slot.active:
                 continue
             req = self._queue.pop(0)
-            toks = jnp.asarray([req.prompt], jnp.int32)
+            # queue wait ends at pop: prefill execution/compile time that
+            # follows is prefill_time_s, not waiting
+            req.admitted_at = time.perf_counter()
+            tel["queue_wait_s_total"] += req.queue_wait_s
+            tel["prompts_admitted"] += 1
             n = len(req.prompt)
-            fn = self._prefill_fn.get(n)
+            bucket = self.bucket_for(n)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = req.prompt
+            fn = self._prefill_fn.get(bucket)
             if fn is None:
-                fn = jax.jit(self._prefill_one, static_argnames=())
-                self._prefill_fn[n] = fn
+                fn = jax.jit(self._prefill_bucket)
+                self._prefill_fn[bucket] = fn
+                tel["prefill_compiles"] += 1
+            t0 = time.perf_counter()
             logits, self.caches = fn(
-                self.params, toks, self.caches, idx
+                self.params, jnp.asarray(toks), jnp.int32(n),
+                self.caches, idx,
             )
             self.key, sub = jax.random.split(self.key)
-            nxt = int(
-                sample(logits, sub, temperature=self.serve_cfg.temperature)[0]
-            )
+            nxt = int(sample(logits, sub, temperature=sc.temperature)[0])
+            tel["prefill_time_s"] += time.perf_counter() - t0
             req.generated.append(nxt)
+            tel["tokens_generated"] += 1
             slot.active, slot.request = True, req
             slot.pos = n  # next write position
             slot.last_token = nxt
             stats["prefilled"] += 1
             self._retire(idx)
 
-        # 2. batched decode for all active slots
+        # 2. scan decode for all active slots
         if any(s.active for s in self.slots):
-            tokens = jnp.asarray(
-                [[s.last_token] for s in self.slots], jnp.int32
+            tokens = np.asarray([s.last_token for s in self.slots], np.int32)
+            positions = np.asarray(
+                [s.pos if s.active else 0 for s in self.slots], np.int32
             )
-            positions = jnp.asarray(
-                [s.pos if s.active else 0 for s in self.slots], jnp.int32
+            active = np.asarray([s.active for s in self.slots], bool)
+            rem = np.asarray(
+                [
+                    max(s.request.max_new_tokens - len(s.request.generated), 0)
+                    if s.active
+                    else 0
+                    for s in self.slots
+                ],
+                np.int32,
+            )
+            eos = np.asarray(
+                [
+                    s.request.eos_id
+                    if s.active and s.request.eos_id is not None
+                    else -1
+                    for s in self.slots
+                ],
+                np.int32,
             )
             self.key, sub = jax.random.split(self.key)
-            nxt, self.caches = self._decode_fn(
-                self.params, tokens, positions, self.caches, sub
+            if tel["decode_compiles"] == 0:
+                tel["decode_compiles"] = 1  # one program, fixed shapes
+            t0 = time.perf_counter()
+            toks_t, act_t, pos_f, act_f, self.caches = self._decode_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(active), jnp.asarray(rem), jnp.asarray(eos),
+                self.caches, sub,
             )
-            nxt = np.asarray(nxt)
+            toks_t, act_t = np.asarray(toks_t), np.asarray(act_t)
+            pos_f, act_f = np.asarray(pos_f), np.asarray(act_f)
+            tel["decode_time_s"] += time.perf_counter() - t0
             for idx, slot in enumerate(self.slots):
                 if not slot.active:
                     continue
-                slot.pos += 1
-                slot.last_token = int(nxt[idx])
-                slot.request.generated.append(slot.last_token)
-                stats["decoded"] += 1
-                self._retire(idx)
+                for t in range(toks_t.shape[0]):
+                    if not act_t[t, idx]:
+                        break
+                    slot.request.generated.append(int(toks_t[t, idx]))
+                    stats["decoded"] += 1
+                    tel["tokens_generated"] += 1
+                slot.pos = int(pos_f[idx])
+                if slot.request.generated:
+                    slot.last_token = slot.request.generated[-1]
+                if not act_f[idx]:
+                    self._finished[slot.request.uid] = slot.request
+                    self.slots[idx] = _Slot()
+                else:
+                    self._retire(idx)
+        stats.update(
+            prefill_compiles=tel["prefill_compiles"],
+            decode_compiles=tel["decode_compiles"],
+        )
         return stats
 
     def _retire(self, idx: int):
@@ -220,8 +421,18 @@ class ServingEngine:
             self.slots[idx] = _Slot()
 
     def run(self, max_steps: int = 10_000) -> dict[int, Request]:
+        t0 = time.perf_counter()
+        tokens0 = self.telemetry["tokens_generated"]
         steps = 0
         while self.has_work and steps < max_steps:
             self.step()
             steps += 1
+        dt = time.perf_counter() - t0
+        tel = self.telemetry
+        tel["run_wall_s"] = dt
+        tel["tokens_per_s"] = (tel["tokens_generated"] - tokens0) / max(
+            dt, 1e-9
+        )
+        admitted = max(tel["prompts_admitted"], 1)
+        tel["queue_wait_s_mean"] = tel["queue_wait_s_total"] / admitted
         return dict(self._finished)

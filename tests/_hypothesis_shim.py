@@ -1,0 +1,111 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+Implements the tiny slice of the API the property tests use — ``given``,
+``settings`` and the ``strategies`` namespace (``integers``, ``floats``,
+``lists``, ``tuples``, ``sampled_from`` plus ``.map``/``.filter``) — by
+drawing a fixed number of seeded pseudo-random examples per test.  Far
+weaker than real shrinking-based hypothesis, but it keeps the property
+suite meaningful (and green) on minimal images; installing ``hypothesis``
+upgrades these tests transparently.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_DEFAULT_EXAMPLES = 25
+_FILTER_RETRIES = 200
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(_FILTER_RETRIES):
+                x = self._draw(rng)
+                if pred(x):
+                    return x
+            raise RuntimeError("filter predicate too restrictive for shim")
+
+        return Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def lists(elements: Strategy, *, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+def tuples(*strategies):
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+st = SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    lists=lists,
+    tuples=tuples,
+    sampled_from=sampled_from,
+)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # NOTE: the wrapper takes no parameters (and deliberately does not
+        # expose fn's signature via functools.wraps) so pytest does not
+        # mistake the strategy-drawn parameters for fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", None) or getattr(
+                fn, "_shim_max_examples", _DEFAULT_EXAMPLES
+            )
+            # seed on the test name so runs are reproducible
+            rng = random.Random(fn.__name__)
+            for i in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                try:
+                    fn(*drawn)
+                except Exception as e:  # noqa: BLE001 - re-raise with context
+                    raise AssertionError(
+                        f"{fn.__name__} failed on shim example #{i}: "
+                        f"{drawn!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

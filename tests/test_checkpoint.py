@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh as make_compat_mesh
 from repro.checkpoint import Checkpointer
 
 
@@ -91,9 +92,7 @@ def test_elastic_restore_with_shardings(tmp_path):
     ckpt = Checkpointer(str(tmp_path), keep=2)
     tree = _tree()
     ckpt.save(1, tree, blocking=True)
-    mesh = jax.make_mesh(
-        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_compat_mesh((1,), ("data",))
     sh = NamedSharding(mesh, P())
     shardings = {
         "params": {"w": sh, "b": sh},

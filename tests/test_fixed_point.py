@@ -3,8 +3,11 @@ numeric foundation."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # minimal images: deterministic fallback shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import fixed_point as fxp
 

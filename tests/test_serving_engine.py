@@ -1,0 +1,252 @@
+"""Engine v2 tests: bucketed prefill (selection, masking, parity),
+compile-count boundedness, mid-scan slot retirement (eos / max tokens),
+greedy determinism vs the v1 one-token path, and queue admission."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ServeConfig
+from repro.models import lm
+from repro.serve import ServingEngine
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.get_config("granite-8b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init_params(cfg, KEY)
+
+
+def _v1_cfg(**kw):
+    """Engine v1 semantics: exact-length prefill, one token per step."""
+    return ServeConfig(prefill_buckets=(), decode_steps=1, **kw)
+
+
+def _greedy(cfg, params, prompts, serve_cfg, n_new=6):
+    eng = ServingEngine(cfg, params, serve_cfg)
+    uids = [eng.submit(p, n_new) for p in prompts]
+    res = eng.run()
+    return eng, [res[u].generated for u in uids]
+
+
+# ----------------------------------------------------------- bucketing --
+
+
+def test_bucket_selection(cfg, params):
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=1, max_seq_len=64, prefill_buckets=(8, 16, 32)),
+    )
+    assert eng.bucket_for(1) == 8
+    assert eng.bucket_for(8) == 8
+    assert eng.bucket_for(9) == 16
+    assert eng.bucket_for(17) == 32
+    assert eng.bucket_for(33) == 33  # beyond the largest bucket: exact
+
+
+def test_auto_buckets_are_powers_of_two_capped_at_max_seq():
+    sc = ServeConfig(max_seq_len=100)
+    buckets = sc.resolved_buckets()
+    assert buckets[0] == 8 and buckets[-1] == 100
+    assert all(b <= 100 for b in buckets)
+    assert list(buckets) == sorted(buckets)
+
+
+def test_exact_fallback_for_unbucketable_families(params):
+    # sliding-window rolling buffer: right-padding would evict real tokens
+    win_cfg = configs.get_config("starcoder2-7b", reduced=True)
+    win_params = lm.init_params(win_cfg, KEY)
+    eng = ServingEngine(
+        win_cfg, win_params, ServeConfig(max_batch=1, max_seq_len=64)
+    )
+    assert not eng._bucketable
+    assert eng.bucket_for(5) == 5
+
+
+def test_bucketed_prefill_logits_match_unpadded(cfg, params):
+    """The padded program's masked last-token logits must equal the exact
+    program's — the bucket length mask in action."""
+    import jax.numpy as jnp
+
+    sc = ServeConfig(max_batch=1, max_seq_len=64, prefill_buckets=(16,))
+    eng = ServingEngine(cfg, params, sc)
+    prompt = [5, 9, 3, 7, 11]
+    n = len(prompt)
+    caches = lm.init_caches(cfg, 1, 64, dtype=jnp.float32)
+    padded = np.zeros((1, 16), np.int32)
+    padded[0, :n] = prompt
+    lp, _ = eng._prefill_bucket(
+        eng.params, jnp.asarray(padded), jnp.int32(n), caches, 0
+    )
+    le, _ = eng._prefill_bucket(
+        eng.params, jnp.asarray([prompt], jnp.int32), jnp.int32(n), caches, 0
+    )
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(le), atol=1e-5)
+
+
+def test_bucketed_prefill_masks_cache_tail(cfg, params):
+    """Pad positions of the inserted slot cache must be exactly zero."""
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=2, max_seq_len=64, prefill_buckets=(16,),
+                    decode_steps=1),
+    )
+    prompt = [5, 9, 3]
+    eng.submit(prompt, 1)
+    eng.step()
+    k = np.asarray(eng.caches["layers"]["k"])  # (L, B, Hkv, S, D)
+    # decode wrote position len(prompt); everything past it must be zero
+    assert np.all(k[:, 0, :, len(prompt) + 1:, :] == 0)
+    assert np.any(k[:, 0, :, :len(prompt), :] != 0)
+
+
+# ------------------------------------------------- compile boundedness --
+
+
+def test_prefill_compile_count_bounded_by_buckets(cfg, params):
+    """>= 8 distinct prompt lengths, <= len(buckets) compiled prefill
+    programs, tokens identical (greedy) to the v1 per-length path."""
+    rng = np.random.default_rng(0)
+    lengths = [3, 4, 5, 6, 7, 8, 9, 10]  # 8 distinct lengths
+    prompts = [
+        list(rng.integers(0, cfg.vocab_size, n)) for n in lengths
+    ]
+    buckets = (4, 8, 16)
+    eng, got = _greedy(
+        cfg, params, prompts,
+        ServeConfig(max_batch=4, max_seq_len=64, prefill_buckets=buckets,
+                    decode_steps=4),
+    )
+    v1_eng, ref = _greedy(
+        cfg, params, prompts, _v1_cfg(max_batch=4, max_seq_len=64)
+    )
+    assert got == ref
+    assert eng.telemetry["prefill_compiles"] <= len(buckets)
+    assert len(eng._prefill_fn) <= len(buckets)
+    # the v1 path really does compile per distinct length
+    assert v1_eng.telemetry["prefill_compiles"] == len(set(lengths))
+
+
+# ------------------------------------------------- mid-scan retirement --
+
+
+def test_eos_retires_slot_mid_scan(cfg, params):
+    prompt = [4, 8, 15, 16]
+    _, (free,) = _greedy(
+        cfg, params, [prompt],
+        ServeConfig(max_batch=1, max_seq_len=64, decode_steps=8),
+        n_new=8,
+    )
+    # pick the 3rd generated token as eos: the scan must stop right there
+    eos = free[2]
+    eng = ServingEngine(
+        cfg, params, ServeConfig(max_batch=1, max_seq_len=64, decode_steps=8)
+    )
+    uid = eng.submit(prompt, 8, eos_id=eos)
+    res = eng.run()
+    got = res[uid].generated
+    assert got == free[: free.index(eos) + 1]
+    assert got[-1] == eos
+
+
+def test_max_tokens_retires_slot_mid_scan(cfg, params):
+    prompt = [1, 2, 3, 4, 5]
+    _, (free,) = _greedy(
+        cfg, params, [prompt],
+        ServeConfig(max_batch=1, max_seq_len=64, decode_steps=8),
+        n_new=8,
+    )
+    _, (capped,) = _greedy(
+        cfg, params, [prompt],
+        ServeConfig(max_batch=1, max_seq_len=64, decode_steps=8),
+        n_new=3,
+    )
+    assert capped == free[:3]
+
+
+# ------------------------------------------------------- v1 parity -----
+
+
+def test_greedy_determinism_vs_v1_path(cfg, params):
+    prompts = [[5, 9, 3, 7], [11, 2, 6], [1, 2, 3, 4, 5, 6, 7, 8, 9]]
+    _, v2 = _greedy(
+        cfg, params, prompts,
+        ServeConfig(max_batch=2, max_seq_len=64, decode_steps=4),
+    )
+    _, v1 = _greedy(cfg, params, prompts, _v1_cfg(max_batch=2, max_seq_len=64))
+    assert v2 == v1
+    # and stable across runs
+    _, v2b = _greedy(
+        cfg, params, prompts,
+        ServeConfig(max_batch=2, max_seq_len=64, decode_steps=4),
+    )
+    assert v2 == v2b
+
+
+# ------------------------------------------------------- admission -----
+
+
+def test_queue_admission_when_all_slots_full(cfg, params):
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=2, max_seq_len=64, decode_steps=2),
+    )
+    uids = [eng.submit([3, 1, 4, 1, 5], 4) for _ in range(5)]
+    stats = eng.step()
+    assert stats["prefilled"] == 2  # both slots filled
+    assert sum(s.active for s in eng.slots) <= 2
+    assert len(eng._queue) == 3  # the rest wait
+    res = eng.run()
+    assert set(res) == set(uids)
+    assert all(len(res[u].generated) == 4 for u in uids)
+
+
+def test_max_prefill_per_step_caps_admission(cfg, params):
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=4, max_seq_len=64, max_prefill_per_step=1),
+    )
+    for _ in range(3):
+        eng.submit([7, 7, 7], 2)
+    stats = eng.step()
+    assert stats["prefilled"] == 1
+    res = eng.run()
+    assert len(res) == 3
+
+
+# ------------------------------------------------------- telemetry -----
+
+
+def test_telemetry_counters(cfg, params):
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=2, max_seq_len=64, decode_steps=4),
+    )
+    for _ in range(3):
+        eng.submit([2, 7, 1, 8], 5)
+    eng.run()
+    tel = eng.telemetry
+    assert tel["tokens_generated"] == 15
+    assert tel["prompts_admitted"] == 3
+    assert tel["decode_compiles"] == 1
+    assert tel["tokens_per_s"] > 0
+    assert tel["queue_wait_s_mean"] >= 0
+    assert tel["prefill_time_s"] > 0 and tel["decode_time_s"] > 0
+
+
+def test_temperature_sampling_still_runs(cfg, params):
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=2, max_seq_len=64, temperature=0.8,
+                    decode_steps=4),
+    )
+    uid = eng.submit([3, 1, 4], 6)
+    res = eng.run()
+    assert len(res[uid].generated) == 6
