@@ -5,10 +5,21 @@ Mirrors the paper's protocol: the metric compares the quantized model's
 outputs against the FLOAT model (not ground truth) — "we are primarily
 interested in the capability ... to replicate the output of the Keras
 model".  Integer bits fixed at 6 (the paper's chosen setting).
+
+The sweep is a **policy grid**: each (mode, frac_bits) point is the
+parametric preset ``{ptq,qat}_fixed<6+fb,6>`` from ``core.precision``,
+resolved and applied through the same PrecisionPolicy machinery the
+serving engine uses — so per-layer heterogeneous sweeps are a one-line
+policy change away.
+
+    PYTHONPATH=src python -m benchmarks.auc_vs_bits [--smoke]
+        [--models gw ...] [--frac-bits 2 6 ...]
 """
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import time
 
 import jax
@@ -16,8 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import fixed_point as fxp
-from repro.core import quant
+from repro.core import precision as precision_lib
 from repro.data import physics as pdata
 from repro.models import physics as pmodel
 from repro.optim import AdamW
@@ -26,15 +36,14 @@ INT_BITS = 6
 # paper sweeps 1..11 fractional bits; we sample the same range coarsely so
 # the whole benchmark stays CPU-friendly (QAT fine-tunes per point)
 FRAC_BITS = [1, 2, 3, 4, 6, 8, 10]
+MODELS = ["engine_anomaly", "btagging", "gw"]
 TRAIN_STEPS = 60
 QAT_STEPS = 15
 
 
-def _train(cfg, x, y, steps, params=None, quant_cfg=None, lr=3e-3, seed=0):
-    import dataclasses
-
-    if quant_cfg is not None:
-        cfg = dataclasses.replace(cfg, quant=quant_cfg)
+def _train(cfg, x, y, steps, params=None, policy=None, lr=3e-3, seed=0):
+    if policy is not None:
+        cfg = dataclasses.replace(cfg, precision=policy)
     if params is None:
         params = pmodel.init_params(cfg, jax.random.PRNGKey(seed))
     opt = AdamW(schedule=lambda s: lr, weight_decay=0.0)
@@ -63,31 +72,48 @@ def _auc(cfg, params, x, y_like_scores) -> float:
     return pdata.multiclass_auc(y_like_scores, proba)
 
 
-def run(n_train=384, n_test=512) -> list[str]:
+def run(
+    n_train=384,
+    n_test=512,
+    models=None,
+    frac_bits=None,
+    train_steps=TRAIN_STEPS,
+    qat_steps=QAT_STEPS,
+) -> list[str]:
+    models = models or MODELS
+    frac_bits = frac_bits or FRAC_BITS
     rows = ["figure,model,mode,int_bits,frac_bits,auc_float,auc_quant,auc_ratio"]
-    for name in ("engine_anomaly", "btagging", "gw"):
+    for name in models:
         cfg = configs.get_config(name)
         gen = pdata.GENERATORS[name]
         x, y = gen(n_train, seed=0)
         xt, yt = gen(n_test, seed=123)
-        params, cfg_f = _train(cfg, x, y, TRAIN_STEPS)
+        params, cfg_f = _train(cfg, x, y, train_steps)
         auc_float = _auc(cfg_f, params, xt, yt)
 
-        for fb in FRAC_BITS:
-            fp = fxp.ap_fixed(INT_BITS + fb, INT_BITS)
-            # PTQ: snap trained weights to the grid
-            qparams = quant.quantize_pytree_fixed(params, fp)
+        for fb in frac_bits:
+            # PTQ: the parametric policy snaps trained weights to the grid
+            ptq_policy = precision_lib.get_policy(
+                f"ptq_fixed<{INT_BITS + fb},{INT_BITS}>"
+            )
+            ptq_plan = ptq_policy.resolve(cfg.n_layers)
+            qparams = precision_lib.apply_plan_to_params(params, ptq_plan)
             auc_ptq = _auc(cfg_f, qparams, xt, yt)
             rows.append(
                 f"auc_vs_bits,{name},ptq,{INT_BITS},{fb},"
                 f"{auc_float:.4f},{auc_ptq:.4f},{auc_ptq/auc_float:.4f}"
             )
-            # QAT: short fine-tune with fake-quant weights+activations
-            qcfg = quant.QuantConfig(mode="qat", weight_cfg=fp, act_cfg=fp)
-            qat_params, cfg_q = _train(
-                cfg, x, y, QAT_STEPS, params=params, quant_cfg=qcfg, lr=1e-3
+            # QAT: short fine-tune with the fake-quant (STE) policy
+            qat_policy = precision_lib.get_policy(
+                f"qat_fixed<{INT_BITS + fb},{INT_BITS}>"
             )
-            qat_eval = quant.quantize_pytree_fixed(qat_params, fp)
+            qat_params, cfg_q = _train(
+                cfg, x, y, qat_steps, params=params, policy=qat_policy,
+                lr=1e-3,
+            )
+            qat_eval = precision_lib.apply_plan_to_params(
+                qat_params, qat_policy.resolve(cfg.n_layers)
+            )
             auc_qat = _auc(cfg_q, qat_eval, xt, yt)
             rows.append(
                 f"auc_vs_bits,{name},qat,{INT_BITS},{fb},"
@@ -97,8 +123,28 @@ def run(n_train=384, n_test=512) -> list[str]:
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", nargs="*", default=None, choices=MODELS)
+    ap.add_argument("--frac-bits", type=int, nargs="*", default=None)
+    ap.add_argument("--train-steps", type=int, default=TRAIN_STEPS)
+    ap.add_argument("--qat-steps", type=int, default=QAT_STEPS)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI smoke: 1 model x 2 bit widths, short training",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.models = args.models or ["gw"]
+        args.frac_bits = args.frac_bits or [2, 6]
+        args.train_steps = min(args.train_steps, 10)
+        args.qat_steps = min(args.qat_steps, 4)
     t0 = time.time()
-    for row in run():
+    for row in run(
+        models=args.models,
+        frac_bits=args.frac_bits,
+        train_steps=args.train_steps,
+        qat_steps=args.qat_steps,
+    ):
         print(row)
     print(f"# auc_vs_bits done in {time.time()-t0:.1f}s")
 

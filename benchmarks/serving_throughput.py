@@ -39,12 +39,13 @@ def physics_scale_lm() -> ModelConfig:
 
 
 def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
-               n_requests=8, max_new=16, seed=0):
+               policy=None, n_requests=8, max_new=16, seed=0):
     eng = ServingEngine(
         cfg, params,
         ServeConfig(
             max_batch=max_batch, max_seq_len=64,
             prefill_buckets=buckets, decode_steps=decode_steps,
+            policy=policy,
         ),
     )
 
@@ -76,7 +77,7 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
     )
 
 
-def run() -> list[str]:
+def run(policy: str | None = None) -> list[str]:
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
     archs = [
         ("physics_scale", physics_scale_lm()),
@@ -84,6 +85,7 @@ def run() -> list[str]:
     ]
     buckets = (8, 16, 32)
     for name, cfg in archs:
+        arch_policy = cfg.serve_policy if policy == "auto" else policy
         params = lm.init_params(cfg, jax.random.PRNGKey(0))
         for max_batch in (2, 4):
             for decode_steps in (1, 4):
@@ -91,17 +93,24 @@ def run() -> list[str]:
                     _sweep_one(
                         name, cfg, params,
                         max_batch=max_batch, buckets=buckets,
-                        decode_steps=decode_steps,
+                        decode_steps=decode_steps, policy=arch_policy,
                     )
                 )
     return rows
 
 
 def main():
+    import argparse
     import time
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default=None,
+                    help="precision policy preset applied to every sweep "
+                         "point (float, int8_serve, paper_vu13p, ...) or "
+                         "'auto' for each arch's recommended serve_policy")
+    args = ap.parse_args()
     t0 = time.time()
-    for row in run():
+    for row in run(policy=args.policy):
         print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")
 

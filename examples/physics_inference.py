@@ -6,10 +6,14 @@ classifier, post-training-quantize at the paper's chosen precision
 and report the AUC ratio (quantized vs float) plus the latency estimates
 (FPGA cycle model per Tables II-IV and the TPU roofline).
 
+Both quantization passes run through the PrecisionPolicy grid
+(``--policy`` overrides the paper-optimal parametric presets).
+
     PYTHONPATH=src python examples/physics_inference.py [gw|engine_anomaly|btagging]
+        [--policy qat_fixed<10,5>]
 """
 
-import sys
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +22,7 @@ import numpy as np
 from repro import configs
 from repro.core import fixed_point as fxp
 from repro.core import latency_model as lat
-from repro.core import quant
+from repro.core import precision as precision_lib
 from repro.data import physics as pdata
 from repro.models import physics as pmodel
 from repro.optim import AdamW
@@ -53,13 +57,25 @@ def auc_of(cfg, params, x, y):
     return pdata.multiclass_auc(y, proba)
 
 
-def main(name: str = "gw"):
+def main(name: str = "gw", policy: str | None = None):
     import dataclasses
 
     cfg = configs.get_config(name)
     fp = fxp.PAPER_OPTIMAL[name]["qat"]
+    if policy == "auto":
+        policy = cfg.serve_policy
+    if policy is None:
+        ptq_policy = precision_lib.get_policy(
+            f"ptq_fixed<{fp.total_bits},{fp.int_bits}>"
+        )
+        qat_policy = precision_lib.get_policy(
+            f"qat_fixed<{fp.total_bits},{fp.int_bits}>"
+        )
+    else:
+        ptq_policy = qat_policy = precision_lib.get_policy(policy)
     print(f"== {name}: seq {cfg.seq_len} x {cfg.input_vec_size}, "
-          f"{cfg.n_layers} blocks, d={cfg.d_model}, precision {fp} ==")
+          f"{cfg.n_layers} blocks, d={cfg.d_model}, "
+          f"policies {ptq_policy.name}/{qat_policy.name} ==")
     x, y = pdata.GENERATORS[name](1024, seed=0)
     xt, yt = pdata.GENERATORS[name](1024, seed=77)
 
@@ -67,16 +83,21 @@ def main(name: str = "gw"):
     auc_float = auc_of(cfg, params, xt, yt)
     print(f"float model:       loss {loss:.4f}  AUC {auc_float:.4f}")
 
-    ptq = quant.quantize_pytree_fixed(params, fp)
+    ptq = precision_lib.apply_plan_to_params(
+        params, ptq_policy.resolve(cfg.n_layers)
+    )
     auc_ptq = auc_of(cfg, ptq, xt, yt)
-    print(f"PTQ {fp}:   AUC {auc_ptq:.4f}  (ratio {auc_ptq/auc_float:.4f})")
+    print(f"PTQ {ptq_policy.name}:   AUC {auc_ptq:.4f}  "
+          f"(ratio {auc_ptq/auc_float:.4f})")
 
-    qcfg = quant.QuantConfig(mode="qat", weight_cfg=fp, act_cfg=fp)
-    cfg_q = dataclasses.replace(cfg, quant=qcfg)
+    cfg_q = dataclasses.replace(cfg, precision=qat_policy)
     qat_params, _ = train(cfg_q, x, y, 60, params=params, lr=1e-3)
-    qat_eval = quant.quantize_pytree_fixed(qat_params, fp)
+    qat_eval = precision_lib.apply_plan_to_params(
+        qat_params, qat_policy.resolve(cfg.n_layers)
+    )
     auc_qat = auc_of(cfg_q, qat_eval, xt, yt)
-    print(f"QAT {fp}:   AUC {auc_qat:.4f}  (ratio {auc_qat/auc_float:.4f})")
+    print(f"QAT {qat_policy.name}:   AUC {auc_qat:.4f}  "
+          f"(ratio {auc_qat/auc_float:.4f})")
 
     for r in (1, 2, 4):
         est = lat.fpga_style_estimate(
@@ -88,4 +109,12 @@ def main(name: str = "gw"):
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "gw")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("model", nargs="?", default="gw",
+                    choices=["gw", "engine_anomaly", "btagging"])
+    ap.add_argument("--policy", default=None,
+                    help="precision policy overriding the paper-optimal "
+                         "presets (e.g. qat_fixed<10,5>, paper_vu13p, or "
+                         "'auto' for the model's recommended serve_policy)")
+    args = ap.parse_args()
+    main(args.model, policy=args.policy)

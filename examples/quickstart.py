@@ -7,6 +7,8 @@ streaming attention) and compares it against the float model.
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,12 +30,15 @@ def main():
     ds = SyntheticLM(SyntheticLMConfig(
         vocab_size=cfg.vocab_size, seq_len=32, global_batch=8
     ))
+    # fresh workdir per run: a stale checkpoint at total_steps would make
+    # run_training resume-and-return with an empty metrics history
+    workdir = tempfile.mkdtemp(prefix="repro_quickstart_")
     result = run_training(
         cfg,
         TrainConfig(learning_rate=1e-2, warmup_steps=5, total_steps=50,
                     checkpoint_every=25),
         ds.batch,
-        workdir="/tmp/repro_quickstart",
+        workdir=workdir,
     )
     print(f"trained {result.final_step} steps; "
           f"loss {result.metrics_history[0]['loss']:.3f} -> "
@@ -46,7 +51,7 @@ def main():
 
     opt = AdamW(schedule=lambda s: 1e-2)
     template = step_lib.make_train_state(cfg, opt, jax.random.PRNGKey(0))
-    state = Checkpointer("/tmp/repro_quickstart/checkpoints").restore(template)
+    state = Checkpointer(f"{workdir}/checkpoints").restore(template)
     params = state["params"]
 
     prompt = list(np.asarray(ds.batch(999)["tokens"][0, :8]))
@@ -56,8 +61,7 @@ def main():
 
     quant_eng = ServingEngine(
         cfg, params,
-        ServeConfig(max_batch=1, max_seq_len=64, int8_weights=True,
-                    int8_kv_cache=True, lut_softmax=True),
+        ServeConfig(max_batch=1, max_seq_len=64, policy="int8_serve"),
     )
     uid = quant_eng.submit(prompt, 12)
     quant_out = quant_eng.run()[uid].generated

@@ -13,6 +13,7 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import ServeConfig
+from repro.launch.serve import resolve_policy_arg
 from repro.models import lm
 from repro.serve import ServingEngine
 
@@ -24,8 +25,12 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--policy", default=None,
+                    help="precision policy preset (float, int8_serve, "
+                         "paper_vu13p, ptq_fixed<W,I>, qat_fixed<W,I>) or "
+                         "'auto' for the arch's recommended serve_policy")
     ap.add_argument("--quantized", action="store_true",
-                    help="int8 weights + int8 KV cache + LUT softmax")
+                    help="deprecated alias for --policy int8_serve")
     ap.add_argument("--prefill-buckets", type=int, nargs="*", default=None,
                     help="prompt-length buckets (default: powers of two; "
                          "pass with no values for exact-length v1 prefill)")
@@ -41,9 +46,7 @@ def main():
         max_batch=args.max_batch,
         max_seq_len=128,
         temperature=args.temperature,
-        int8_weights=args.quantized,
-        int8_kv_cache=args.quantized,
-        lut_softmax=args.quantized,
+        policy=resolve_policy_arg(args.policy, args.quantized, cfg),
         prefill_buckets=(
             None if args.prefill_buckets is None
             else tuple(args.prefill_buckets)
@@ -53,7 +56,7 @@ def main():
     )
     eng = ServingEngine(cfg, params, serve_cfg)
     print(f"serving {cfg.name} ({lm.count_params(cfg):,} params), "
-          f"max_batch={args.max_batch}, quantized={args.quantized}, "
+          f"max_batch={args.max_batch}, policy={eng.policy.name}, "
           f"buckets={eng.prefill_buckets or 'exact'}, "
           f"decode_steps={serve_cfg.decode_steps}")
 

@@ -3,8 +3,10 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Literal
 
+from repro.core.precision import PrecisionPolicy, from_legacy_flags, get_policy
 from repro.core.quant import QuantConfig
 
 
@@ -90,7 +92,14 @@ class ModelConfig:
     logit_scale: float = 1.0
     norm_eps: float = 1e-5
     dtype: str = "bfloat16"
+    # legacy per-model quantization knobs; lowered onto `precision` when set
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    # declarative per-layer precision: a PrecisionPolicy or preset name
+    # (core/precision.py); None = fall back to the legacy `quant` shim
+    precision: PrecisionPolicy | str | None = None
+    # recommended serving preset for this arch (`--policy auto` in the
+    # launchers resolves to this)
+    serve_policy: str = "float"
     # paper-style extras (physics models)
     input_vec_size: int = 0  # continuous-input models (paper's three)
     seq_len: int = 0  # fixed seq for physics models
@@ -221,6 +230,12 @@ class ServeConfig:
     max_batch: int = 8
     max_seq_len: int = 1024
     temperature: float = 0.0
+    # Declarative serving precision: a PrecisionPolicy, a preset name
+    # ("int8_serve", "paper_vu13p", "qat_fixed<12,6>", ...), or None.
+    policy: PrecisionPolicy | str | None = None
+    # DEPRECATED: the old boolean triple.  Still honored — lowered onto an
+    # equivalent policy by resolved_policy() with a DeprecationWarning —
+    # but `policy` is the single source of truth going forward.
     int8_weights: bool = False
     int8_kv_cache: bool = False
     lut_softmax: bool = False
@@ -235,6 +250,33 @@ class ServeConfig:
     # Max prompts admitted (prefilled) per engine step; 0 = fill every
     # free slot (v1 behavior).
     max_prefill_per_step: int = 0
+
+    def resolved_policy(self) -> PrecisionPolicy | None:
+        """The serving precision policy: explicit `policy` wins; otherwise
+        the deprecated boolean triple is lowered onto an equivalent policy
+        (with a one-cycle DeprecationWarning); None when nothing is set."""
+        legacy_set = self.int8_weights or self.int8_kv_cache or self.lut_softmax
+        if self.policy is not None:
+            if legacy_set:
+                raise ValueError(
+                    "ServeConfig: set either `policy` or the legacy "
+                    "int8_weights/int8_kv_cache/lut_softmax flags, not both"
+                )
+            return get_policy(self.policy)
+        if legacy_set:
+            warnings.warn(
+                "ServeConfig.int8_weights/int8_kv_cache/lut_softmax are "
+                "deprecated; use ServeConfig(policy='int8_serve') or a "
+                "custom PrecisionPolicy (core/precision.py)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            return from_legacy_flags(
+                int8_weights=self.int8_weights,
+                int8_kv_cache=self.int8_kv_cache,
+                lut_softmax=self.lut_softmax,
+            )
+        return None
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """Prefill buckets, ascending.  Auto mode: powers of two in

@@ -27,6 +27,7 @@ def config() -> ModelConfig:
         rope_theta=500_000.0,
         moe=MoEConfig(n_experts=16, top_k=4, d_expert=10752),
         tie_embeddings=False,
+        serve_policy="int8_serve",
     )
 
 

@@ -24,6 +24,7 @@ def config() -> ModelConfig:
         gated_mlp=True,
         rope_theta=10000.0,
         tie_embeddings=True,
+        serve_policy="int8_serve",
     )
 
 

@@ -28,6 +28,7 @@ def config() -> ModelConfig:
         rope_theta=10000.0,
         moe=MoEConfig(n_experts=40, top_k=8, d_expert=512),
         tie_embeddings=True,
+        serve_policy="int8_serve",
     )
 
 

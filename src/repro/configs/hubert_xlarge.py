@@ -35,6 +35,7 @@ def config() -> ModelConfig:
         frontend_dim=512,
         is_encoder=True,
         tie_embeddings=False,
+        serve_policy="int8_serve",
     )
 
 

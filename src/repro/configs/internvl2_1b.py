@@ -31,6 +31,7 @@ def config() -> ModelConfig:
         frontend_dim=1024,
         n_frontend_tokens=256,
         tie_embeddings=True,
+        serve_policy="int8_serve",
     )
 
 

@@ -27,6 +27,7 @@ def config() -> ModelConfig:
         gated_mlp=False,
         ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk_size=64),
         tie_embeddings=True,
+        serve_policy="int8_serve",
     )
 
 

@@ -37,6 +37,7 @@ def config() -> ModelConfig:
         emb_scale=12.0,
         residual_scale=1.4 / (62 ** 0.5),
         logit_scale=256.0 / 2560.0,
+        serve_policy="int8_serve",
     )
 
 

@@ -29,6 +29,7 @@ def config() -> ModelConfig:
         emb_scale=12.0,
         residual_scale=1.4 / (40 ** 0.5),
         logit_scale=256.0 / 2304.0,
+        serve_policy="int8_serve",
     )
 
 

@@ -39,6 +39,7 @@ def _physics(name, seq, in_vec, blocks, d, n_classes, norm) -> ModelConfig:
         n_classes=n_classes,
         pool="mean",
         dtype="float32",
+        serve_policy="paper_vu13p",
     )
 
 

@@ -30,6 +30,7 @@ def config() -> ModelConfig:
         attn_bias=True,
         mlp_bias=True,
         tie_embeddings=False,
+        serve_policy="int8_serve",
     )
 
 

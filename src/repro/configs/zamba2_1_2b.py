@@ -30,6 +30,7 @@ def config() -> ModelConfig:
         ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk_size=64),
         hybrid=HybridConfig(attn_every=6, concat_residual=True),
         tie_embeddings=True,
+        serve_policy="int8_serve",
     )
 
 

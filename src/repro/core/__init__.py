@@ -5,6 +5,7 @@ Inference on FPGAs for Physics Applications with hls4ml* (2024):
 
 * ``fixed_point``   — ap_fixed<W,I> semantics (fidelity path, QAT STE)
 * ``quant``         — QAT/PTQ engine + int8 tensors (performance path)
+* ``precision``     — declarative per-layer PrecisionPolicy API (hls4ml-style)
 * ``lut``           — bounded-domain table approximation (exp, 1/x, 1/sqrt)
 * ``softmax``       — the restructured 3-stage softmax (Sec. IV-B)
 * ``layernorm``     — the staged LayerNorm (Sec. IV-C)
@@ -18,6 +19,7 @@ from repro.core import (  # noqa: F401
     latency_model,
     layernorm,
     lut,
+    precision,
     quant,
     reuse,
     softmax,

@@ -193,7 +193,18 @@ def quantize_pytree_int8(params: PyTree, axis: int | None = 0) -> PyTree:
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    """Framework-level quantization selection (configs/*.py reference this)."""
+    """Framework-level quantization selection (configs/*.py reference this).
+
+    .. deprecated::
+        New code should declare precision through
+        ``core.precision.PrecisionPolicy`` (``ModelConfig.precision`` /
+        ``ServeConfig.policy``).  A QuantConfig is lowered onto an
+        equivalent policy via :meth:`to_policy`, so the policy engine is
+        the single source of truth; the ``int8_weights / int8_kv_cache /
+        lut_softmax`` booleans here are no longer read anywhere else.
+        ``maybe_fake_quant_*`` remain as the runtime execution hooks that
+        policy-derived configs also use.
+    """
 
     mode: str = "none"  # none | ptq | qat | int8
     weight_cfg: fxp.FixedPointConfig | None = None
@@ -202,6 +213,12 @@ class QuantConfig:
     int8_weights: bool = False
     int8_kv_cache: bool = False
     lut_softmax: bool = False
+
+    def to_policy(self):
+        """Equivalent ``PrecisionPolicy`` (None when nothing is selected)."""
+        from repro.core import precision
+
+        return precision.from_quant_config(self)
 
     def maybe_fake_quant_act(self, x: jax.Array) -> jax.Array:
         if self.mode == "qat" and self.act_cfg is not None:

@@ -7,14 +7,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import fixed_point as fxp
 from repro.core import lut
 from repro.kernels.layernorm.layernorm import layernorm_pallas
 from repro.kernels.layernorm.ref import layernorm_ref
 
 
+def _snap_output(out: jax.Array, precision) -> jax.Array:
+    """Emit on an ap_fixed grid when a fixed output precision is given
+    (paper Sec. IV-C: the staged norm feeds a fixed-point datapath)."""
+    if precision is None or getattr(precision, "kind", None) != "fixed":
+        return out
+    return fxp.quantize(out, precision.fixed_cfg())
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("use_lut", "rms", "eps", "use_pallas", "interpret"),
+    static_argnames=(
+        "use_lut", "rms", "eps", "use_pallas", "interpret", "precision"
+    ),
 )
 def layernorm(
     x: jax.Array,  # (..., K)
@@ -26,13 +37,15 @@ def layernorm(
     eps: float = 1e-5,
     use_pallas: bool = True,
     interpret: bool = True,
+    precision=None,  # core.precision.Precision (fixed): output grid
 ) -> jax.Array:
     k = x.shape[-1]
     if beta is None:
         beta = jnp.zeros((k,), dtype=jnp.float32)
     if not use_pallas:
-        return layernorm_ref(
-            x, gamma, beta, use_lut=use_lut, rms=rms, eps=eps
+        return _snap_output(
+            layernorm_ref(x, gamma, beta, use_lut=use_lut, rms=rms, eps=eps),
+            precision,
         )
     *lead, _ = x.shape
     rows = 1
@@ -51,4 +64,4 @@ def layernorm(
         eps=eps,
         interpret=interpret,
     )
-    return out.reshape(*lead, k)
+    return _snap_output(out.reshape(*lead, k), precision)

@@ -7,17 +7,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import fixed_point as fxp
 from repro.core import lut
 from repro.kernels.lut_softmax.lut_softmax import lut_softmax_pallas
 from repro.kernels.lut_softmax.ref import lut_softmax_ref
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _snap_output(out: jax.Array, precision) -> jax.Array:
+    """Emit on an ap_fixed grid when a fixed output precision is given
+    (the hardware datapath hands fixed-point rows to the next stage)."""
+    if precision is None or getattr(precision, "kind", None) != "fixed":
+        return out
+    return fxp.quantize(out, precision.fixed_cfg())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_pallas", "interpret", "precision")
+)
 def lut_softmax(
     x: jax.Array,
     *,
     use_pallas: bool = True,
     interpret: bool = True,
+    precision=None,  # core.precision.Precision (fixed): output grid
 ) -> jax.Array:
     """Softmax over the last axis via the paper's 3-stage LUT dataflow.
 
@@ -25,7 +37,7 @@ def lut_softmax(
     Fully-padded rows produce garbage that is sliced away.
     """
     if not use_pallas:
-        return lut_softmax_ref(x)
+        return _snap_output(lut_softmax_ref(x), precision)
 
     *lead, k = x.shape
     rows = 1
@@ -40,4 +52,4 @@ def lut_softmax(
     out = lut_softmax_pallas(
         x2, exp_tab, inv_tab, block_rows=block_rows, interpret=interpret
     )
-    return out.reshape(*lead, k)
+    return _snap_output(out.reshape(*lead, k), precision)

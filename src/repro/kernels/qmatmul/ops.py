@@ -27,7 +27,10 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("reuse_factor", "strategy", "use_pallas", "interpret")
+    jax.jit,
+    static_argnames=(
+        "reuse_factor", "strategy", "use_pallas", "interpret", "precision"
+    ),
 )
 def qmatmul(
     x: jax.Array,  # (M, K) float
@@ -37,18 +40,34 @@ def qmatmul(
     strategy: reuse.Strategy = reuse.Strategy.LATENCY,
     use_pallas: bool = True,
     interpret: bool = True,
+    precision=None,  # core.precision.Precision (int8 kind): bits/granularity
 ) -> jax.Array:
     """Quantize x (per-row) and w (per-col) to int8 and multiply.
 
     The paper's reuse factor R maps to grid_k sequential contraction chunks
-    (``core/reuse.plan_matmul``).
+    (``core/reuse.plan_matmul``).  ``precision`` threads a PrecisionPlan
+    weights entry into the quantizer: ``bits`` selects the code width and
+    ``per_channel=False`` collapses to per-tensor scales.
     """
+    bits = 8
+    per_channel = True
+    if precision is not None:
+        if precision.kind != "int8":
+            raise ValueError(
+                f"qmatmul expects an int8 precision, got {precision}"
+            )
+        bits = precision.bits
+        per_channel = precision.per_channel
     m, k = x.shape
     _, n = w.shape
-    xq = quant.quantize_int8(x, axis=0)  # per-row scales
-    wq = quant.quantize_int8(w, axis=1)  # per-col scales
-    x_scale = xq.scale.reshape(m, 1)
-    w_scale = wq.scale.reshape(1, n)
+    xq = quant.quantize_int8(
+        x, axis=0 if per_channel else None, bits=bits
+    )  # per-row scales
+    wq = quant.quantize_int8(
+        w, axis=1 if per_channel else None, bits=bits
+    )  # per-col scales
+    x_scale = jnp.broadcast_to(xq.scale.reshape(-1, 1), (m, 1))
+    w_scale = jnp.broadcast_to(wq.scale.reshape(1, -1), (1, n))
 
     if not use_pallas:
         return qmatmul_ref(xq.values, wq.values, x_scale, w_scale)

@@ -18,6 +18,19 @@ from repro.models import lm
 from repro.serve import ServingEngine
 
 
+def resolve_policy_arg(policy: str | None, quantized: bool, cfg) -> str | None:
+    """Shared --policy semantics for the serving CLIs: explicit --policy
+    wins; 'auto' resolves to the arch's recommended ``cfg.serve_policy``;
+    the deprecated --quantized maps to the int8_serve preset."""
+    if policy == "auto":
+        return cfg.serve_policy
+    if policy is not None:
+        return policy
+    if quantized:
+        return "int8_serve"
+    return None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -27,7 +40,12 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    help="precision policy: a preset name (float, int8_serve, "
+                         "paper_vu13p, ptq_fixed<W,I>, qat_fixed<W,I>) or "
+                         "'auto' for the arch's recommended serve_policy")
+    ap.add_argument("--quantized", action="store_true",
+                    help="deprecated alias for --policy int8_serve")
     ap.add_argument("--prefill-buckets", type=int, nargs="*", default=None,
                     help="prompt-length buckets (default: powers of two; "
                          "pass with no values for exact-length v1 prefill)")
@@ -38,14 +56,14 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=not args.full_config)
+    policy = resolve_policy_arg(args.policy, args.quantized, cfg)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServingEngine(
         cfg, params,
         ServeConfig(
             max_batch=args.max_batch, max_seq_len=args.max_seq,
             temperature=args.temperature,
-            int8_weights=args.quantized, int8_kv_cache=args.quantized,
-            lut_softmax=args.quantized,
+            policy=policy,
             prefill_buckets=(
                 None if args.prefill_buckets is None
                 else tuple(args.prefill_buckets)
@@ -70,6 +88,7 @@ def main():
           f"({toks/dt:.1f} tok/s host throughput)")
     tel = eng.telemetry
     print(f"telemetry: {tel['tokens_per_s']:.1f} tok/s | "
+          f"policy={eng.policy.name} | "
           f"queue wait mean {tel['queue_wait_s_mean']*1e3:.1f} ms | "
           f"{tel['prefill_compiles']} prefill programs "
           f"(buckets={eng.prefill_buckets or 'exact'}), "

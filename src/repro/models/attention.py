@@ -169,9 +169,10 @@ def gqa_apply(
     mode: str = "train",  # train | prefill | decode
     cache: Cache | None = None,
     kernel: dict | None = None,
+    quant=None,  # per-layer runtime hook from the precision plan
 ) -> tuple[jax.Array, Cache | None]:
     kernel = kernel or {}
-    qc = cfg.quant
+    qc = cfg.quant if quant is None else quant
     hd = cfg.resolved_head_dim
     b, s, _ = x.shape
 
@@ -367,6 +368,7 @@ def mla_apply(
     mode: str = "train",
     cache: Cache | None = None,
     kernel: dict | None = None,
+    quant=None,  # per-layer runtime hook from the precision plan
     absorb: bool = False,
 ) -> tuple[jax.Array, Cache | None]:
     """Multi-head latent attention (DeepSeek-V2 / MiniCPM3).
@@ -379,7 +381,7 @@ def mla_apply(
     kernel = kernel or {}
     absorb = kernel.get("mla_absorb", absorb)
     m = cfg.mla
-    qc = cfg.quant
+    qc = cfg.quant if quant is None else quant
     b, s, _ = x.shape
     h = cfg.n_heads
     nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim

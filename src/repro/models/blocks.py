@@ -51,29 +51,38 @@ def block_apply(
     mode: str = "train",
     cache=None,
     kernel: dict | None = None,
+    quant=None,  # per-layer runtime hook from the precision plan
 ):
     """Returns (x, new_cache, aux)."""
     kind = block_kind(cfg)
     rs = cfg.residual_scale
+    norm_lut = (kernel or {}).get("norm_lut", False)
     aux = {}
     if kind == "mamba":
-        h = layers.norm(params["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        h = layers.norm(
+            params["ln1"], x, cfg.norm_kind, cfg.norm_eps, use_lut=norm_lut
+        )
         out, new_cache = ssm.mamba_apply(
-            params["mamba"], cfg, h, mode=mode, cache=cache
+            params["mamba"], cfg, h, mode=mode, cache=cache, quant=quant
         )
         x = x + rs * out
         return x, new_cache, aux
 
-    h = layers.norm(params["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    h = layers.norm(
+        params["ln1"], x, cfg.norm_kind, cfg.norm_eps, use_lut=norm_lut
+    )
     attn_out, new_cache = attention.attention_apply(
-        params["attn"], cfg, h, positions, mode=mode, cache=cache, kernel=kernel
+        params["attn"], cfg, h, positions, mode=mode, cache=cache,
+        kernel=kernel, quant=quant,
     )
     x = x + rs * attn_out
-    h = layers.norm(params["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    h = layers.norm(
+        params["ln2"], x, cfg.norm_kind, cfg.norm_eps, use_lut=norm_lut
+    )
     if kind == "moe":
         ffn_out, aux = moe.moe_apply(params["ffn"], cfg, h)
     else:
-        ffn_out = mlp.mlp_apply(params["ffn"], cfg, h)
+        ffn_out = mlp.mlp_apply(params["ffn"], cfg, h, quant=quant)
     x = x + rs * ffn_out
     return x, new_cache, aux
 
@@ -133,20 +142,28 @@ def shared_attn_apply(
     mode: str = "train",
     cache=None,
     kernel: dict | None = None,
+    quant=None,  # shared-block runtime hook from the precision plan
 ):
     acfg = shared_attn_cfg(cfg)
     wcfg = dataclasses.replace(acfg, d_model=2 * cfg.d_model)
+    qc = cfg.quant if quant is None else quant
+    norm_lut = (kernel or {}).get("norm_lut", False)
     h = (
         jnp.concatenate([x, x_embed], axis=-1)
         if cfg.hybrid.concat_residual
         else x
     )
-    a = layers.norm(params["ln1"], h, cfg.norm_kind, cfg.norm_eps)
+    a = layers.norm(
+        params["ln1"], h, cfg.norm_kind, cfg.norm_eps, use_lut=norm_lut
+    )
     a, new_cache = attention.gqa_apply(
-        params["attn"], acfg, a, positions, mode=mode, cache=cache, kernel=kernel
+        params["attn"], acfg, a, positions, mode=mode, cache=cache,
+        kernel=kernel, quant=quant,
     )
     h = h + a
-    m = layers.norm(params["ln2"], h, cfg.norm_kind, cfg.norm_eps)
-    h = h + mlp.mlp_apply(params["mlp"], wcfg, m)
-    out = layers.dense(params["out_proj"], h, cfg.quant)
+    m = layers.norm(
+        params["ln2"], h, cfg.norm_kind, cfg.norm_eps, use_lut=norm_lut
+    )
+    h = h + mlp.mlp_apply(params["mlp"], wcfg, m, quant=quant)
+    out = layers.dense(params["out_proj"], h, qc)
     return x + cfg.residual_scale * out, new_cache

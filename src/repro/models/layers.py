@@ -54,18 +54,27 @@ def norm_spec(d: int, kind: str, dtype=jnp.float32):
     return spec
 
 
-def norm(params, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+def norm(
+    params, x: jax.Array, kind: str, eps: float = 1e-5,
+    use_lut: bool = False,
+) -> jax.Array:
+    """``use_lut`` selects the paper's staged 1/sqrt-LUT datapath
+    (Sec. IV-C) — enabled by a PrecisionPlan norm rule via the kernel
+    dict (``norm_lut``)."""
     if kind == "none":
         return x
     xf = x.astype(jnp.float32)
     if kind == "rmsnorm":
-        out = ln_core.rmsnorm(xf, params["scale"].astype(jnp.float32), eps=eps)
+        out = ln_core.rmsnorm(
+            xf, params["scale"].astype(jnp.float32), eps=eps, use_lut=use_lut
+        )
     elif kind == "layernorm":
         out = ln_core.layernorm_paper(
             xf,
             params["scale"].astype(jnp.float32),
             params["bias"].astype(jnp.float32),
             eps=eps,
+            use_lut=use_lut,
         )
     else:
         raise ValueError(f"unknown norm kind {kind}")

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import precision as precision_lib
 from repro.models import attention, blocks, layers, ssm
 from repro.models import params as params_lib
 
@@ -165,21 +166,22 @@ def cache_logical_axes(cfg: ModelConfig, quantized: bool = False) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
-def _embed_inputs(params, cfg: ModelConfig, batch: dict, mode: str):
+def _embed_inputs(params, cfg: ModelConfig, batch: dict, mode: str, quant=None):
     """Returns (h, text_offset).  ``batch`` keys by family:
 
     LM: tokens (b, s).  VLM: patches (b, n_img, fd) + tokens (b, s_text)
     (decode: tokens only).  Audio: frames (b, s, fd).
     """
+    qc = cfg.quant if quant is None else quant
     if cfg.frontend == "audio":
-        h = layers.dense(params["frontend_proj"], batch["frames"], cfg.quant)
+        h = layers.dense(params["frontend_proj"], batch["frames"], qc)
         return h, 0
     tok_emb = None
     if "tokens" in batch:
         tok_emb = layers.embed(params["embed"], batch["tokens"]) * cfg.emb_scale
     if cfg.frontend == "patch" and "patches" in batch and mode != "decode":
         patch_emb = layers.dense(
-            params["frontend_proj"], batch["patches"], cfg.quant
+            params["frontend_proj"], batch["patches"], qc
         )
         if tok_emb is not None:
             h = jnp.concatenate([patch_emb, tok_emb], axis=1)
@@ -244,6 +246,7 @@ def _run_blocks(
     caches: PyTree | None,
     kernel: dict | None,
     remat: str = "none",
+    plan: precision_lib.PrecisionPlan | None = None,
 ):
     h = _constrain_acts(h, kernel)
     x_embed = h
@@ -251,9 +254,20 @@ def _run_blocks(
     shared_cache = caches.get("shared") if caches is not None else None
     aux0 = _aux_init(cfg)
 
+    plan = plan if plan is not None else precision_lib.resolve_model_plan(cfg)
+    # Homogeneous plans keep the legacy single-QuantConfig trace; per-layer
+    # heterogeneous plans ride the scan xs as stacked step/bound scalars
+    # (one traced body either way — no extra jit programs).
+    uniform_quant = plan.uniform_layer_quant()
+    shared_quant = plan.shared_quant() if cfg.family == "hybrid" else None
+    layer_quants = (
+        None if uniform_quant is not None else plan.layer_quant_arrays()
+    )
+
     def body(carry, xs):
         x, shared_c, aux = carry
-        bparams, lcache, idx = xs
+        bparams, lcache, idx, *rest = xs
+        lquant = rest[0] if rest else uniform_quant
         if cfg.family == "hybrid":
             is_attn = (idx % cfg.hybrid.attn_every) == 0
             app_idx = idx // cfg.hybrid.attn_every
@@ -263,7 +277,7 @@ def _run_blocks(
                 c = _tree_index(sc, app_idx) if sc is not None else None
                 x_out, new_c = blocks.shared_attn_apply(
                     params["shared_attn"], cfg, x_in, x_embed, positions,
-                    mode=mode, cache=c, kernel=kernel,
+                    mode=mode, cache=c, kernel=kernel, quant=shared_quant,
                 )
                 sc_out = (
                     _tree_update(sc, new_c, app_idx) if sc is not None else sc
@@ -274,7 +288,8 @@ def _run_blocks(
                 is_attn, do_attn, lambda op: op, (x, shared_c)
             )
         x, new_lcache, l_aux = blocks.block_apply(
-            bparams, cfg, x, positions, mode=mode, cache=lcache, kernel=kernel
+            bparams, cfg, x, positions, mode=mode, cache=lcache,
+            kernel=kernel, quant=lquant,
         )
         x = _constrain_acts(x, kernel)
         aux = {k: aux[k] + l_aux.get(k, 0.0) for k in aux}
@@ -290,6 +305,8 @@ def _run_blocks(
         )
 
     xs = (params["blocks"], layer_caches, jnp.arange(cfg.n_layers))
+    if layer_quants is not None:
+        xs = xs + (layer_quants,)
     (x, shared_cache, aux), new_layer_caches = jax.lax.scan(
         body, (h, shared_cache, aux0), xs
     )
@@ -317,20 +334,27 @@ def forward(
     positions: (S,) for train/prefill (defaults to arange), (B,) global
     positions of the new token for decode.
     """
-    h, text_offset = _embed_inputs(params, cfg, batch, mode)
+    plan = precision_lib.resolve_model_plan(cfg)
+    kernel = plan.kernel_defaults(kernel)
+    h, text_offset = _embed_inputs(
+        params, cfg, batch, mode, quant=plan.embed_quant()
+    )
     if positions is None:
         if mode == "decode":
             raise ValueError("decode requires explicit per-sequence positions")
         positions = jnp.arange(h.shape[1], dtype=jnp.int32)
     x, new_caches, aux = _run_blocks(
         params, cfg, h, positions,
-        mode=mode, caches=caches, kernel=kernel, remat=remat,
+        mode=mode, caches=caches, kernel=kernel, remat=remat, plan=plan,
     )
-    x = layers.norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    x = layers.norm(
+        params["final_norm"], x, cfg.norm_kind, cfg.norm_eps,
+        use_lut=(kernel or {}).get("norm_lut", False),
+    )
     if cfg.tie_embeddings:
         logits = layers.unembed(params["embed"], x)
     else:
-        logits = layers.dense(params["lm_head"], x, cfg.quant)
+        logits = layers.dense(params["lm_head"], x, plan.logits_quant())
     logits = logits * cfg.logit_scale
     # mask vocab padding
     pad = cfg.padded_vocab_size - cfg.vocab_size

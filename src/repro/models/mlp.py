@@ -23,8 +23,10 @@ def mlp_spec(cfg: ModelConfig, dtype=jnp.float32, d_ff: int | None = None):
     return spec
 
 
-def mlp_apply(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    qc = cfg.quant
+def mlp_apply(
+    params, cfg: ModelConfig, x: jax.Array, quant=None
+) -> jax.Array:
+    qc = cfg.quant if quant is None else quant
     up = layers.dense(params["w_up"], x, qc)
     if cfg.gated_mlp:
         gate = layers.dense(params["w_gate"], x, qc)

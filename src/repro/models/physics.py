@@ -10,9 +10,10 @@ Structure per the paper: input projection -> learned positional embedding ->
 N transformer blocks (MHA + FFN, residual connections; the engine model
 "forgoes the normalization layer") -> pooling -> two dense layers -> output.
 
-These run through the same quantization machinery as the big LMs
-(QAT fake-quant via cfg.quant, PTQ via core.quant.quantize_pytree_fixed)
-and feed the AUC-ratio-vs-bits benchmark (paper Figs. 9-11).
+These run through the same precision machinery as the big LMs
+(``cfg.precision`` PrecisionPolicy with the legacy ``cfg.quant`` shim;
+offline PTQ/int8 via ``core.precision.apply_plan_to_params``) and feed
+the AUC-ratio-vs-bits policy-grid benchmark (paper Figs. 9-11).
 """
 
 from __future__ import annotations
@@ -21,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import precision as precision_lib
 from repro.models import blocks, layers
 from repro.models import params as params_lib
 from repro.models.params import ArraySpec
@@ -56,24 +58,40 @@ def forward(
     params, cfg: ModelConfig, x: jax.Array, *, kernel: dict | None = None
 ) -> jax.Array:
     """x: (batch, seq_len, input_vec_size) -> logits (batch, n_classes)."""
-    qc = cfg.quant
-    h = layers.dense(params["input_proj"], x, qc)
+    plan = precision_lib.resolve_model_plan(cfg)
+    kernel = plan.kernel_defaults(kernel)
+    h = layers.dense(params["input_proj"], x, plan.embed_quant())
     h = h + params["pos_embed"]
     positions = jnp.arange(cfg.seq_len, dtype=jnp.int32)
 
-    def body(carry, bparams):
+    uniform_quant = plan.uniform_layer_quant()
+    layer_quants = (
+        None if uniform_quant is not None else plan.layer_quant_arrays()
+    )
+
+    def body(carry, xs):
         hh = carry
+        bparams, *rest = xs
+        lquant = rest[0] if rest else uniform_quant
         hh, _, _ = blocks.block_apply(
-            bparams, cfg, hh, positions, mode="train", cache=None, kernel=kernel
+            bparams, cfg, hh, positions, mode="train", cache=None,
+            kernel=kernel, quant=lquant,
         )
         return hh, None
 
-    h, _ = jax.lax.scan(body, h, params["blocks"])
+    xs = (params["blocks"],)
+    if layer_quants is not None:
+        xs = xs + (layer_quants,)
+    h, _ = jax.lax.scan(body, h, xs)
     if cfg.norm_kind != "none":
-        h = layers.norm(params["final_norm"], h, cfg.norm_kind, cfg.norm_eps)
+        h = layers.norm(
+            params["final_norm"], h, cfg.norm_kind, cfg.norm_eps,
+            use_lut=(kernel or {}).get("norm_lut", False),
+        )
     h = jnp.mean(h, axis=1)  # pool over time
-    h = jax.nn.relu(layers.dense(params["head1"], h, qc))
-    return layers.dense(params["head2"], h, qc)
+    qc_head = plan.logits_quant()
+    h = jax.nn.relu(layers.dense(params["head1"], h, qc_head))
+    return layers.dense(params["head2"], h, qc_head)
 
 
 def predict_proba(params, cfg: ModelConfig, x: jax.Array, **kw) -> jax.Array:

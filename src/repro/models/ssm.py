@@ -225,9 +225,10 @@ def mamba_apply(
     *,
     mode: str = "train",
     cache: dict | None = None,
+    quant=None,  # per-layer runtime hook from the precision plan
 ) -> tuple[jax.Array, dict | None]:
     s = cfg.ssm
-    qc = cfg.quant
+    qc = cfg.quant if quant is None else quant
     b, l, d = x.shape
     di = s.d_inner(d)
     h = s.n_heads(d)

@@ -17,6 +17,10 @@ datacenter-scale counterpart and inherits that discipline:
   position and stop emitting mid-scan.
 * **Telemetry** — tokens/s, queue wait, and prefill/decode compile
   counters exposed from ``step()``/``run()``.
+* **Precision policy** — ``ServeConfig.policy`` (a ``core.precision``
+  PrecisionPolicy / preset name) selects the quantized datapath: offline
+  weight transforms, KV-cache dtype, LUT softmax, and any runtime
+  fake-quant — all without adding jit programs beyond the float baseline.
 
 Families whose caches are not safely right-paddable (SSM/hybrid state,
 rolling sliding-window buffers) transparently fall back to exact-length
@@ -37,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.core import quant
+from repro.core import precision as precision_lib
 from repro.models import lm
 from repro.serve.sampling import sample
 
@@ -88,7 +92,6 @@ class ServingEngine:
         kernel: dict | None = None,
         seed: int = 0,
     ):
-        self.cfg = cfg
         self.serve_cfg = serve_cfg or ServeConfig()
         if self.serve_cfg.decode_steps < 1:
             raise ValueError(
@@ -99,19 +102,34 @@ class ServingEngine:
                 "max_prefill_per_step must be >= 0 (0 = fill all free slots)"
             )
         self.kernel = kernel or {}
-        if self.serve_cfg.lut_softmax:
-            self.kernel.setdefault("softmax_mode", "lut")
         self.key = jax.random.PRNGKey(seed)
 
-        if self.serve_cfg.int8_weights:
-            # PTQ int8 numerics on weights (quantize-dequantize; the true
-            # int8 GEMM path is kernels/qmatmul on TPU)
-            params = self._int8_params(params)
-        self.params = params
+        # Precision: one declarative policy governs weights (offline PTQ /
+        # int8 quantize-dequantize; the true int8 GEMM path is
+        # kernels/qmatmul on TPU), the KV-cache dtype, the softmax kernel
+        # mode, and any runtime fake-quant the model applies in-graph.
+        # ServeConfig.policy wins (legacy booleans lower onto it with a
+        # DeprecationWarning); otherwise the model's own policy applies.
+        policy = self.serve_cfg.resolved_policy()
+        if policy is not None:
+            cfg = dataclasses.replace(cfg, precision=policy)
+        else:
+            policy = precision_lib.model_policy(cfg)
+        self.cfg = cfg
+        self.policy = policy
+        self.plan = policy.resolve(cfg.n_layers)
+        self.kernel = self.plan.kernel_defaults(self.kernel) or {}
+        self.params = precision_lib.apply_plan_to_params(params, self.plan)
 
+        if self.plan.int8_kv_cache and self.plan.kv_cache.bits != 8:
+            raise NotImplementedError(
+                "the KV cache implements 8-bit per-token quantization only; "
+                f"policy {self.policy.name!r} asks for "
+                f"{self.plan.kv_cache.bits}-bit"
+            )
         sc = self.serve_cfg
         self.quant_cache = bool(
-            sc.int8_kv_cache
+            self.plan.int8_kv_cache
             and cfg.attn_kind in ("gqa", "mla")
             and cfg.family not in ("ssm", "hybrid")
         )
@@ -158,21 +176,6 @@ class ServingEngine:
         }
 
     # ------------------------------------------------------------- utils --
-    @staticmethod
-    def _int8_params(params: PyTree) -> PyTree:
-        def _q(leaf):
-            if (
-                isinstance(leaf, jax.Array)
-                and jnp.issubdtype(leaf.dtype, jnp.floating)
-                and leaf.ndim >= 2
-            ):
-                return quant.quantize_int8(leaf, axis=leaf.ndim - 1).dequantize(
-                    leaf.dtype
-                )
-            return leaf
-
-        return jax.tree.map(_q, params)
-
     @property
     def prefill_buckets(self) -> tuple[int, ...]:
         """Active buckets; empty for exact-length (v1-style) prefill."""

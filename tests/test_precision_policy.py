@@ -1,0 +1,402 @@
+"""PrecisionPolicy API tests: preset round-trips across the zoo, pattern
+resolution, legacy-flag lowering, numerical parity of int8/LUT policies on
+a physics model, heterogeneous per-layer plans, and the bounded-compile
+discipline (a quantized policy adds no jit programs in the engine)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ServeConfig
+from repro.core import fixed_point as fxp
+from repro.core import precision as P
+from repro.core import quant
+from repro.models import lm
+from repro.models import physics as pmodel
+from repro.serve import ServingEngine
+
+KEY = jax.random.PRNGKey(3)
+
+PRESET_NAMES = [
+    "float", "int8_serve", "paper_vu13p",
+    "ptq_fixed<12,6>", "qat_fixed<12,6>", "qat_fixed<8,4>",
+]
+ALL_CONFIG_NAMES = configs.ARCH_NAMES + configs.PHYSICS_NAMES
+
+
+# ---------------------------------------------------------------------------
+# Serialization round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("preset", PRESET_NAMES)
+def test_preset_dict_roundtrip(preset):
+    policy = P.get_policy(preset)
+    assert P.PrecisionPolicy.from_dict(policy.to_dict()) == policy
+
+
+@pytest.mark.parametrize("preset", PRESET_NAMES)
+@pytest.mark.parametrize("name", ALL_CONFIG_NAMES)
+def test_preset_resolution_roundtrips_across_zoo(preset, name):
+    """Every preset x every zoo/physics config: the resolved plan survives
+    a to_dict/from_dict round-trip of its policy unchanged."""
+    cfg = configs.get_config(name, reduced=name in configs.ARCH_NAMES)
+    policy = P.get_policy(preset)
+    plan = policy.resolve(cfg)
+    plan2 = P.PrecisionPolicy.from_dict(policy.to_dict()).resolve(cfg)
+    assert plan.layers == plan2.layers
+    assert plan.kv_cache == plan2.kv_cache
+    assert plan.embed == plan2.embed
+    assert plan.logits == plan2.logits
+    assert plan.accum == plan2.accum
+    assert len(plan.layers) == cfg.n_layers
+
+
+def test_precision_literal_parsing():
+    assert P.parse_precision("float") == P.FLOAT
+    assert P.parse_precision("int8") == P.int8(per_channel=True)
+    assert P.parse_precision("int8_pertensor") == P.int8(per_channel=False)
+    assert P.parse_precision("lut8") == P.lut8()
+    fp = P.parse_precision("qat_fixed<12,6>")
+    assert fp.kind == "fixed" and fp.method == "qat"
+    assert fp.fixed_cfg() == fxp.ap_fixed(12, 6)
+    with pytest.raises(ValueError):
+        P.parse_precision("int4_nonsense")
+
+
+# ---------------------------------------------------------------------------
+# Pattern resolution
+# ---------------------------------------------------------------------------
+
+
+def test_rule_order_last_match_wins():
+    policy = P.PrecisionPolicy("t", (
+        P.Rule("*.weights", P.fixed(12, 6)),
+        P.Rule("layers.0.weights", P.FLOAT),
+        P.Rule("layers.1.weights", P.int8()),
+    ))
+    plan = policy.resolve(3)
+    assert plan.layers[0].weights == P.FLOAT
+    assert plan.layers[1].weights == P.int8()
+    assert plan.layers[2].weights == P.fixed(12, 6)
+    assert plan.logits.weights == P.fixed(12, 6)
+    assert plan.embed.weights == P.fixed(12, 6)
+    assert plan.uniform_layer_quant() is None  # heterogeneous
+
+
+def test_softmax_and_kv_patterns():
+    policy = P.PrecisionPolicy("t", (
+        P.Rule("layers.*.attn.softmax", P.lut8()),
+        P.Rule("kv_cache", P.int8(per_channel=False)),
+    ))
+    plan = policy.resolve(2)
+    assert plan.lut_softmax and plan.softmax_mode() == "lut"
+    assert plan.int8_kv_cache
+    assert not plan.int8_weights
+    assert not plan.transforms_params
+
+
+def test_mixed_per_layer_softmax_rejected():
+    policy = P.PrecisionPolicy("t", (
+        P.Rule("layers.0.attn.softmax", P.lut8()),
+    ))
+    plan = policy.resolve(2)
+    with pytest.raises(ValueError, match="uniform softmax"):
+        plan.softmax_mode()
+
+
+def test_invalid_slot_kind_rejected():
+    policy = P.PrecisionPolicy("t", (P.Rule("kv_cache", P.lut8()),))
+    with pytest.raises(ValueError, match="not valid"):
+        policy.resolve(1)
+
+
+def test_unknown_policy_name():
+    with pytest.raises(KeyError):
+        P.get_policy("no_such_policy")
+
+
+# ---------------------------------------------------------------------------
+# Legacy lowering (deprecation shims, single source of truth)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_config_legacy_flags_lower_with_deprecation():
+    sc = ServeConfig(int8_weights=True, int8_kv_cache=True, lut_softmax=True)
+    with pytest.deprecated_call():
+        policy = sc.resolved_policy()
+    plan = policy.resolve(2)
+    assert plan.int8_weights and plan.int8_kv_cache and plan.lut_softmax
+    # the lowered rules are exactly the int8_serve preset's
+    assert policy.rules == P.get_policy("int8_serve").rules
+
+
+def test_serve_config_policy_and_flags_conflict():
+    sc = ServeConfig(policy="int8_serve", int8_kv_cache=True)
+    with pytest.raises(ValueError, match="not both"):
+        sc.resolved_policy()
+
+
+def test_serve_config_no_policy_is_none():
+    assert ServeConfig().resolved_policy() is None
+
+
+def test_quant_config_delegates_to_policy():
+    """QuantConfig flags flow through the same policy engine (no more
+    silent divergence between QuantConfig and ServeConfig flags)."""
+    qc = quant.QuantConfig(lut_softmax=True, int8_kv_cache=True)
+    policy = qc.to_policy()
+    plan = policy.resolve(2)
+    assert plan.lut_softmax and plan.int8_kv_cache
+    fp = fxp.ap_fixed(12, 6)
+    qc2 = quant.QuantConfig(mode="qat", weight_cfg=fp, act_cfg=fp)
+    plan2 = qc2.to_policy().resolve(3)
+    assert plan2.uniform_layer_quant() == qc2
+    assert quant.QuantConfig().to_policy() is None
+
+
+def test_model_policy_precedence():
+    cfg = configs.get_config("granite-8b", reduced=True)
+    assert P.model_policy(cfg).name == "float"
+    cfg_q = dataclasses.replace(
+        cfg, quant=quant.QuantConfig(int8_weights=True)
+    )
+    assert P.model_policy(cfg_q).name == "legacy_quant_config"
+    cfg_p = dataclasses.replace(cfg_q, precision="paper_vu13p")
+    assert P.model_policy(cfg_p).name == "paper_vu13p"  # explicit wins
+
+
+# ---------------------------------------------------------------------------
+# Parameter transforms
+# ---------------------------------------------------------------------------
+
+
+def test_apply_plan_matches_quantize_pytree_fixed():
+    """The ptq_fixed<W,I> policy grid reproduces the legacy whole-tree
+    snap exactly (the Figs. 9-11 sweep protocol)."""
+    cfg = configs.get_config("btagging")
+    params = pmodel.init_params(cfg, KEY)
+    fp = fxp.ap_fixed(12, 6)
+    legacy = quant.quantize_pytree_fixed(params, fp)
+    plan = P.get_policy("ptq_fixed<12,6>").resolve(cfg.n_layers)
+    new = P.apply_plan_to_params(params, plan)
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_apply_plan_int8_skips_vectors():
+    plan = P.get_policy("int8_serve").resolve(2)
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(2, 4, 4)), jnp.float32)
+    # a bias stacked over layers is (n_layers, d): per-layer it is 1-D and
+    # must stay float even though the stacked leaf has ndim >= 2
+    b = jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)
+    scale = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+    params = {"blocks": {"w": w, "b": b}, "final_norm": {"scale": scale}}
+    out = P.apply_plan_to_params(params, plan)
+    assert not np.array_equal(np.asarray(out["blocks"]["w"]), np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(out["blocks"]["b"]), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(out["final_norm"]["scale"]), np.asarray(scale)
+    )
+
+
+def test_apply_plan_heterogeneous_blocks():
+    """Per-layer weight rules hit only their layer of the stacked tree."""
+    policy = P.PrecisionPolicy("t", (
+        P.Rule("layers.0.weights", P.fixed(6, 3)),
+    ))
+    plan = policy.resolve(2)
+    leaf = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 8)),
+                       jnp.float32)
+    out = P.apply_plan_to_params({"blocks": {"w": leaf}}, plan)["blocks"]["w"]
+    snapped = fxp.quantize(leaf[0], fxp.ap_fixed(6, 3))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(snapped))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(leaf[1]))
+
+
+# ---------------------------------------------------------------------------
+# Numerical parity on a physics model
+# ---------------------------------------------------------------------------
+
+
+def _physics_setup(name="gw", n=64):
+    cfg = configs.get_config(name)
+    params = pmodel.init_params(cfg, KEY)
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(n, cfg.seq_len,
+                                              cfg.input_vec_size)),
+        jnp.float32,
+    )
+    return cfg, params, x
+
+
+@pytest.mark.parametrize("preset", ["int8_serve", "paper_vu13p"])
+def test_policy_numerical_parity_physics(preset):
+    """int8 / LUT / fixed policies track the float reference closely on
+    the paper's GW model (probabilities within a few percent)."""
+    cfg, params, x = _physics_setup()
+    ref = np.asarray(pmodel.predict_proba(params, cfg, x))
+    policy = P.get_policy(preset)
+    cfg_q = dataclasses.replace(cfg, precision=policy)
+    params_q = P.apply_plan_to_params(params, policy.resolve(cfg.n_layers))
+    out = np.asarray(pmodel.predict_proba(params_q, cfg_q, x))
+    assert np.isfinite(out).all()
+    assert float(np.max(np.abs(out - ref))) < 0.1
+    assert float(np.mean(np.abs(out - ref))) < 0.03
+
+
+def test_norm_lut_rule_engages_staged_datapath():
+    """A layers.*.norm lut rule actually switches the norm onto the
+    staged 1/sqrt-LUT path (not a silent no-op)."""
+    cfg, params, x = _physics_setup("gw", n=8)  # gw uses layernorm
+    pol = P.PrecisionPolicy("nl", (P.Rule("layers.*.norm", P.lut8()),))
+    assert pol.resolve(cfg.n_layers).norm_mode() == "lut"
+    out_f = np.asarray(pmodel.forward(params, cfg, x))
+    out_l = np.asarray(pmodel.forward(
+        params, dataclasses.replace(cfg, precision=pol), x
+    ))
+    assert np.isfinite(out_l).all()
+    assert not np.array_equal(out_f, out_l)
+    assert float(np.max(np.abs(out_f - out_l))) < 0.5  # approximation, not garbage
+
+
+def test_mixed_per_layer_norm_rejected():
+    pol = P.PrecisionPolicy("t", (P.Rule("layers.0.norm", P.lut8()),))
+    with pytest.raises(ValueError, match="uniform norm"):
+        pol.resolve(2).norm_mode()
+
+
+def test_engine_rejects_unsupported_kv_bits():
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    pol = P.PrecisionPolicy("kv4", (P.Rule("kv_cache", P.int8(bits=4)),))
+    with pytest.raises(NotImplementedError, match="8-bit"):
+        ServingEngine(cfg, params, ServeConfig(max_batch=1, max_seq_len=32,
+                                               policy=pol))
+
+
+def test_heterogeneous_layer_policy_forward():
+    """A per-layer mixed fixed/float policy runs through the single scan
+    body and actually changes layer-0 numerics only."""
+    cfg, params, x = _physics_setup("btagging", n=8)
+    coarse0 = P.PrecisionPolicy("h0", (
+        P.Rule("layers.0.weights", P.fixed(6, 3, method="qat")),
+        P.Rule("layers.0.activations", P.fixed(6, 3)),
+    ))
+    uniform = P.PrecisionPolicy("hu", (
+        P.Rule("layers.*.weights", P.fixed(6, 3, method="qat")),
+        P.Rule("layers.*.activations", P.fixed(6, 3)),
+    ))
+    out_f = np.asarray(pmodel.forward(params, cfg, x))
+    out_h = np.asarray(pmodel.forward(
+        params, dataclasses.replace(cfg, precision=coarse0), x
+    ))
+    out_u = np.asarray(pmodel.forward(
+        params, dataclasses.replace(cfg, precision=uniform), x
+    ))
+    assert not np.array_equal(out_f, out_h)  # layer-0 quant bites
+    assert not np.array_equal(out_h, out_u)  # but layers 1-2 stay float
+
+
+def test_heterogeneous_fake_quant_matches_scalar_path():
+    """The traced (array-step) fake-quant matches fixed_point.quantize_ste
+    whenever the step is active, and is the identity when step == 0."""
+    cfg6 = fxp.ap_fixed(6, 3)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64,)) * 5,
+                    jnp.float32)
+    arr = P._fake_quant_traced(
+        x, jnp.float32(cfg6.step), jnp.float32(cfg6.min_value),
+        jnp.float32(cfg6.max_value),
+    )
+    np.testing.assert_allclose(
+        np.asarray(arr), np.asarray(fxp.quantize_ste(x, cfg6)), rtol=1e-6
+    )
+    ident = P._fake_quant_traced(
+        x, jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)
+    )
+    np.testing.assert_array_equal(np.asarray(ident), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Serving engine integration
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(cfg, params, serve_cfg, prompts=((5, 9, 3), (1, 2, 3, 4))):
+    eng = ServingEngine(cfg, params, serve_cfg)
+    uids = [eng.submit(list(p), 5) for p in prompts]
+    res = eng.run()
+    return eng, [res[u].generated for u in uids]
+
+
+def test_engine_policy_adds_no_jit_programs():
+    """Bounded-compile discipline: an int8/LUT policy leaves the prefill/
+    decode compile counters exactly where the float baseline has them."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    base = ServeConfig(max_batch=2, max_seq_len=64)
+    eng_f, _ = _run_engine(cfg, params, base)
+    eng_q, _ = _run_engine(
+        cfg, params, dataclasses.replace(base, policy="int8_serve")
+    )
+    assert (
+        eng_q.telemetry["prefill_compiles"]
+        == eng_f.telemetry["prefill_compiles"]
+    )
+    assert (
+        eng_q.telemetry["decode_compiles"]
+        == eng_f.telemetry["decode_compiles"]
+    )
+
+
+def test_engine_policy_matches_legacy_flags():
+    """policy='int8_serve' generates exactly what the deprecated boolean
+    triple generated (the shim lowers onto identical rules)."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    with pytest.deprecated_call():
+        _, legacy = _run_engine(
+            cfg, params,
+            ServeConfig(max_batch=2, max_seq_len=64, int8_weights=True,
+                        int8_kv_cache=True, lut_softmax=True),
+        )
+    _, modern = _run_engine(
+        cfg, params,
+        ServeConfig(max_batch=2, max_seq_len=64, policy="int8_serve"),
+    )
+    assert legacy == modern
+
+
+def test_engine_auto_policy_from_model_config():
+    """With no serving policy, the model's own precision governs (the
+    engine no longer ignores cfg-level quantization selections)."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    cfg_q = dataclasses.replace(cfg, precision="int8_serve")
+    eng, outs = _run_engine(cfg_q, params, ServeConfig(max_batch=2,
+                                                       max_seq_len=64))
+    assert eng.plan.int8_kv_cache and eng.quant_cache
+    assert all(len(o) == 5 for o in outs)
+
+
+def test_engine_qat_policy_runs_and_matches_compile_budget():
+    """A fixed-point (runtime fake-quant) serving policy also keeps the
+    compiled-program set at the float baseline."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = lm.init_params(cfg, KEY)
+    base = ServeConfig(max_batch=1, max_seq_len=64)
+    eng_f, _ = _run_engine(cfg, params, base, prompts=((5, 9, 3),))
+    eng_q, outs = _run_engine(
+        cfg, params, dataclasses.replace(base, policy="qat_fixed<12,6>"),
+        prompts=((5, 9, 3),),
+    )
+    assert len(outs[0]) == 5
+    assert (
+        eng_q.telemetry["prefill_compiles"]
+        == eng_f.telemetry["prefill_compiles"]
+    )
