@@ -1,14 +1,18 @@
-"""Serving-engine throughput: tokens/s across batch x bucket x decode_steps.
+"""Serving-engine throughput: tokens/s across batch x bucket x decode_steps,
+with KV-cache occupancy (bytes + page utilization) per sweep point.
 
 The continuous-batching counterpart of the paper's latency tables — the
-engine's hot loop (bucketed prefill + scan decode) swept over the two
-knobs that bound its compiled-program set and host-dispatch overhead, on a
-physics-scale LM (paper Table I dims as a causal LM) and the reduced
-``minicpm-2b`` config.
+engine's hot loop (bucketed batched prefill + scan decode) swept over the
+two knobs that bound its compiled-program set and host-dispatch overhead,
+on a physics-scale LM (paper Table I dims as a causal LM) and the reduced
+``minicpm-2b`` config.  ``--kv-layout paged`` runs the same sweep through
+the block-table page pool (serve/kv_cache.py) instead of dense slabs.
 
 CSV rows: ``name,us_per_call,derived`` where ``us_per_call`` is mean
 microseconds per generated token and ``derived`` packs
-``tok_s=<tokens/s>;prefill_compiles=<n>;decode_compiles=<n>``.
+``tok_s=<tokens/s>;prefill_compiles=<n>;decode_compiles=<n>;``
+``kv_layout=<dense|paged>;kv_mib=<cache MiB>;page_util_peak=<peak
+pages-in-use / capacity>``.
 """
 
 from __future__ import annotations
@@ -39,13 +43,14 @@ def physics_scale_lm() -> ModelConfig:
 
 
 def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
-               policy=None, n_requests=8, max_new=16, seed=0):
+               policy=None, kv_layout="dense", n_requests=8, max_new=16,
+               seed=0):
     eng = ServingEngine(
         cfg, params,
         ServeConfig(
             max_batch=max_batch, max_seq_len=64,
             prefill_buckets=buckets, decode_steps=decode_steps,
-            policy=policy,
+            policy=policy, kv_layout=kv_layout, kv_page_size=16,
         ),
     )
 
@@ -66,10 +71,14 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
     tel = eng.telemetry
     toks = tel["tokens_generated"] - tokens_before
     us_per_tok = tel["run_wall_s"] / max(toks, 1) * 1e6
+    page_util_peak = tel["pages_in_use_peak"] / max(tel["pages_capacity"], 1)
     derived = (
         f"tok_s={tel['tokens_per_s']:.1f};"
         f"prefill_compiles={tel['prefill_compiles']};"
-        f"decode_compiles={tel['decode_compiles']}"
+        f"decode_compiles={tel['decode_compiles']};"
+        f"kv_layout={tel['kv_layout']};"
+        f"kv_mib={tel['kv_bytes'] / 2**20:.2f};"
+        f"page_util_peak={page_util_peak:.2f}"
     )
     return (
         f"serving_throughput,{name},b{max_batch},ds{decode_steps},"
@@ -77,7 +86,7 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
     )
 
 
-def run(policy: str | None = None) -> list[str]:
+def run(policy: str | None = None, kv_layout: str = "dense") -> list[str]:
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
     archs = [
         ("physics_scale", physics_scale_lm()),
@@ -94,6 +103,7 @@ def run(policy: str | None = None) -> list[str]:
                         name, cfg, params,
                         max_batch=max_batch, buckets=buckets,
                         decode_steps=decode_steps, policy=arch_policy,
+                        kv_layout=kv_layout,
                     )
                 )
     return rows
@@ -108,9 +118,12 @@ def main():
                     help="precision policy preset applied to every sweep "
                          "point (float, int8_serve, paper_vu13p, ...) or "
                          "'auto' for each arch's recommended serve_policy")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache storage layout (serve/kv_cache.py)")
     args = ap.parse_args()
     t0 = time.time()
-    for row in run(policy=args.policy):
+    for row in run(policy=args.policy, kv_layout=args.kv_layout):
         print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")
 

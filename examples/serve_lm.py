@@ -38,6 +38,12 @@ def main():
                     help="decode tokens per host dispatch (lax.scan)")
     ap.add_argument("--max-prefill-per-step", type=int, default=0,
                     help="cap on prompts admitted per step (0 = all free slots)")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache storage layout: dense per-slot slabs or "
+                         "block-table pages (serve/kv_cache.py)")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per page (paged layout)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=True)
@@ -53,10 +59,13 @@ def main():
         ),
         decode_steps=args.decode_steps,
         max_prefill_per_step=args.max_prefill_per_step,
+        kv_layout=args.kv_layout,
+        kv_page_size=args.kv_page_size,
     )
     eng = ServingEngine(cfg, params, serve_cfg)
     print(f"serving {cfg.name} ({lm.count_params(cfg):,} params), "
           f"max_batch={args.max_batch}, policy={eng.policy.name}, "
+          f"kv_layout={eng.kv_layout}, "
           f"buckets={eng.prefill_buckets or 'exact'}, "
           f"decode_steps={serve_cfg.decode_steps}")
 
@@ -86,6 +95,10 @@ def main():
           f"{tel['prefill_compiles']} prefill programs, "
           f"{tel['decode_compiles']} decode program | "
           f"prefill {tel['prefill_time_s']:.2f}s / decode {tel['decode_time_s']:.2f}s")
+    print(f"kv cache: layout={tel['kv_layout']} "
+          f"{tel['kv_bytes'] / 2**20:.2f} MiB | "
+          f"pages peak {tel['pages_in_use_peak']}/{tel['pages_capacity']} "
+          f"(page_size={tel['kv_page_size']})")
     for u in uids[:3]:
         r = results[u]
         print(f"  req {u}: prompt {r.prompt[:6]}... -> {r.generated}")

@@ -3,10 +3,9 @@
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Literal
 
-from repro.core.precision import PrecisionPolicy, from_legacy_flags, get_policy
+from repro.core.precision import PrecisionPolicy
 from repro.core.quant import QuantConfig
 
 
@@ -232,13 +231,24 @@ class ServeConfig:
     temperature: float = 0.0
     # Declarative serving precision: a PrecisionPolicy, a preset name
     # ("int8_serve", "paper_vu13p", "qat_fixed<12,6>", ...), or None.
+    # (The legacy int8_weights/int8_kv_cache/lut_softmax booleans were
+    # removed after their deprecation cycle; see README "Precision
+    # policies" for the migration table.)
     policy: PrecisionPolicy | str | None = None
-    # DEPRECATED: the old boolean triple.  Still honored — lowered onto an
-    # equivalent policy by resolved_policy() with a DeprecationWarning —
-    # but `policy` is the single source of truth going forward.
-    int8_weights: bool = False
-    int8_kv_cache: bool = False
-    lut_softmax: bool = False
+    # --- KV-cache layout (serve/kv_cache.py CacheManager) ---
+    # "dense": per-slot slabs of max_seq_len tokens (the historical
+    # layout).  "paged": block-table-indexed pages — long contexts
+    # allocate on demand, freed slots return pages immediately.  Families
+    # whose caches are not position-addressed (SSM/hybrid, rolling
+    # sliding-window) fall back to dense automatically.
+    kv_layout: Literal["dense", "paged"] = "dense"
+    # Tokens per page (paged layout); must divide max_seq_len so every
+    # slot's logical view is a whole number of fixed-stride pages.
+    kv_page_size: int = 16
+    # Physical pages in the pool (paged layout).  None = enough for every
+    # slot at full length plus the reserved trash page (no oversubscription);
+    # set lower to oversubscribe memory for long-max_seq_len workloads.
+    kv_pages: int | None = None
     # --- engine v2: bucketed prefill + scan decode ---
     # Prompt-length buckets for prefill padding.  None = auto powers of two
     # up to max_seq_len; () = exact-length prefill (the v1 behavior, one
@@ -250,33 +260,6 @@ class ServeConfig:
     # Max prompts admitted (prefilled) per engine step; 0 = fill every
     # free slot (v1 behavior).
     max_prefill_per_step: int = 0
-
-    def resolved_policy(self) -> PrecisionPolicy | None:
-        """The serving precision policy: explicit `policy` wins; otherwise
-        the deprecated boolean triple is lowered onto an equivalent policy
-        (with a one-cycle DeprecationWarning); None when nothing is set."""
-        legacy_set = self.int8_weights or self.int8_kv_cache or self.lut_softmax
-        if self.policy is not None:
-            if legacy_set:
-                raise ValueError(
-                    "ServeConfig: set either `policy` or the legacy "
-                    "int8_weights/int8_kv_cache/lut_softmax flags, not both"
-                )
-            return get_policy(self.policy)
-        if legacy_set:
-            warnings.warn(
-                "ServeConfig.int8_weights/int8_kv_cache/lut_softmax are "
-                "deprecated; use ServeConfig(policy='int8_serve') or a "
-                "custom PrecisionPolicy (core/precision.py)",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            return from_legacy_flags(
-                int8_weights=self.int8_weights,
-                int8_kv_cache=self.int8_kv_cache,
-                lut_softmax=self.lut_softmax,
-            )
-        return None
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """Prefill buckets, ascending.  Auto mode: powers of two in

@@ -31,11 +31,11 @@ Named presets (``get_policy``): ``float``, ``int8_serve``,
 ``paper_vu13p``, and the parametric ``ptq_fixed<W,I>`` /
 ``qat_fixed<W,I>`` families.
 
-The legacy knobs (``QuantConfig.mode/weight_cfg/act_cfg`` and the
-``int8_weights / int8_kv_cache / lut_softmax`` booleans that used to be
-duplicated across ``QuantConfig`` and ``ServeConfig``) lower onto this
-API via :func:`from_quant_config` / :func:`from_legacy_flags`, so there
-is exactly one source of truth for precision selection.
+The legacy model-level knobs (``QuantConfig.mode/weight_cfg/act_cfg``
+and its booleans) lower onto this API via :func:`from_quant_config`, so
+there is exactly one source of truth for precision selection.  (The
+old ``ServeConfig`` boolean triple and its deprecation shim were removed
+once their cycle elapsed; serving code passes ``policy=`` directly.)
 """
 
 from __future__ import annotations
@@ -674,27 +674,8 @@ def policy_names() -> list[str]:
 
 
 # ---------------------------------------------------------------------------
-# Legacy lowering (deprecation shims)
+# Legacy lowering (model-level QuantConfig)
 # ---------------------------------------------------------------------------
-
-
-def from_legacy_flags(
-    int8_weights: bool = False,
-    int8_kv_cache: bool = False,
-    lut_softmax: bool = False,
-) -> PrecisionPolicy | None:
-    """Lower the old ServeConfig boolean triple onto an equivalent policy
-    (None when all flags are off)."""
-    rules = []
-    if int8_weights:
-        rules.append(Rule("*.weights", int8(per_channel=True)))
-    if int8_kv_cache:
-        rules.append(Rule("kv_cache", int8(per_channel=False)))
-    if lut_softmax:
-        rules.append(Rule("*.softmax", lut8()))
-    if not rules:
-        return None
-    return PrecisionPolicy("legacy_serve_flags", tuple(rules))
 
 
 def from_quant_config(qc: quant_lib.QuantConfig) -> PrecisionPolicy | None:

@@ -198,12 +198,12 @@ class QuantConfig:
     .. deprecated::
         New code should declare precision through
         ``core.precision.PrecisionPolicy`` (``ModelConfig.precision`` /
-        ``ServeConfig.policy``).  A QuantConfig is lowered onto an
-        equivalent policy via :meth:`to_policy`, so the policy engine is
-        the single source of truth; the ``int8_weights / int8_kv_cache /
-        lut_softmax`` booleans here are no longer read anywhere else.
-        ``maybe_fake_quant_*`` remain as the runtime execution hooks that
-        policy-derived configs also use.
+        ``ServeConfig.policy``).  A model-level QuantConfig is lowered
+        onto an equivalent policy via ``core.precision.from_quant_config``
+        so the policy engine is the single source of truth; the
+        ``int8_weights / int8_kv_cache / lut_softmax`` booleans here are
+        read only by that lowering.  ``maybe_fake_quant_*`` remain as the
+        runtime execution hooks that policy-derived configs also use.
     """
 
     mode: str = "none"  # none | ptq | qat | int8
@@ -213,12 +213,6 @@ class QuantConfig:
     int8_weights: bool = False
     int8_kv_cache: bool = False
     lut_softmax: bool = False
-
-    def to_policy(self):
-        """Equivalent ``PrecisionPolicy`` (None when nothing is selected)."""
-        from repro.core import precision
-
-        return precision.from_quant_config(self)
 
     def maybe_fake_quant_act(self, x: jax.Array) -> jax.Array:
         if self.mode == "qat" and self.act_cfg is not None:

@@ -167,12 +167,30 @@ def param_shardings(rules: ShardingRules, cfg, model_module) -> Any:
     return rules.tree_shardings(abstract, axes)
 
 
-def cache_shardings(rules: ShardingRules, cfg, batch: int, max_len: int) -> Any:
-    """Sharding tree for decode caches (models/lm.cache_logical_axes)."""
-    from repro.models import lm
+def cache_shardings(
+    rules: ShardingRules,
+    cfg,
+    batch: int,
+    max_len: int,
+    quantized: bool = False,
+    layout: str = "dense",
+    **layout_kw,
+) -> Any:
+    """Sharding tree for decode caches (serve/kv_cache.cache_logical_axes).
 
-    abstract = lm.abstract_caches(cfg, batch, max_len)
-    axes_map = lm.cache_logical_axes(cfg)
+    ``layout`` selects the KV storage layout: dense slabs shard the batch
+    and cache_len axes; paged pools shard over kv_heads (TP) with the page
+    axis replicated and the page table sharded over batch.  Extra
+    ``layout_kw`` (page_size/num_pages) are forwarded to the spec builder.
+    """
+    from repro.serve import kv_cache
+
+    abstract = kv_cache.abstract_caches(
+        cfg, batch, max_len, quantized=quantized, layout=layout, **layout_kw
+    )
+    axes_map = kv_cache.cache_logical_axes(
+        cfg, quantized=quantized, layout=layout
+    )
 
     def _walk(abs_node, axes_node):
         if isinstance(abs_node, jax.ShapeDtypeStruct):

@@ -53,6 +53,16 @@ def main():
                     help="decode tokens per host dispatch (lax.scan)")
     ap.add_argument("--max-prefill-per-step", type=int, default=0,
                     help="cap on prompts admitted per step (0 = all free slots)")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache storage layout: dense per-slot slabs or "
+                         "block-table pages (serve/kv_cache.py)")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per page (paged layout; must divide "
+                         "--max-seq)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="physical pages in the pool (default: worst case "
+                         "max_batch x max_seq / page_size, + trash page)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=not args.full_config)
@@ -70,6 +80,9 @@ def main():
             ),
             decode_steps=args.decode_steps,
             max_prefill_per_step=args.max_prefill_per_step,
+            kv_layout=args.kv_layout,
+            kv_page_size=args.kv_page_size,
+            kv_pages=args.kv_pages,
         ),
     )
     rng = np.random.default_rng(0)
@@ -94,6 +107,11 @@ def main():
           f"(buckets={eng.prefill_buckets or 'exact'}), "
           f"{tel['decode_compiles']} decode program "
           f"(decode_steps={eng.serve_cfg.decode_steps})")
+    print(f"kv cache: layout={tel['kv_layout']} "
+          f"{tel['kv_bytes'] / 2**20:.2f} MiB | "
+          f"pages {tel['pages_in_use']}/{tel['pages_capacity']} in use "
+          f"(peak {tel['pages_in_use_peak']}, "
+          f"page_size={tel['kv_page_size']})")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,15 @@
 """Attention variants: GQA/MHA/MQA, MLA (latent KV), sliding-window — with
-prefill/decode KV caches (dense, rolling-buffer, latent, int8-quantized).
+prefill/decode KV caches (dense, rolling-buffer, latent, paged,
+int8-quantized).
 
 All functions are pure; caches are pytrees (dicts of arrays) so they stack
-under scan-over-layers and shard under pjit.  The fused streaming-attention
-kernel (``kernels/flash_attention``) is the TPU target for the score path;
-the jnp reference path (``use_pallas=False``) is used on CPU hosts/tests.
+under scan-over-layers and shard under pjit.  Cache *layout* knowledge
+(dense slabs vs block-table pages, sequence-axis maps, specs) lives in
+``repro.serve.kv_cache``; decode reads/writes go through that module's
+gather/scatter views instead of assuming a contiguous sequence axis.
+The fused streaming-attention kernel (``kernels/flash_attention``) is the
+TPU target for the score path; the jnp reference path
+(``use_pallas=False``) is used on CPU hosts/tests.
 """
 
 from __future__ import annotations
@@ -19,6 +24,7 @@ from repro.core import quant
 from repro.kernels.flash_attention import mha as fused_mha
 from repro.models import layers
 from repro.models.params import ArraySpec
+from repro.serve import kv_cache as kv_cache_lib
 
 Cache = dict[str, Any]
 
@@ -73,76 +79,10 @@ def attention_spec(cfg: ModelConfig, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 
-def cache_spec(
-    cfg: ModelConfig,
-    batch: int,
-    max_len: int,
-    dtype=jnp.bfloat16,
-    quantized: bool = False,
-) -> dict:
-    """Abstract per-layer cache (ShapeDtypeStruct); stacked by the caller.
-
-    Dense GQA: (B, Hkv, L, D) k/v slabs.
-    Sliding window: rolling buffer of length ``window`` + slot positions.
-    MLA: packed latent (B, L, kv_lora + rope_dim) — the decode-side
-    memory win that motivates MLA.
-    quantized=True (GQA only): int8 codes + per-(seq, head) f32 scales —
-    the paper's fixed-point datapath applied to the KV cache (KIVI-style),
-    4x cache memory/bandwidth vs bf16.
-    """
-    if cfg.attn_kind == "none":
-        return {}
-    if cfg.attn_kind == "mla":
-        m = cfg.mla
-        width = m.kv_lora_rank + m.qk_rope_head_dim
-        if quantized:
-            # int8 latent cache: the paper's fixed-point datapath applied
-            # to MLA's compressed KV (per-token scales) — 2x over bf16 on
-            # an already 10-20x-compressed cache
-            return {
-                "latent": jax.ShapeDtypeStruct(
-                    (batch, max_len, width), jnp.int8
-                ),
-                "latent_scale": jax.ShapeDtypeStruct(
-                    (batch, max_len), jnp.float32
-                ),
-            }
-        return {
-            "latent": jax.ShapeDtypeStruct((batch, max_len, width), dtype),
-        }
-    hd = cfg.resolved_head_dim
-    length = max_len
-    extra = {}
-    if cfg.sliding_window is not None and cfg.sliding_window < max_len:
-        length = cfg.sliding_window
-        extra["slot_pos"] = jax.ShapeDtypeStruct(
-            (batch, length), jnp.int32
-        )
-    kv_dtype = jnp.int8 if quantized else dtype
-    spec = {
-        "k": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, length, hd), kv_dtype),
-        "v": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, length, hd), kv_dtype),
-        **extra,
-    }
-    if quantized:
-        spec["k_scale"] = jax.ShapeDtypeStruct(
-            (batch, cfg.n_kv_heads, length), jnp.float32
-        )
-        spec["v_scale"] = jax.ShapeDtypeStruct(
-            (batch, cfg.n_kv_heads, length), jnp.float32
-        )
-    return spec
-
-
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    spec = cache_spec(cfg, batch, max_len, dtype)
-
-    def _zero(s):
-        if s.dtype == jnp.int32:
-            return jnp.full(s.shape, -1, jnp.int32)  # invalid slot marker
-        return jnp.zeros(s.shape, s.dtype)
-
-    return {k: _zero(v) for k, v in spec.items()}
+# Layout-aware cache specs live in repro.serve.kv_cache; these aliases
+# keep the historical attention-module entry points working.
+cache_spec = kv_cache_lib.attention_cache_spec
+init_cache = kv_cache_lib.init_attention_cache
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +156,11 @@ def gqa_apply(
             interpret=kernel.get("interpret", True),
         )
     elif mode == "prefill":
+        if kv_cache_lib.is_paged(cache):
+            raise ValueError(
+                "prefill fills a dense scratch cache; insert it into paged "
+                "storage via serve.kv_cache.CacheManager.insert_prefill"
+            )
         if rolling:
             w = window
 
@@ -277,38 +222,53 @@ def gqa_apply(
         )
     else:  # decode: s == 1, attend over cache; positions is (B,) per-seq
         pos = positions  # (B,)
-        bi = jnp.arange(b)[:, None]
-        hi = jnp.arange(cfg.n_kv_heads)[None, :]
-        slot = pos % window if rolling else pos  # (B,)
-        new_cache = {
-            "k": cache["k"].at[bi, hi, slot[:, None]].set(k_store[:, :, 0]),
-            "v": cache["v"].at[bi, hi, slot[:, None]].set(v_store[:, :, 0]),
-        }
-        if quantized:
-            new_cache["k_scale"] = cache["k_scale"].at[bi, hi, slot[:, None]].set(
-                k_sc[:, :, 0]
-            )
-            new_cache["v_scale"] = cache["v_scale"].at[bi, hi, slot[:, None]].set(
-                v_sc[:, :, 0]
-            )
+        if kv_cache_lib.is_paged(cache):
+            # layout-provided scatter (one token into its physical page)
+            # and gather (pages -> contiguous logical view): the math
+            # below is then bit-identical to the dense slab path.
+            upd = {"k": k_store[:, :, 0], "v": v_store[:, :, 0]}
+            if quantized:
+                upd["k_scale"] = k_sc[:, :, 0]
+                upd["v_scale"] = v_sc[:, :, 0]
+            new_cache = kv_cache_lib.paged_decode_write(cache, upd, pos)
+            view = kv_cache_lib.paged_decode_view(new_cache)
+        else:
+            bi = jnp.arange(b)[:, None]
+            hi = jnp.arange(cfg.n_kv_heads)[None, :]
+            slot = pos % window if rolling else pos  # (B,)
+            new_cache = {
+                "k": cache["k"].at[bi, hi, slot[:, None]].set(k_store[:, :, 0]),
+                "v": cache["v"].at[bi, hi, slot[:, None]].set(v_store[:, :, 0]),
+            }
+            if quantized:
+                new_cache["k_scale"] = cache["k_scale"].at[
+                    bi, hi, slot[:, None]
+                ].set(k_sc[:, :, 0])
+                new_cache["v_scale"] = cache["v_scale"].at[
+                    bi, hi, slot[:, None]
+                ].set(v_sc[:, :, 0])
+            if rolling:
+                new_cache["slot_pos"] = cache["slot_pos"].at[
+                    jnp.arange(b), slot
+                ].set(pos)
+            view = new_cache
         if rolling:
-            slot_pos = cache["slot_pos"].at[jnp.arange(b), slot].set(pos)
-            new_cache["slot_pos"] = slot_pos
+            slot_pos = new_cache["slot_pos"]
             valid = (
                 (slot_pos >= 0)
                 & (slot_pos <= pos[:, None])
                 & (slot_pos > pos[:, None] - window)
             )  # (B, w)
         else:
-            kv_pos = jnp.arange(cache["k"].shape[2])
+            kv_pos = jnp.arange(view["k"].shape[2])
             valid = kv_pos[None, :] <= pos[:, None]  # (B, L)
         out = _decode_attend(
             q,
-            new_cache["k"],
-            new_cache["v"],
+            view["k"],
+            view["v"],
             valid,
-            k_scale=new_cache.get("k_scale"),
-            v_scale=new_cache.get("v_scale"),
+            k_scale=view.get("k_scale"),
+            v_scale=view.get("v_scale"),
         )
 
     out = _merge_heads(out)
@@ -422,6 +382,12 @@ def mla_apply(
         else:
             l_store, l_scale = latent.astype(cache_dtype), None
         if mode == "prefill":
+            if kv_cache_lib.is_paged(cache):
+                raise ValueError(
+                    "prefill fills a dense scratch cache; insert it into "
+                    "paged storage via serve.kv_cache.CacheManager"
+                    ".insert_prefill"
+                )
             new_latent = jax.lax.dynamic_update_slice(
                 cache["latent"], l_store, (0, 0, 0)
             )
@@ -430,7 +396,12 @@ def mla_apply(
                 new_cache["latent_scale"] = jax.lax.dynamic_update_slice(
                     cache["latent_scale"], l_scale.astype(jnp.float32), (0, 0)
                 )
-        else:  # decode: positions is (B,)
+        elif kv_cache_lib.is_paged(cache):  # paged decode: page scatter
+            upd = {"latent": l_store[:, 0]}
+            if quantized:
+                upd["latent_scale"] = l_scale[:, 0].astype(jnp.float32)
+            new_cache = kv_cache_lib.paged_decode_write(cache, upd, positions)
+        else:  # dense decode: positions is (B,)
             new_latent = cache["latent"].at[jnp.arange(b), positions].set(
                 l_store[:, 0]
             )
@@ -442,9 +413,14 @@ def mla_apply(
 
     if mode == "decode" and cache is not None:
         pos = positions  # (B,)
-        lat = new_cache["latent"].astype(jnp.float32)  # (b, L, r+rope_d)
+        view = (
+            kv_cache_lib.paged_decode_view(new_cache)
+            if kv_cache_lib.is_paged(new_cache)
+            else new_cache
+        )
+        lat = view["latent"].astype(jnp.float32)  # (b, L, r+rope_d)
         if quantized:
-            lat = lat * new_cache["latent_scale"][..., None]
+            lat = lat * view["latent_scale"][..., None]
         ckv_all, krope_all = lat[..., : m.kv_lora_rank], lat[..., m.kv_lora_rank :]
         valid = jnp.arange(lat.shape[1])[None, :] <= pos[:, None]  # (B, L)
         scale = 1.0 / (qk ** 0.5)

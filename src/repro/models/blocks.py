@@ -129,6 +129,8 @@ def shared_attn_spec(cfg: ModelConfig, dtype=jnp.float32):
 
 
 def shared_attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    # hybrid shared-attention caches are always dense: the hybrid family is
+    # not position-addressed end-to-end, so the paged layout never applies
     return attention.cache_spec(shared_attn_cfg(cfg), batch, max_len, dtype)
 
 

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import precision as precision_lib
-from repro.models import attention, blocks, layers, ssm
+from repro.models import blocks, layers
 from repro.models import params as params_lib
+from repro.serve import kv_cache as kv_cache_lib
 
 PyTree = Any
 
@@ -81,84 +82,15 @@ def count_params(cfg: ModelConfig) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Caches
+# Caches — layout knowledge (dense slabs vs block-table pages, sequence-axis
+# maps, logical sharding axes) lives in repro.serve.kv_cache; these aliases
+# keep the historical lm-module entry points working.  All three accept the
+# layout kwargs (layout= / page_size= / num_pages=) the manager passes.
 # ---------------------------------------------------------------------------
 
-
-def _per_layer_cache_spec(cfg, batch, max_len, dtype, quantized=False):
-    if blocks.block_kind(cfg) == "mamba":
-        return ssm.mamba_cache_spec(cfg, batch, jnp.float32)
-    return attention.cache_spec(cfg, batch, max_len, dtype, quantized=quantized)
-
-
-def abstract_caches(
-    cfg: ModelConfig,
-    batch: int,
-    max_len: int,
-    dtype=jnp.bfloat16,
-    quantized: bool = False,
-) -> PyTree:
-    per_layer = _per_layer_cache_spec(cfg, batch, max_len, dtype, quantized)
-    stacked = {
-        k: jax.ShapeDtypeStruct((cfg.n_layers,) + v.shape, v.dtype)
-        for k, v in per_layer.items()
-    }
-    caches: dict = {"layers": stacked}
-    if cfg.family == "hybrid":
-        shared = blocks.shared_attn_cache_spec(cfg, batch, max_len, dtype)
-        caches["shared"] = {
-            k: jax.ShapeDtypeStruct((n_shared_apps(cfg),) + v.shape, v.dtype)
-            for k, v in shared.items()
-        }
-    return caches
-
-
-def init_caches(
-    cfg: ModelConfig,
-    batch: int,
-    max_len: int,
-    dtype=jnp.bfloat16,
-    quantized: bool = False,
-) -> PyTree:
-    spec = abstract_caches(cfg, batch, max_len, dtype, quantized)
-
-    def _zero(s):
-        if s.dtype == jnp.int32:
-            return jnp.full(s.shape, -1, jnp.int32)
-        return jnp.zeros(s.shape, s.dtype)
-
-    return jax.tree.map(_zero, spec)
-
-
-def cache_logical_axes(cfg: ModelConfig, quantized: bool = False) -> PyTree:
-    """Logical axes for cache sharding (distributed/sharding.py)."""
-    kind = blocks.block_kind(cfg)
-    if kind == "mamba":
-        per_layer = {
-            "ssm_state": ("layers", "batch", "ssm_heads", None, None),
-            "conv_state": ("layers", "batch", None, "inner"),
-        }
-    elif cfg.attn_kind == "mla":
-        per_layer = {"latent": ("layers", "batch", "cache_len", None)}
-        if quantized:
-            per_layer["latent_scale"] = ("layers", "batch", "cache_len")
-    else:
-        per_layer = {
-            "k": ("layers", "batch", "kv_heads", "cache_len", None),
-            "v": ("layers", "batch", "kv_heads", "cache_len", None),
-        }
-        if cfg.sliding_window is not None:
-            per_layer["slot_pos"] = ("layers", "batch", None)
-        if quantized:
-            per_layer["k_scale"] = ("layers", "batch", "kv_heads", "cache_len")
-            per_layer["v_scale"] = ("layers", "batch", "kv_heads", "cache_len")
-    axes: dict = {"layers": per_layer}
-    if cfg.family == "hybrid":
-        axes["shared"] = {
-            "k": ("layers", "batch", "kv_heads", "cache_len", None),
-            "v": ("layers", "batch", "kv_heads", "cache_len", None),
-        }
-    return axes
+abstract_caches = kv_cache_lib.abstract_caches
+init_caches = kv_cache_lib.init_caches
+cache_logical_axes = kv_cache_lib.cache_logical_axes
 
 
 # ---------------------------------------------------------------------------

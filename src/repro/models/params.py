@@ -16,6 +16,7 @@ Scan-over-layers is expressed by ``stack_spec(spec, n)``, which prepends a
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Callable
 
 import jax
@@ -82,12 +83,15 @@ def _map_leaves(fn: Callable[[tuple, ArraySpec], Any], spec: SpecTree, path=()):
 
 
 def init_params(spec: SpecTree, key: jax.Array) -> Any:
-    """Deterministic init: each leaf's key is fold_in(hash(path))."""
+    """Deterministic init: each leaf's key is fold_in(crc32(path)).
+
+    crc32, not Python ``hash()``: string hashes are salted per process
+    (PYTHONHASHSEED), which made "the same seed" produce different
+    parameters in every interpreter — and turned threshold-based quality
+    tests and the serving examples nondeterministic across runs."""
 
     def _init(path, leaf_spec):
-        h = np.uint32(
-            abs(hash("/".join(path))) % np.iinfo(np.uint32).max
-        )
+        h = np.uint32(zlib.crc32("/".join(path).encode()))
         return _leaf_init(leaf_spec, jax.random.fold_in(key, h))
 
     return _map_leaves(_init, spec)

@@ -1,33 +1,40 @@
-"""Serving engine v2: continuous batching with bucketed prefill and
-multi-token scan decode.
+"""Serving engine v3: continuous batching with bucketed *batched* prefill,
+multi-token scan decode, and pluggable KV-cache layouts.
 
 The paper's subject is low-latency *inference* with a bounded, pre-compiled
 set of fixed-iteration datapaths (hls4ml pipelines); this engine is the
 datacenter-scale counterpart and inherits that discipline:
 
-* **Bucketed prefill** — prompts are right-padded to power-of-two length
-  buckets with an explicit length mask, so the jit cache holds at most
-  ``len(prefill_buckets)`` prefill programs instead of one per distinct
-  prompt length.  The mask selects the true last-token logits and zeroes
-  the padded tail of the freshly filled KV cache; decode-side position
-  masking (``kv_pos <= pos``) keeps the pad region inert from then on.
+* **Bucketed, batched prefill** — prompts are right-padded to power-of-two
+  length buckets with an explicit per-row length mask, and every prompt
+  sharing a bucket in one engine step rides ONE fixed-shape dispatch that
+  fills up to ``max_batch`` slots at once.  The jit cache holds at most
+  ``len(prefill_buckets)`` prefill programs (each at the fixed batch
+  width) plus one decode program — test-enforced.
 * **Scan decode** — ``decode_steps`` tokens per host dispatch via
   ``jax.lax.scan`` over the fused decode program, with per-slot active
   masks so finished slots (eos / max-tokens / sequence cap) freeze their
   position and stop emitting mid-scan.
-* **Telemetry** — tokens/s, queue wait, and prefill/decode compile
-  counters exposed from ``step()``/``run()``.
+* **KV-cache layouts** — all layout knowledge lives in
+  ``serve/kv_cache.py`` behind a :class:`~repro.serve.kv_cache.CacheManager`:
+  ``dense`` (per-slot slabs, the historical behavior) or ``paged``
+  (block-table-indexed pages; long contexts allocate on demand, finished
+  slots return pages immediately).  Both produce token-identical output.
+* **Telemetry** — tokens/s, queue wait, prefill/decode compile counters,
+  and KV-cache occupancy (bytes, page utilization) from ``step()``/``run()``.
 * **Precision policy** — ``ServeConfig.policy`` (a ``core.precision``
   PrecisionPolicy / preset name) selects the quantized datapath: offline
-  weight transforms, KV-cache dtype, LUT softmax, and any runtime
-  fake-quant — all without adding jit programs beyond the float baseline.
+  weight transforms, KV-cache dtype (int8 per-token scales apply per page
+  under the paged layout), LUT softmax, and any runtime fake-quant — all
+  without adding jit programs beyond the float baseline.
 
-Families whose caches are not safely right-paddable (SSM/hybrid state,
+Families whose caches are not position-addressed (SSM/hybrid state,
 rolling sliding-window buffers) transparently fall back to exact-length
-prefill through the same program, so every architecture keeps working.
+prefill and the dense layout, so every architecture keeps working.
 
-Host-side state is just the slot table; all device work happens in the
-per-bucket prefill programs and one decode-scan program.
+Host-side state is just the slot table plus the page free-list; all
+device work happens in the per-bucket prefill programs and one
+decode-scan program.
 """
 
 from __future__ import annotations
@@ -43,15 +50,10 @@ import numpy as np
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import precision as precision_lib
 from repro.models import lm
+from repro.serve import kv_cache
 from repro.serve.sampling import sample
 
 PyTree = Any
-
-# cache leaves with a sequence axis: name -> axis from the right
-_SEQ_AXIS_FROM_RIGHT = {
-    "k": 2, "v": 2, "latent": 2,  # (..., cache_len, feature)
-    "k_scale": 1, "v_scale": 1, "latent_scale": 1,  # (..., cache_len)
-}
 
 
 @dataclasses.dataclass
@@ -108,10 +110,9 @@ class ServingEngine:
         # int8 quantize-dequantize; the true int8 GEMM path is
         # kernels/qmatmul on TPU), the KV-cache dtype, the softmax kernel
         # mode, and any runtime fake-quant the model applies in-graph.
-        # ServeConfig.policy wins (legacy booleans lower onto it with a
-        # DeprecationWarning); otherwise the model's own policy applies.
-        policy = self.serve_cfg.resolved_policy()
-        if policy is not None:
+        # ServeConfig.policy wins; otherwise the model's own policy applies.
+        if self.serve_cfg.policy is not None:
+            policy = precision_lib.get_policy(self.serve_cfg.policy)
             cfg = dataclasses.replace(cfg, precision=policy)
         else:
             policy = precision_lib.model_policy(cfg)
@@ -133,10 +134,13 @@ class ServingEngine:
             and cfg.attn_kind in ("gqa", "mla")
             and cfg.family not in ("ssm", "hybrid")
         )
-        self.caches = lm.init_caches(
-            cfg, sc.max_batch, sc.max_seq_len,
-            dtype=jnp.float32, quantized=self.quant_cache,
+        # All layout knowledge (dense slabs vs block-table pages, specs,
+        # insertion, allocation) lives in the manager.
+        self.cache_mgr = kv_cache.CacheManager(
+            cfg, sc, quantized=self.quant_cache, dtype=jnp.float32
         )
+        self.kv_layout = self.cache_mgr.layout
+        self.caches = self.cache_mgr.init_device_caches()
         self.slots = [_Slot() for _ in range(sc.max_batch)]
         self._queue: list[Request] = []
         self._finished: dict[int, Request] = {}
@@ -146,15 +150,7 @@ class ServingEngine:
         # position-addressed and decode masks by position: true for dense
         # GQA / MLA caches, false for SSM/hybrid state and for rolling
         # sliding-window buffers (padding would evict real tokens).
-        rolling = (
-            cfg.sliding_window is not None
-            and cfg.sliding_window < sc.max_seq_len
-        )
-        self._bucketable = (
-            cfg.attn_kind in ("gqa", "mla")
-            and cfg.family not in ("ssm", "hybrid")
-            and not rolling
-        )
+        self._bucketable = self.cache_mgr.position_addressed
         # a bucket longer than the cache could not be inserted; drop those
         self._buckets = (
             tuple(b for b in sc.resolved_buckets() if b <= sc.max_seq_len)
@@ -168,11 +164,13 @@ class ServingEngine:
             "tokens_generated": 0,
             "prompts_admitted": 0,
             "prefill_compiles": 0,
+            "prefill_dispatches": 0,
             "decode_compiles": 0,
             "queue_wait_s_total": 0.0,
             "prefill_time_s": 0.0,
             "decode_time_s": 0.0,
             "steps": 0,
+            **self.cache_mgr.stats().as_dict(),
         }
 
     # ------------------------------------------------------------- utils --
@@ -189,6 +187,17 @@ class ServingEngine:
                 return b
         return n
 
+    def kv_stats(self) -> dict:
+        """Current KV-cache occupancy (layout, bytes, page utilization)."""
+        return self.cache_mgr.stats().as_dict()
+
+    def _reserve_len(self, req: Request) -> int:
+        """Worst-case sequence length for a request: decode writes reach at
+        most position prompt + max_new_tokens - 1 (capped by max_seq_len)."""
+        return min(
+            len(req.prompt) + req.max_new_tokens, self.serve_cfg.max_seq_len
+        )
+
     # ----------------------------------------------------------- requests --
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                eos_id: int | None = None) -> int:
@@ -199,11 +208,18 @@ class ServingEngine:
                 f"prompt length {len(prompt)} >= max_seq_len "
                 f"{self.serve_cfg.max_seq_len}"
             )
+        req = Request(self._uid + 1, list(prompt), max_new_tokens, eos_id,
+                      submitted_at=time.perf_counter())
+        need = self.cache_mgr.pages_for(self._reserve_len(req))
+        if need > self.cache_mgr.pages_capacity:
+            raise ValueError(
+                f"request needs {need} KV pages (prompt {len(prompt)} + "
+                f"up to {max_new_tokens} new tokens) but the pool only "
+                f"holds {self.cache_mgr.pages_capacity}; raise "
+                "ServeConfig.kv_pages or lower max_new_tokens"
+            )
         self._uid += 1
-        self._queue.append(
-            Request(self._uid, list(prompt), max_new_tokens, eos_id,
-                    submitted_at=time.perf_counter())
-        )
+        self._queue.append(req)
         return self._uid
 
     def result(self, uid: int) -> Request | None:
@@ -214,43 +230,36 @@ class ServingEngine:
         return bool(self._queue) or any(s.active for s in self.slots)
 
     # ------------------------------------------------------------ device --
-    def _mask_cache_tail(self, filled: PyTree, length: jax.Array) -> PyTree:
-        """Zero cache entries at positions >= length (the explicit bucket
-        length mask).  Leaves without a sequence axis (SSM state, slot_pos)
-        pass through; those families use exact-length prefill anyway."""
+    def _prefill_batch(self, params, tokens, lengths, caches, slots):
+        """Prefill up to ``max_batch`` same-bucket prompts in ONE dispatch.
 
-        def _mask_group(group):
-            out = {}
-            for name, leaf in group.items():
-                axis_r = _SEQ_AXIS_FROM_RIGHT.get(name)
-                if axis_r is None:
-                    out[name] = leaf
-                    continue
-                axis = leaf.ndim - axis_r
-                seq = jnp.arange(leaf.shape[axis])
-                mask = seq < length
-                mask = mask.reshape(
-                    (1,) * axis + (-1,) + (1,) * (leaf.ndim - axis - 1)
-                )
-                out[name] = jnp.where(mask, leaf, jnp.zeros((), leaf.dtype))
-            return out
-
-        return {k: _mask_group(v) for k, v in filled.items()}
-
-    def _prefill_bucket(self, params, tokens, length, caches, slot_idx):
-        """Prefill one right-padded batch-1 prompt and insert its cache.
-
-        ``tokens``: (1, bucket) int32, positions >= length are padding.
-        ``length``: scalar int32 true prompt length (traced, so every
-        prompt sharing a bucket reuses one compiled program).
-        Returns (true last-token logits (1, V), updated slot caches).
+        ``tokens``: (max_batch, bucket) int32, right-padded per row.
+        ``lengths``: (max_batch,) true prompt lengths (0 for pad rows).
+        ``slots``: (max_batch,) destination slot per row; the value
+        ``max_batch`` marks a pad row (dropped by the dense scatter,
+        routed to the trash page by the paged scatter).
+        All three are traced, so every same-bucket wave reuses one
+        compiled program.  Returns (per-row last-token logits (N, V),
+        updated caches).
         """
         cfg = self.cfg
-        bucket = tokens.shape[1]
-        mask = jnp.arange(bucket, dtype=jnp.int32) < length
-        tokens = jnp.where(mask[None, :], tokens, 0)  # canonical pad id
-        small = lm.init_caches(
-            cfg, 1, self.serve_cfg.max_seq_len,
+        nb, bucket = tokens.shape
+        mask = jnp.arange(bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
+        tokens = jnp.where(mask, tokens, 0)  # canonical pad id
+        # the model writes its natural contiguous (dense) scratch cache;
+        # insert_prefill is the only layout-specific step.  Paged: the
+        # scratch only needs to cover the bucket (rounded up to whole
+        # pages), so the transient footprint scales with the bucket, not
+        # with max_batch x max_seq_len.  Dense keeps the full-length
+        # scratch: its insert scatters whole slot slabs (bit-identical
+        # historical behavior, zeroed tail included).
+        if self.kv_layout == "paged":
+            ps = self.cache_mgr.page_size
+            scratch_len = -(-bucket // ps) * ps
+        else:
+            scratch_len = self.serve_cfg.max_seq_len
+        small = kv_cache.init_caches(
+            cfg, nb, scratch_len,
             dtype=jnp.float32, quantized=self.quant_cache,
         )
         logits, filled, _ = lm.forward(
@@ -258,18 +267,12 @@ class ServingEngine:
             caches=small, kernel=self.kernel,
         )
         # causal attention keeps positions < length independent of the pad
-        # tail; the true prompt's logits live at index length-1
-        last = jax.lax.dynamic_slice_in_dim(logits, length - 1, 1, axis=1)
-        filled = self._mask_cache_tail(filled, length)
-
-        def insert(big, one):
-            # batch axis is axis 1 on every stacked cache leaf
-            return jax.lax.dynamic_update_index_in_dim(
-                big, one[:, 0].astype(big.dtype), slot_idx, 1
-            )
-
-        new_caches = jax.tree.map(insert, caches, filled)
-        return last[:, 0], new_caches
+        # tail; each row's true logits live at index length-1
+        idx = jnp.maximum(lengths - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        filled = kv_cache.mask_cache_tail(filled, lengths)
+        new_caches = self.cache_mgr.insert_prefill(caches, filled, slots)
+        return last, new_caches
 
     def _decode_scan(self, params, tokens, positions, active, rem, eos,
                      caches, key):
@@ -279,8 +282,10 @@ class ServingEngine:
         ``positions`` next write position, ``active`` live mask, ``rem``
         generation budget left, ``eos`` per-request eos id (-1 = none).
         Inactive slots freeze (token, position); re-running a frozen
-        position is idempotent for position-addressed caches and harmless
-        for retired SSM slots (their state is overwritten on re-prefill).
+        position is idempotent for position-addressed caches (dense slabs
+        and pages alike — retired paged slots write the trash page) and
+        harmless for retired SSM slots (their state is overwritten on
+        re-prefill).
         """
         sc = self.serve_cfg
         keys = jax.random.split(key, sc.decode_steps)
@@ -312,51 +317,63 @@ class ServingEngine:
 
     # -------------------------------------------------------------- step --
     def step(self) -> dict:
-        """One engine iteration: admit waiting prompts, then scan-decode."""
+        """One engine iteration: admit waiting prompts (grouped by bucket,
+        one dispatch per same-bucket group), then scan-decode."""
         tel = self.telemetry
         tel["steps"] += 1
         stats = {"prefilled": 0, "decoded": 0}
         sc = self.serve_cfg
-        # 1. admission: fill free slots with queued prompts (bucketed)
+        # 1. admission: fill free slots with queued prompts.  FIFO order;
+        # a prompt that cannot get pages yet blocks the queue head until
+        # finished slots return pages (no reordering, no starvation).
         cap = sc.max_prefill_per_step or sc.max_batch
-        for idx, slot in enumerate(self.slots):
-            if not self._queue or stats["prefilled"] >= cap:
+        free = [i for i, s in enumerate(self.slots) if not s.active]
+        admitted: list[tuple[int, Request]] = []
+        while self._queue and free and len(admitted) < cap:
+            head = self._queue[0]
+            # reserve worst-case pages (prompt + generation budget) so
+            # decode growth can never exhaust the pool mid-run; pages
+            # still allocate lazily as the sequence actually grows
+            reserve_len = self._reserve_len(head)
+            if not self.cache_mgr.can_reserve(
+                self.cache_mgr.pages_for(reserve_len)
+            ):
                 break
-            if slot.active:
-                continue
             req = self._queue.pop(0)
             # queue wait ends at pop: prefill execution/compile time that
             # follows is prefill_time_s, not waiting
             req.admitted_at = time.perf_counter()
             tel["queue_wait_s_total"] += req.queue_wait_s
             tel["prompts_admitted"] += 1
-            n = len(req.prompt)
-            bucket = self.bucket_for(n)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :n] = req.prompt
-            fn = self._prefill_fn.get(bucket)
-            if fn is None:
-                fn = jax.jit(self._prefill_bucket)
-                self._prefill_fn[bucket] = fn
-                tel["prefill_compiles"] += 1
-            t0 = time.perf_counter()
-            logits, self.caches = fn(
-                self.params, jnp.asarray(toks), jnp.int32(n),
-                self.caches, idx,
+            idx = free.pop(0)
+            self.cache_mgr.admit(idx, len(req.prompt), reserve_len)
+            admitted.append((idx, req))
+        groups: dict[int, list[tuple[int, Request]]] = {}
+        for idx, req in admitted:
+            groups.setdefault(self.bucket_for(len(req.prompt)), []).append(
+                (idx, req)
             )
-            self.key, sub = jax.random.split(self.key)
-            nxt = int(sample(logits, sub, temperature=sc.temperature)[0])
-            tel["prefill_time_s"] += time.perf_counter() - t0
-            req.generated.append(nxt)
-            tel["tokens_generated"] += 1
-            slot.active, slot.request = True, req
-            slot.pos = n  # next write position
-            slot.last_token = nxt
-            stats["prefilled"] += 1
-            self._retire(idx)
+        for bucket in sorted(groups):
+            self._dispatch_prefill(bucket, groups[bucket], stats)
 
         # 2. scan decode for all active slots
         if any(s.active for s in self.slots):
+            for idx, slot in enumerate(self.slots):
+                if slot.active:
+                    # the scan advances at most min(decode_steps, remaining
+                    # budget) positions, so this never outgrows the pages
+                    # reserved at admission
+                    rem_i = max(
+                        slot.request.max_new_tokens
+                        - len(slot.request.generated),
+                        1,
+                    )
+                    self.cache_mgr.ensure(
+                        idx,
+                        min(slot.pos + min(sc.decode_steps, rem_i),
+                            sc.max_seq_len),
+                    )
+            self.caches = self.cache_mgr.write_table(self.caches)
             tokens = np.asarray([s.last_token for s in self.slots], np.int32)
             positions = np.asarray(
                 [s.pos if s.active else 0 for s in self.slots], np.int32
@@ -407,13 +424,60 @@ class ServingEngine:
                 if not act_f[idx]:
                     self._finished[slot.request.uid] = slot.request
                     self.slots[idx] = _Slot()
+                    self.cache_mgr.free(idx)
                 else:
                     self._retire(idx)
+        tel.update(self.cache_mgr.stats().as_dict())
         stats.update(
             prefill_compiles=tel["prefill_compiles"],
             decode_compiles=tel["decode_compiles"],
         )
         return stats
+
+    def _dispatch_prefill(
+        self, bucket: int, group: list[tuple[int, Request]], stats: dict
+    ):
+        """One fixed-shape prefill dispatch filling every slot in ``group``
+        (all prompts share ``bucket``); pad rows carry the slot sentinel
+        ``max_batch`` so their writes are dropped."""
+        sc, tel = self.serve_cfg, self.telemetry
+        nb = sc.max_batch
+        toks = np.zeros((nb, bucket), np.int32)
+        lengths = np.zeros((nb,), np.int32)
+        slots_arr = np.full((nb,), nb, np.int32)
+        for row, (idx, req) in enumerate(group):
+            n = len(req.prompt)
+            toks[row, :n] = req.prompt
+            lengths[row] = n
+            slots_arr[row] = idx
+        self.caches = self.cache_mgr.write_table(self.caches)
+        fn = self._prefill_fn.get(bucket)
+        if fn is None:
+            fn = jax.jit(self._prefill_batch)
+            self._prefill_fn[bucket] = fn
+            tel["prefill_compiles"] += 1
+        t0 = time.perf_counter()
+        last, self.caches = fn(
+            self.params, jnp.asarray(toks), jnp.asarray(lengths),
+            self.caches, jnp.asarray(slots_arr),
+        )
+        tel["prefill_dispatches"] += 1
+        # one vectorized sample + one device->host transfer for the group
+        self.key, sub = jax.random.split(self.key)
+        first_tokens = np.asarray(
+            sample(last[:len(group)], sub, temperature=sc.temperature)
+        )
+        for row, (idx, req) in enumerate(group):
+            nxt = int(first_tokens[row])
+            req.generated.append(nxt)
+            tel["tokens_generated"] += 1
+            slot = self.slots[idx]
+            slot.active, slot.request = True, req
+            slot.pos = len(req.prompt)  # next write position
+            slot.last_token = nxt
+            stats["prefilled"] += 1
+            self._retire(idx)
+        tel["prefill_time_s"] += time.perf_counter() - t0
 
     def _retire(self, idx: int):
         slot = self.slots[idx]
@@ -422,6 +486,7 @@ class ServingEngine:
         ):
             self._finished[slot.request.uid] = slot.request
             self.slots[idx] = _Slot()
+            self.cache_mgr.free(idx)
 
     def run(self, max_steps: int = 10_000) -> dict[int, Request]:
         t0 = time.perf_counter()

@@ -1,0 +1,758 @@
+"""KV-cache subsystem: one CacheManager, two storage layouts (dense, paged).
+
+The paper's sub-2us datapath works because the memory layout is decided
+once, ahead of time, and every pipeline stage addresses it with fixed
+strides.  This module gives the serving engine the same discipline at
+datacenter scale: all KV-cache *layout* knowledge — which leaves have a
+sequence axis, how a prefilled slab is inserted into a slot, how decode
+reads and writes one token — lives here, behind a small set of traced
+helpers plus a host-side :class:`CacheManager`.
+
+Two layouts share one interface:
+
+* **dense** — the classic per-slot slab: every cache leaf carries a
+  ``(batch, ..., max_seq_len, ...)`` sequence axis and slot ``i`` owns
+  row ``i`` for the engine's lifetime.  Bit-identical to the historical
+  engine behavior.
+
+* **paged** — block-table-indexed pages (vLLM-style, with hls4ml's
+  fixed-stride flavor: ``max_seq_len`` must be a whole number of pages).
+  K/V live in a shared pool ``(num_pages, ..., page_size, ...)`` with no
+  batch axis; each slot holds a ``page_table`` row of physical page ids.
+  Long contexts allocate pages on demand as decode crosses page
+  boundaries, and a finished slot returns its pages to the free list
+  immediately.  Admission *reserves* each request's worst-case page
+  count (prompt + generation budget) up front — allocation stays lazy,
+  but decode growth can never exhaust the pool mid-run; when the pool
+  cannot cover the queue head's reservation, admission waits FIFO until
+  finished slots return pages.  Physical page 0 is a reserved *trash*
+  page: unallocated table entries point at it, so masked pad writes land
+  there harmlessly and are never read back (reads are masked by position
+  validity).
+
+The attention layer does not assume a contiguous sequence axis: it asks
+``is_paged(cache)`` and goes through :func:`paged_decode_write` /
+:func:`paged_decode_view` (gather/scatter views) when the per-layer
+cache is a page pool.  Prefill always fills a *dense* scratch cache
+(the model's natural contiguous write), and the engine's jitted prefill
+program inserts it through :meth:`CacheManager.insert_prefill`, which
+is the only layout-specific step.
+
+Families whose state is not position-addressed (SSM/hybrid state,
+rolling sliding-window buffers) cannot be paged; the manager silently
+falls back to dense for them, mirroring the engine's exact-length
+prefill fallback.
+
+int8 KV policies compose: the per-token scales ride their own pools
+``(num_pages, ..., page_size)``, so the precision plan's ``kv_cache``
+rule applies per page exactly as it applies per slab in dense layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+
+PyTree = Any
+
+#: cache leaves with a sequence axis: name -> axis index from the right
+SEQ_AXIS_FROM_RIGHT = {
+    "k": 2, "v": 2, "latent": 2,  # (..., cache_len, feature)
+    "k_scale": 1, "v_scale": 1, "latent_scale": 1,  # (..., cache_len)
+}
+
+#: pool leaves whose page axis is followed by a head axis (page, head, off, ...)
+_HEAD_MAJOR_POOLS = ("k", "v", "k_scale", "v_scale")
+
+#: reserved physical page id: write sink for masked/pad scatters, never read
+TRASH_PAGE = 0
+
+LAYOUTS = ("dense", "paged")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer attention cache specs (both layouts)
+# ---------------------------------------------------------------------------
+
+
+def attention_cache_spec(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    quantized: bool = False,
+    layout: str = "dense",
+    page_size: int | None = None,
+    num_pages: int | None = None,
+) -> dict:
+    """Abstract per-layer attention cache (ShapeDtypeStruct); stacked by
+    the caller.
+
+    Dense GQA: (B, Hkv, L, D) k/v slabs.  Sliding window: rolling buffer
+    of length ``window`` + slot positions.  MLA: packed latent
+    (B, L, kv_lora + rope_dim).  quantized=True adds int8 codes +
+    per-token f32 scales (the paper's fixed-point datapath applied to
+    the KV cache, KIVI-style).
+
+    Paged: k/v (or latent) pools keyed by physical page —
+    (num_pages, Hkv, page_size, D) / (num_pages, page_size, width) —
+    plus a per-slot ``page_table`` (batch, max_len // page_size) of
+    physical page ids.  Scale pools mirror their data pools per page.
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown kv layout {layout!r}; use one of {LAYOUTS}")
+    if layout == "paged":
+        return _paged_attention_cache_spec(
+            cfg, batch, max_len, dtype, quantized, page_size, num_pages
+        )
+    if cfg.attn_kind == "none":
+        return {}
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        width = m.kv_lora_rank + m.qk_rope_head_dim
+        if quantized:
+            return {
+                "latent": jax.ShapeDtypeStruct(
+                    (batch, max_len, width), jnp.int8
+                ),
+                "latent_scale": jax.ShapeDtypeStruct(
+                    (batch, max_len), jnp.float32
+                ),
+            }
+        return {
+            "latent": jax.ShapeDtypeStruct((batch, max_len, width), dtype),
+        }
+    hd = cfg.resolved_head_dim
+    length = max_len
+    extra = {}
+    if cfg.sliding_window is not None and cfg.sliding_window < max_len:
+        length = cfg.sliding_window
+        extra["slot_pos"] = jax.ShapeDtypeStruct((batch, length), jnp.int32)
+    kv_dtype = jnp.int8 if quantized else dtype
+    spec = {
+        "k": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, length, hd), kv_dtype),
+        "v": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, length, hd), kv_dtype),
+        **extra,
+    }
+    if quantized:
+        spec["k_scale"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_kv_heads, length), jnp.float32
+        )
+        spec["v_scale"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_kv_heads, length), jnp.float32
+        )
+    return spec
+
+
+def _paged_attention_cache_spec(
+    cfg, batch, max_len, dtype, quantized, page_size, num_pages
+):
+    if page_size is None or num_pages is None:
+        raise ValueError("paged layout requires page_size and num_pages")
+    if max_len % page_size != 0:
+        raise ValueError(
+            f"paged layout requires max_seq_len ({max_len}) to be a whole "
+            f"number of pages (kv_page_size={page_size})"
+        )
+    if cfg.attn_kind not in ("gqa", "mla") or cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"paged layout supports position-addressed GQA/MLA caches only "
+            f"(got attn_kind={cfg.attn_kind!r}, family={cfg.family!r})"
+        )
+    if cfg.sliding_window is not None and cfg.sliding_window < max_len:
+        raise ValueError(
+            "paged layout does not support rolling sliding-window buffers"
+        )
+    pages_per_slot = max_len // page_size
+    table = jax.ShapeDtypeStruct((batch, pages_per_slot), jnp.int32)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        width = m.kv_lora_rank + m.qk_rope_head_dim
+        spec = {
+            "latent": jax.ShapeDtypeStruct(
+                (num_pages, page_size, width),
+                jnp.int8 if quantized else dtype,
+            ),
+        }
+        if quantized:
+            spec["latent_scale"] = jax.ShapeDtypeStruct(
+                (num_pages, page_size), jnp.float32
+            )
+    else:
+        hd = cfg.resolved_head_dim
+        kv_dtype = jnp.int8 if quantized else dtype
+        spec = {
+            "k": jax.ShapeDtypeStruct(
+                (num_pages, cfg.n_kv_heads, page_size, hd), kv_dtype
+            ),
+            "v": jax.ShapeDtypeStruct(
+                (num_pages, cfg.n_kv_heads, page_size, hd), kv_dtype
+            ),
+        }
+        if quantized:
+            spec["k_scale"] = jax.ShapeDtypeStruct(
+                (num_pages, cfg.n_kv_heads, page_size), jnp.float32
+            )
+            spec["v_scale"] = jax.ShapeDtypeStruct(
+                (num_pages, cfg.n_kv_heads, page_size), jnp.float32
+            )
+    spec["page_table"] = table
+    return spec
+
+
+def init_attention_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16, **kw
+):
+    spec = attention_cache_spec(cfg, batch, max_len, dtype, **kw)
+    return {k: _zero_leaf(k, v) for k, v in spec.items()}
+
+
+def _zero_leaf(name: str, s: jax.ShapeDtypeStruct):
+    if name == "page_table":
+        return jnp.full(s.shape, TRASH_PAGE, jnp.int32)
+    if s.dtype == jnp.int32:
+        return jnp.full(s.shape, -1, jnp.int32)  # invalid slot marker
+    return jnp.zeros(s.shape, s.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stacked model-level caches (moved from models/lm.py)
+# ---------------------------------------------------------------------------
+
+
+def _per_layer_cache_spec(cfg, batch, max_len, dtype, quantized, **layout_kw):
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models import ssm  # runtime import: no module cycle
+
+        return ssm.mamba_cache_spec(cfg, batch, jnp.float32)
+    return attention_cache_spec(
+        cfg, batch, max_len, dtype, quantized=quantized, **layout_kw
+    )
+
+
+def abstract_caches(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    quantized: bool = False,
+    layout: str = "dense",
+    page_size: int | None = None,
+    num_pages: int | None = None,
+) -> PyTree:
+    """Stacked (leading layer axis) abstract caches for a whole model."""
+    layout_kw = dict(layout=layout, page_size=page_size, num_pages=num_pages)
+    per_layer = _per_layer_cache_spec(
+        cfg, batch, max_len, dtype, quantized, **layout_kw
+    )
+    stacked = {
+        k: jax.ShapeDtypeStruct((cfg.n_layers,) + v.shape, v.dtype)
+        for k, v in per_layer.items()
+    }
+    caches: dict = {"layers": stacked}
+    if cfg.family == "hybrid":
+        # runtime imports: no module cycle (attention -> kv_cache)
+        from repro.models import blocks, lm
+
+        shared = blocks.shared_attn_cache_spec(cfg, batch, max_len, dtype)
+        n_apps = lm.n_shared_apps(cfg)
+        caches["shared"] = {
+            k: jax.ShapeDtypeStruct((n_apps,) + v.shape, v.dtype)
+            for k, v in shared.items()
+        }
+    return caches
+
+
+def init_caches(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    quantized: bool = False,
+    **layout_kw,
+) -> PyTree:
+    spec = abstract_caches(cfg, batch, max_len, dtype, quantized, **layout_kw)
+
+    def _walk(node):
+        if isinstance(node, dict):
+            return {k: _walk_named(k, v) for k, v in node.items()}
+        return node
+
+    def _walk_named(name, node):
+        if isinstance(node, dict):
+            return {k: _walk_named(k, v) for k, v in node.items()}
+        return _zero_leaf(name, node)
+
+    return _walk(spec)
+
+
+def cache_logical_axes(
+    cfg: ModelConfig, quantized: bool = False, layout: str = "dense"
+) -> PyTree:
+    """Logical axes for cache sharding (distributed/sharding.py).
+
+    Paged pools have no batch axis — they shard over heads (TP) with the
+    page axis replicated; the tiny page table shards over batch.
+    """
+    if layout == "paged":
+        if cfg.attn_kind == "mla":
+            per_layer = {"latent": ("layers", None, None, None)}
+            if quantized:
+                per_layer["latent_scale"] = ("layers", None, None)
+        else:
+            per_layer = {
+                "k": ("layers", None, "kv_heads", None, None),
+                "v": ("layers", None, "kv_heads", None, None),
+            }
+            if quantized:
+                per_layer["k_scale"] = ("layers", None, "kv_heads", None)
+                per_layer["v_scale"] = ("layers", None, "kv_heads", None)
+        per_layer["page_table"] = ("layers", "batch", None)
+        return {"layers": per_layer}
+    kind = "mamba" if cfg.family in ("ssm", "hybrid") else cfg.attn_kind
+    if kind == "mamba":
+        per_layer = {
+            "ssm_state": ("layers", "batch", "ssm_heads", None, None),
+            "conv_state": ("layers", "batch", None, "inner"),
+        }
+    elif kind == "mla":
+        per_layer = {"latent": ("layers", "batch", "cache_len", None)}
+        if quantized:
+            per_layer["latent_scale"] = ("layers", "batch", "cache_len")
+    else:
+        per_layer = {
+            "k": ("layers", "batch", "kv_heads", "cache_len", None),
+            "v": ("layers", "batch", "kv_heads", "cache_len", None),
+        }
+        if cfg.sliding_window is not None:
+            per_layer["slot_pos"] = ("layers", "batch", None)
+        if quantized:
+            per_layer["k_scale"] = ("layers", "batch", "kv_heads", "cache_len")
+            per_layer["v_scale"] = ("layers", "batch", "kv_heads", "cache_len")
+    axes: dict = {"layers": per_layer}
+    if cfg.family == "hybrid":
+        axes["shared"] = {
+            "k": ("layers", "batch", "kv_heads", "cache_len", None),
+            "v": ("layers", "batch", "kv_heads", "cache_len", None),
+        }
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Traced helpers: paged decode read/write views (used by models/attention.py)
+# ---------------------------------------------------------------------------
+
+
+def is_paged(cache: dict | None) -> bool:
+    """A per-layer cache dict is paged iff it carries a page table."""
+    return cache is not None and "page_table" in cache
+
+
+def _pool_page_size(name: str, pool: jax.Array) -> int:
+    return pool.shape[2] if name in _HEAD_MAJOR_POOLS else pool.shape[1]
+
+
+def paged_decode_write(
+    cache: dict, updates: dict[str, jax.Array], positions: jax.Array
+) -> dict:
+    """Scatter one token per slot into its physical page.
+
+    ``updates``: leaf name -> per-slot values with the seq axis removed
+    (k/v: (B, Hkv, D); scales: (B, Hkv); latent: (B, width);
+    latent_scale: (B,)).  ``positions``: (B,) global write positions.
+    Retired slots have all-trash page tables, so their (frozen) writes
+    land in the reserved trash page and never alias live data.
+    """
+    table = cache["page_table"]  # (B, pages_per_slot)
+    out = dict(cache)
+    for name, val in updates.items():
+        pool = cache[name]
+        ps = _pool_page_size(name, pool)
+        phys = jnp.take_along_axis(
+            table, (positions // ps)[:, None], axis=1
+        )[:, 0]  # (B,)
+        off = positions % ps
+        if name in _HEAD_MAJOR_POOLS:
+            out[name] = pool.at[phys, :, off].set(val.astype(pool.dtype))
+        else:
+            out[name] = pool.at[phys, off].set(val.astype(pool.dtype))
+    return out
+
+
+def paged_decode_view(cache: dict) -> dict[str, jax.Array]:
+    """Gather each slot's pages into a contiguous logical view.
+
+    Returns dense-shaped arrays — k/v: (B, Hkv, L, D); scales:
+    (B, Hkv, L); latent: (B, L, width); latent_scale: (B, L) — where
+    ``L = pages_per_slot * page_size == max_seq_len``, so downstream
+    attention math is bit-identical to the dense layout (unallocated
+    entries read the trash page and are masked by position validity,
+    exactly like dense positions beyond the write head).
+    """
+    table = cache["page_table"]  # (B, pages_per_slot)
+    out = {}
+    for name, pool in cache.items():
+        if name == "page_table":
+            continue
+        g = pool[table]  # (B, n_pages, ...)
+        if name in _HEAD_MAJOR_POOLS:
+            g = jnp.moveaxis(g, 2, 1)  # (B, Hkv, n_pages, ps[, D])
+            shape = g.shape[:2] + (g.shape[2] * g.shape[3],) + g.shape[4:]
+        else:
+            shape = (g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:]
+        out[name] = g.reshape(shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Traced helpers: prefill masking + layout-specific slot insertion
+# ---------------------------------------------------------------------------
+
+
+def mask_cache_tail(filled: PyTree, lengths: jax.Array) -> PyTree:
+    """Zero cache entries at positions >= the per-row prompt length.
+
+    ``filled``: stacked dense caches with batch axis 1 on every leaf.
+    ``lengths``: (N,) true prompt lengths (traced, so every same-bucket
+    batch reuses one compiled program).  Leaves without a sequence axis
+    (SSM state, slot_pos) pass through; those families use exact-length
+    prefill anyway, where the mask is all-true.
+    """
+
+    def _mask_group(group):
+        out = {}
+        for name, leaf in group.items():
+            axis_r = SEQ_AXIS_FROM_RIGHT.get(name)
+            if axis_r is None:
+                out[name] = leaf
+                continue
+            axis = leaf.ndim - axis_r
+            seq = jnp.arange(leaf.shape[axis])
+            seq_b = seq.reshape(
+                (1,) * axis + (-1,) + (1,) * (leaf.ndim - axis - 1)
+            )
+            len_b = lengths.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+            out[name] = jnp.where(
+                seq_b < len_b, leaf, jnp.zeros((), leaf.dtype)
+            )
+        return out
+
+    return {k: _mask_group(v) for k, v in filled.items()}
+
+
+def insert_prefill_dense(big: PyTree, filled: PyTree, slots: jax.Array):
+    """Scatter freshly prefilled rows into their slots (batch axis 1 on
+    every stacked leaf).  Rows whose slot index is out of range (the
+    engine's padding sentinel) are dropped."""
+
+    def ins(b, f):
+        return b.at[:, slots].set(f.astype(b.dtype), mode="drop")
+
+    return jax.tree.map(ins, big, filled)
+
+
+def insert_prefill_paged(
+    big: PyTree, filled: PyTree, slots: jax.Array, page_size: int
+):
+    """Scatter dense prefilled rows into each slot's physical pages.
+
+    ``filled`` is the dense scratch cache the model wrote (tail-masked);
+    it may be shorter than the full logical range — the engine sizes it
+    to the prefill bucket rounded up to whole pages.  Its page view is
+    scattered through the leading columns of the slots' page-table rows;
+    later logical pages stay untouched (any stale tenant data there is
+    masked by position validity until decode overwrites each position as
+    it becomes valid).  Unallocated table entries — the pad tail beyond
+    a prompt's allocated pages, and entire rows for padding slots —
+    point at the trash page, so those writes are inert.
+    """
+    layers = dict(big["layers"])
+    table = layers["page_table"][0]  # identical across layers: (B, n_pages)
+    row_tables = jnp.take(
+        table, slots, axis=0, mode="fill", fill_value=TRASH_PAGE
+    )  # (N, pages_per_slot)
+    for name, small in filled["layers"].items():
+        pool = layers[name]
+        axis = small.ndim - SEQ_AXIS_FROM_RIGHT[name]
+        n_pages = small.shape[axis] // page_size
+        paged_shape = (
+            small.shape[:axis] + (n_pages, page_size) + small.shape[axis + 1:]
+        )
+        pages = jnp.moveaxis(small.reshape(paged_shape), axis, 2)
+        # pool (L, P, ...), indices (N, n_pages) on axis 1
+        layers[name] = pool.at[:, row_tables[:, :n_pages]].set(
+            pages.astype(pool.dtype)
+        )
+    return {"layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# Host-side manager
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    layout: str
+    kv_bytes: int
+    page_size: int
+    pages_in_use: int
+    pages_capacity: int
+    page_allocs_total: int
+    pages_in_use_peak: int
+
+    @property
+    def page_utilization(self) -> float:
+        return self.pages_in_use / max(self.pages_capacity, 1)
+
+    def as_dict(self) -> dict:
+        return {
+            "kv_layout": self.layout,
+            "kv_bytes": self.kv_bytes,
+            "kv_page_size": self.page_size,
+            "pages_in_use": self.pages_in_use,
+            "pages_capacity": self.pages_capacity,
+            "page_utilization": self.page_utilization,
+            "page_allocs_total": self.page_allocs_total,
+            "pages_in_use_peak": self.pages_in_use_peak,
+        }
+
+
+class CacheManager:
+    """Owns the KV-cache storage layout for one serving engine.
+
+    Host-side responsibilities: building the device cache pytree,
+    page allocation / reclamation per slot (paged layout), and keeping
+    the device page table in sync.  Traced responsibility: inserting a
+    prefilled dense slab into the big caches inside the engine's jitted
+    prefill program (:meth:`insert_prefill` — static layout config only,
+    so it adds no jit programs).
+
+    Dense layout is modeled as one page of ``max_seq_len`` tokens per
+    slot, statically bound to the slot — which makes the occupancy
+    telemetry uniform across layouts.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        serve_cfg: ServeConfig,
+        quantized: bool = False,
+        dtype=jnp.float32,
+    ):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.quantized = quantized
+        self.dtype = dtype
+        sc = serve_cfg
+        rolling = (
+            cfg.sliding_window is not None
+            and cfg.sliding_window < sc.max_seq_len
+        )
+        #: position-addressed caches can be right-padded (bucketed
+        #: prefill) and paged; SSM/hybrid state and rolling buffers can't
+        self.position_addressed = (
+            cfg.attn_kind in ("gqa", "mla")
+            and cfg.family not in ("ssm", "hybrid")
+            and not rolling
+        )
+        requested = sc.kv_layout
+        if requested not in LAYOUTS:
+            raise ValueError(
+                f"unknown kv_layout {requested!r}; use one of {LAYOUTS}"
+            )
+        self.layout = (
+            "paged"
+            if requested == "paged" and self.position_addressed
+            else "dense"
+        )
+        if self.layout == "paged":
+            ps = sc.kv_page_size
+            if ps < 1 or sc.max_seq_len % ps != 0:
+                raise ValueError(
+                    f"kv_page_size={ps} must divide max_seq_len="
+                    f"{sc.max_seq_len} (fixed-stride pages)"
+                )
+            self.page_size = ps
+            self.pages_per_slot = sc.max_seq_len // ps
+            auto = sc.max_batch * self.pages_per_slot + 1  # +1 trash page
+            self.num_pages = auto if sc.kv_pages is None else sc.kv_pages
+            if self.num_pages < 2:
+                raise ValueError("kv_pages must be >= 2 (one is the trash page)")
+            # page 0 is the reserved trash page; pop() allocates ascending
+            self._free = list(range(self.num_pages - 1, 0, -1))
+        else:
+            # dense: one slot-bound "page" of max_seq_len tokens
+            self.page_size = sc.max_seq_len
+            self.pages_per_slot = 1
+            self.num_pages = sc.max_batch
+            self._free = []
+        self._slot_pages: list[list[int]] = [[] for _ in range(sc.max_batch)]
+        # worst-case pages promised to each resident request at admission;
+        # allocation stays lazy, but admission never over-promises the pool
+        self._slot_reserved: list[int] = [0] * sc.max_batch
+        self._table = np.zeros(
+            (sc.max_batch, self.pages_per_slot), np.int32
+        )
+        self._table_dirty = True
+        self._allocs_total = 0
+        self._peak_in_use = 0
+        self.kv_bytes = sum(
+            int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(self._abstract())
+        )
+
+    # ----------------------------------------------------------- layout --
+    def _layout_kw(self) -> dict:
+        if self.layout == "paged":
+            return dict(
+                layout="paged",
+                page_size=self.page_size,
+                num_pages=self.num_pages,
+            )
+        return dict(layout="dense")
+
+    def _abstract(self) -> PyTree:
+        return abstract_caches(
+            self.cfg, self.serve_cfg.max_batch, self.serve_cfg.max_seq_len,
+            dtype=self.dtype, quantized=self.quantized, **self._layout_kw(),
+        )
+
+    def init_device_caches(self) -> PyTree:
+        return init_caches(
+            self.cfg, self.serve_cfg.max_batch, self.serve_cfg.max_seq_len,
+            dtype=self.dtype, quantized=self.quantized, **self._layout_kw(),
+        )
+
+    # ------------------------------------------------------- allocation --
+    def pages_for(self, length: int) -> int:
+        """Pages needed to hold ``length`` tokens (at least one)."""
+        return max(1, -(-length // self.page_size))
+
+    @property
+    def pages_reserved_unallocated(self) -> int:
+        """Reserved-but-not-yet-allocated pages (promised decode headroom)."""
+        return sum(
+            max(r - len(p), 0)
+            for r, p in zip(self._slot_reserved, self._slot_pages)
+        )
+
+    def can_reserve(self, n_pages: int) -> bool:
+        """Whether the pool can promise ``n_pages`` to a new request without
+        eating another resident request's unallocated reservation."""
+        if self.layout != "paged":
+            return True  # dense slabs are slot-bound; engine gates on slots
+        return len(self._free) - self.pages_reserved_unallocated >= n_pages
+
+    def admit(self, slot: int, prompt_len: int, reserve_len: int) -> None:
+        """Admit a request: reserve worst-case pages for its whole lifetime
+        (``reserve_len`` = prompt + generation budget, capped at
+        max_seq_len), then allocate the prompt's pages.  Reservation is a
+        counter, not an allocation — pages still materialize lazily in
+        :meth:`ensure` — but admission-time reservation guarantees decode
+        growth can never exhaust the pool mid-run."""
+        need = self.pages_for(min(reserve_len, self.serve_cfg.max_seq_len))
+        if self.layout == "paged":
+            if not self.can_reserve(need):
+                raise RuntimeError(
+                    f"cannot reserve {need} KV pages for admission; check "
+                    "can_reserve() before calling admit()"
+                )
+            self._slot_reserved[slot] = need
+        self.alloc(slot, prompt_len)
+
+    def alloc(self, slot: int, length: int) -> None:
+        """Ensure ``slot`` owns pages covering positions [0, length)."""
+        self.ensure(slot, length)
+
+    def ensure(self, slot: int, upto_len: int) -> None:
+        """Grow ``slot``'s page list to cover ``upto_len`` positions —
+        called before each decode dispatch so mid-scan writes never cross
+        into unallocated space.  Under the engine's admission discipline
+        (reservation at admit()), the pool-exhausted error below is
+        unreachable; it guards direct misuse of the manager."""
+        if self.layout != "paged":
+            if not self._slot_pages[slot]:
+                self._slot_pages[slot] = [slot]
+                self._allocs_total += 1
+                self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
+            return
+        pages = self._slot_pages[slot]
+        need = self.pages_for(upto_len)
+        while len(pages) < need:
+            if not self._free:
+                raise RuntimeError(
+                    f"KV page pool exhausted ({self.num_pages} pages of "
+                    f"{self.page_size} tokens); raise ServeConfig.kv_pages "
+                    "or admit fewer concurrent long sequences"
+                )
+            page = self._free.pop()
+            self._table[slot, len(pages)] = page
+            pages.append(page)
+            self._allocs_total += 1
+            self._table_dirty = True
+        self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
+
+    def free(self, slot: int) -> None:
+        """Return a finished slot's pages (and reservation) immediately."""
+        pages = self._slot_pages[slot]
+        self._slot_pages[slot] = []
+        self._slot_reserved[slot] = 0
+        if self.layout != "paged" or not pages:
+            return
+        self._free.extend(reversed(pages))
+        self._table[slot, :] = TRASH_PAGE
+        self._table_dirty = True
+
+    # ------------------------------------------------------ device sync --
+    def write_table(self, caches: PyTree) -> PyTree:
+        """Refresh the stacked device page table from the host table
+        (no-op for dense or when nothing changed since the last sync)."""
+        if self.layout != "paged" or not self._table_dirty:
+            return caches
+        table = jnp.asarray(self._table)
+        stacked = jnp.broadcast_to(
+            table[None], (self.cfg.n_layers,) + table.shape
+        )
+        layers = dict(caches["layers"])
+        layers["page_table"] = stacked
+        self._table_dirty = False
+        return {**caches, "layers": layers}
+
+    # --------------------------------------------------- traced insert --
+    def insert_prefill(
+        self, big: PyTree, filled: PyTree, slots: jax.Array
+    ) -> PyTree:
+        """Insert tail-masked dense prefill rows into the big caches
+        (traced inside the engine's per-bucket jitted prefill)."""
+        if self.layout == "paged":
+            return insert_prefill_paged(big, filled, slots, self.page_size)
+        return insert_prefill_dense(big, filled, slots)
+
+    # ---------------------------------------------------------- metrics --
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self._slot_pages)
+
+    @property
+    def pages_capacity(self) -> int:
+        if self.layout == "paged":
+            return self.num_pages - 1  # trash page is not allocatable
+        return self.serve_cfg.max_batch
+
+    def stats(self) -> CacheStats:
+        return CacheStats(
+            layout=self.layout,
+            kv_bytes=self.kv_bytes,
+            page_size=self.page_size,
+            pages_in_use=self.pages_in_use,
+            pages_capacity=self.pages_capacity,
+            page_allocs_total=self._allocs_total,
+            pages_in_use_peak=self._peak_in_use,
+        )

@@ -121,42 +121,30 @@ def test_unknown_policy_name():
 
 
 # ---------------------------------------------------------------------------
-# Legacy lowering (deprecation shims, single source of truth)
+# Legacy lowering (model-level QuantConfig -> policy, single source of truth)
 # ---------------------------------------------------------------------------
 
 
-def test_serve_config_legacy_flags_lower_with_deprecation():
-    sc = ServeConfig(int8_weights=True, int8_kv_cache=True, lut_softmax=True)
-    with pytest.deprecated_call():
-        policy = sc.resolved_policy()
-    plan = policy.resolve(2)
-    assert plan.int8_weights and plan.int8_kv_cache and plan.lut_softmax
-    # the lowered rules are exactly the int8_serve preset's
-    assert policy.rules == P.get_policy("int8_serve").rules
+def test_serve_config_has_no_legacy_flags():
+    """The PR-2 deprecation shim is gone: ServeConfig carries `policy`
+    only (the old boolean triple would now be a TypeError)."""
+    with pytest.raises(TypeError):
+        ServeConfig(int8_kv_cache=True)
+    assert ServeConfig().policy is None
 
 
-def test_serve_config_policy_and_flags_conflict():
-    sc = ServeConfig(policy="int8_serve", int8_kv_cache=True)
-    with pytest.raises(ValueError, match="not both"):
-        sc.resolved_policy()
-
-
-def test_serve_config_no_policy_is_none():
-    assert ServeConfig().resolved_policy() is None
-
-
-def test_quant_config_delegates_to_policy():
-    """QuantConfig flags flow through the same policy engine (no more
-    silent divergence between QuantConfig and ServeConfig flags)."""
+def test_quant_config_lowers_through_policy_engine():
+    """Model-level QuantConfig flags flow through the one policy engine
+    (core.precision.from_quant_config)."""
     qc = quant.QuantConfig(lut_softmax=True, int8_kv_cache=True)
-    policy = qc.to_policy()
+    policy = P.from_quant_config(qc)
     plan = policy.resolve(2)
     assert plan.lut_softmax and plan.int8_kv_cache
     fp = fxp.ap_fixed(12, 6)
     qc2 = quant.QuantConfig(mode="qat", weight_cfg=fp, act_cfg=fp)
-    plan2 = qc2.to_policy().resolve(3)
+    plan2 = P.from_quant_config(qc2).resolve(3)
     assert plan2.uniform_layer_quant() == qc2
-    assert quant.QuantConfig().to_policy() is None
+    assert P.from_quant_config(quant.QuantConfig()) is None
 
 
 def test_model_policy_precedence():
@@ -354,22 +342,24 @@ def test_engine_policy_adds_no_jit_programs():
     )
 
 
-def test_engine_policy_matches_legacy_flags():
-    """policy='int8_serve' generates exactly what the deprecated boolean
-    triple generated (the shim lowers onto identical rules)."""
+def test_engine_explicit_rules_match_int8_serve_preset():
+    """An explicitly constructed rule set equivalent to the old boolean
+    triple generates exactly what the int8_serve preset generates."""
     cfg = configs.get_config("granite-8b", reduced=True)
     params = lm.init_params(cfg, KEY)
-    with pytest.deprecated_call():
-        _, legacy = _run_engine(
-            cfg, params,
-            ServeConfig(max_batch=2, max_seq_len=64, int8_weights=True,
-                        int8_kv_cache=True, lut_softmax=True),
-        )
-    _, modern = _run_engine(
+    explicit = P.PrecisionPolicy("explicit", (
+        P.Rule("*.weights", P.int8(per_channel=True)),
+        P.Rule("kv_cache", P.int8(per_channel=False)),
+        P.Rule("*.softmax", P.lut8()),
+    ))
+    _, a = _run_engine(
+        cfg, params, ServeConfig(max_batch=2, max_seq_len=64, policy=explicit)
+    )
+    _, b = _run_engine(
         cfg, params,
         ServeConfig(max_batch=2, max_seq_len=64, policy="int8_serve"),
     )
-    assert legacy == modern
+    assert a == b
 
 
 def test_engine_auto_policy_from_model_config():

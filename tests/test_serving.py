@@ -9,10 +9,16 @@ import pytest
 
 from repro import configs
 from repro.configs.base import ServeConfig
+from repro.core import precision as P
 from repro.models import lm
 from repro.serve import ServingEngine
 
 KEY = jax.random.PRNGKey(7)
+
+# int8 per-token KV cache only (what the removed int8_kv_cache flag selected)
+KV8 = P.PrecisionPolicy(
+    "kv8", (P.Rule("kv_cache", P.int8(per_channel=False)),)
+)
 
 
 @pytest.mark.parametrize(
@@ -112,7 +118,7 @@ def test_int8_kv_cache_quality():
     ref = _greedy_ref(cfg, params, prompt, 8)
     eng = ServingEngine(
         cfg, params,
-        ServeConfig(max_batch=1, max_seq_len=64, int8_kv_cache=True),
+        ServeConfig(max_batch=1, max_seq_len=64, policy=KV8),
     )
     uid = eng.submit(prompt, 8)
     res = eng.run()
@@ -123,10 +129,13 @@ def test_int8_kv_cache_quality():
 def test_lut_softmax_serving_runs():
     cfg = configs.get_config("granite-8b", reduced=True)
     params = lm.init_params(cfg, KEY)
+    w8_lut = P.PrecisionPolicy("w8_lut", (
+        P.Rule("*.weights", P.int8(per_channel=True)),
+        P.Rule("*.softmax", P.lut8()),
+    ))
     eng = ServingEngine(
         cfg, params,
-        ServeConfig(max_batch=2, max_seq_len=48, lut_softmax=True,
-                    int8_weights=True),
+        ServeConfig(max_batch=2, max_seq_len=48, policy=w8_lut),
     )
     uid = eng.submit([3, 1, 4], 4)
     res = eng.run()
@@ -153,7 +162,7 @@ def test_int8_mla_latent_cache_quality():
     ref = _greedy_ref(cfg, params, prompt, 8)
     eng = ServingEngine(
         cfg, params,
-        ServeConfig(max_batch=1, max_seq_len=64, int8_kv_cache=True),
+        ServeConfig(max_batch=1, max_seq_len=64, policy=KV8),
     )
     assert eng.quant_cache
     uid = eng.submit(prompt, 8)

@@ -82,11 +82,13 @@ def test_bucketed_prefill_logits_match_unpadded(cfg, params):
     caches = lm.init_caches(cfg, 1, 64, dtype=jnp.float32)
     padded = np.zeros((1, 16), np.int32)
     padded[0, :n] = prompt
-    lp, _ = eng._prefill_bucket(
-        eng.params, jnp.asarray(padded), jnp.int32(n), caches, 0
+    lengths = jnp.asarray([n], jnp.int32)
+    slots = jnp.asarray([0], jnp.int32)
+    lp, _ = eng._prefill_batch(
+        eng.params, jnp.asarray(padded), lengths, caches, slots
     )
-    le, _ = eng._prefill_bucket(
-        eng.params, jnp.asarray([prompt], jnp.int32), jnp.int32(n), caches, 0
+    le, _ = eng._prefill_batch(
+        eng.params, jnp.asarray([prompt], jnp.int32), lengths, caches, slots
     )
     np.testing.assert_allclose(np.asarray(lp), np.asarray(le), atol=1e-5)
 
@@ -132,6 +134,43 @@ def test_prefill_compile_count_bounded_by_buckets(cfg, params):
     assert len(eng._prefill_fn) <= len(buckets)
     # the v1 path really does compile per distinct length
     assert v1_eng.telemetry["prefill_compiles"] == len(set(lengths))
+
+
+# ------------------------------------------------- batched prefill -----
+
+
+def test_batched_same_bucket_prefill_fills_slots_in_one_dispatch(cfg, params):
+    """>= 2 prompts sharing a bucket must ride ONE prefill dispatch."""
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=4, max_seq_len=64, prefill_buckets=(8,),
+                    decode_steps=2),
+    )
+    for _ in range(4):
+        eng.submit([1, 2, 3], 4)
+    stats = eng.step()
+    assert stats["prefilled"] == 4
+    assert eng.telemetry["prefill_dispatches"] == 1
+    res = eng.run()
+    assert all(len(r.generated) == 4 for r in res.values())
+
+
+def test_mixed_bucket_step_dispatches_once_per_bucket(cfg, params):
+    """One engine step, two buckets -> exactly two prefill dispatches,
+    each batching its same-bucket prompts."""
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(max_batch=4, max_seq_len=64, prefill_buckets=(4, 16),
+                    decode_steps=2),
+    )
+    eng.submit([1, 2], 3)
+    eng.submit([3, 4, 5], 3)  # bucket 4
+    eng.submit([1] * 10, 3)
+    eng.submit([2] * 12, 3)  # bucket 16
+    stats = eng.step()
+    assert stats["prefilled"] == 4
+    assert eng.telemetry["prefill_dispatches"] == 2
+    assert eng.telemetry["prefill_compiles"] == 2
 
 
 # ------------------------------------------------- mid-scan retirement --
