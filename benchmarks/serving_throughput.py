@@ -8,6 +8,14 @@ on a physics-scale LM (paper Table I dims as a causal LM) and the reduced
 ``minicpm-2b`` config.  ``--kv-layout paged`` runs the same sweep through
 the block-table page pool (serve/kv_cache.py) instead of dense slabs.
 
+``--workload prefix`` switches the request stream from uniform random
+prompts to a prefix-heavy one — every prompt starts with the same long
+preamble, the physics pattern of a fixed detector-geometry prefix ahead
+of per-event payloads — with the prefix cache and page-aware preemption
+enabled, and the derived column gains
+``prefix_hit_rate=<hits/queries>;prefill_tokens_saved=<tokens never
+recomputed>;preemptions=<count>``.
+
 CSV rows: ``name,us_per_call,derived`` where ``us_per_call`` is mean
 microseconds per generated token and ``derived`` packs
 ``tok_s=<tokens/s>;prefill_compiles=<n>;decode_compiles=<n>;``
@@ -42,24 +50,41 @@ def physics_scale_lm() -> ModelConfig:
     )
 
 
+def _page_util_peak(tel: dict) -> float:
+    """Peak page utilization; 0.0 for degenerate pools (a zero-capacity
+    or dense-layout stats row must never divide by zero)."""
+    capacity = tel.get("pages_capacity", 0)
+    if capacity <= 0:
+        return 0.0
+    return tel.get("pages_in_use_peak", 0) / capacity
+
+
 def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
-               policy=None, kv_layout="dense", n_requests=8, max_new=16,
-               seed=0):
+               policy=None, kv_layout="dense", workload="uniform",
+               n_requests=8, max_new=16, seed=0):
+    prefix_mode = workload == "prefix"
     eng = ServingEngine(
         cfg, params,
         ServeConfig(
             max_batch=max_batch, max_seq_len=64,
             prefill_buckets=buckets, decode_steps=decode_steps,
             policy=policy, kv_layout=kv_layout, kv_page_size=16,
+            kv_prefix_cache=prefix_mode, kv_preemption=prefix_mode,
         ),
+    )
+    # prefix-heavy workload: one fixed detector-geometry-style preamble
+    # (a whole page of it) shared by every request in every wave
+    preamble = list(
+        np.random.default_rng(seed + 7).integers(0, cfg.vocab_size, 16)
     )
 
     def wave(wave_seed):
         rng = np.random.default_rng(wave_seed)
         for _ in range(n_requests):
-            prompt = list(
+            payload = list(
                 rng.integers(0, cfg.vocab_size, int(rng.integers(3, 14)))
             )
+            prompt = preamble + payload if prefix_mode else payload
             eng.submit(prompt, max_new_tokens=max_new)
         eng.run()
 
@@ -71,22 +96,31 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
     tel = eng.telemetry
     toks = tel["tokens_generated"] - tokens_before
     us_per_tok = tel["run_wall_s"] / max(toks, 1) * 1e6
-    page_util_peak = tel["pages_in_use_peak"] / max(tel["pages_capacity"], 1)
     derived = (
         f"tok_s={tel['tokens_per_s']:.1f};"
         f"prefill_compiles={tel['prefill_compiles']};"
         f"decode_compiles={tel['decode_compiles']};"
         f"kv_layout={tel['kv_layout']};"
         f"kv_mib={tel['kv_bytes'] / 2**20:.2f};"
-        f"page_util_peak={page_util_peak:.2f}"
+        f"page_util_peak={_page_util_peak(tel):.2f}"
     )
+    if prefix_mode:
+        derived += (
+            f";prefix_hit_rate={tel['prefix_hit_rate']:.2f}"
+            f";prefill_tokens_saved={tel['prefill_tokens_saved']}"
+            f";prefix_tokens_shared={tel['prefix_tokens_shared']}"
+            f";preemptions={tel['preemptions']}"
+        )
     return (
         f"serving_throughput,{name},b{max_batch},ds{decode_steps},"
         f"{us_per_tok:.1f},{derived}"
     )
 
 
-def run(policy: str | None = None, kv_layout: str = "dense") -> list[str]:
+def run(policy: str | None = None, kv_layout: str = "dense",
+        workload: str = "uniform") -> list[str]:
+    if workload == "prefix" and kv_layout == "dense":
+        kv_layout = "paged"  # sharing needs pages; dense would be inert
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
     archs = [
         ("physics_scale", physics_scale_lm()),
@@ -103,7 +137,7 @@ def run(policy: str | None = None, kv_layout: str = "dense") -> list[str]:
                         name, cfg, params,
                         max_batch=max_batch, buckets=buckets,
                         decode_steps=decode_steps, policy=arch_policy,
-                        kv_layout=kv_layout,
+                        kv_layout=kv_layout, workload=workload,
                     )
                 )
     return rows
@@ -121,9 +155,17 @@ def main():
     ap.add_argument("--kv-layout", default="dense",
                     choices=("dense", "paged"),
                     help="KV-cache storage layout (serve/kv_cache.py)")
+    ap.add_argument("--workload", default="uniform",
+                    choices=("uniform", "prefix"),
+                    help="request stream: uniform random prompts, or "
+                         "prefix-heavy (shared preamble; enables the "
+                         "prefix cache + preemption and reports hit rate "
+                         "/ prefill tokens saved / preemption count)")
     args = ap.parse_args()
     t0 = time.time()
-    for row in run(policy=args.policy, kv_layout=args.kv_layout):
+    rows = run(policy=args.policy, kv_layout=args.kv_layout,
+               workload=args.workload)
+    for row in rows:
         print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")
 

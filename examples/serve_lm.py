@@ -44,6 +44,16 @@ def main():
                          "block-table pages (serve/kv_cache.py)")
     ap.add_argument("--kv-page-size", type=int, default=16,
                     help="tokens per page (paged layout)")
+    ap.add_argument("--kv-prefix-cache", action="store_true",
+                    help="share full prompt pages across same-prefix "
+                         "requests (paged layout; copy-on-write)")
+    ap.add_argument("--kv-preemption", action="store_true",
+                    help="preempt the youngest resident instead of "
+                         "head-of-line blocking when the page pool is "
+                         "exhausted (paged layout, bit-exact datapath)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a fixed preamble of this many tokens to "
+                         "every request (prefix-cache exercise)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=True)
@@ -61,6 +71,8 @@ def main():
         max_prefill_per_step=args.max_prefill_per_step,
         kv_layout=args.kv_layout,
         kv_page_size=args.kv_page_size,
+        kv_prefix_cache=args.kv_prefix_cache,
+        kv_preemption=args.kv_preemption,
     )
     eng = ServingEngine(cfg, params, serve_cfg)
     print(f"serving {cfg.name} ({lm.count_params(cfg):,} params), "
@@ -70,9 +82,12 @@ def main():
           f"decode_steps={serve_cfg.decode_steps}")
 
     rng = np.random.default_rng(0)
+    preamble = list(rng.integers(0, cfg.vocab_size, args.shared_prefix))
     uids = []
     for i in range(args.requests):
-        prompt = list(rng.integers(0, cfg.vocab_size, rng.integers(3, 12)))
+        prompt = preamble + list(
+            rng.integers(0, cfg.vocab_size, rng.integers(3, 12))
+        )
         uids.append(eng.submit(prompt, max_new_tokens=args.max_new))
 
     t0 = time.perf_counter()
@@ -99,6 +114,12 @@ def main():
           f"{tel['kv_bytes'] / 2**20:.2f} MiB | "
           f"pages peak {tel['pages_in_use_peak']}/{tel['pages_capacity']} "
           f"(page_size={tel['kv_page_size']})")
+    if args.kv_prefix_cache or args.kv_preemption:
+        print(f"prefix cache: hit rate {tel['prefix_hit_rate']:.2f} | "
+              f"prefill tokens saved {tel['prefill_tokens_saved']} "
+              f"(+{tel['prefix_tokens_shared']} shared-storage) | "
+              f"{tel['cow_copies']} CoW copies | "
+              f"{tel['preemptions']} preemptions")
     for u in uids[:3]:
         r = results[u]
         print(f"  req {u}: prompt {r.prompt[:6]}... -> {r.generated}")

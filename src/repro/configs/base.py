@@ -249,6 +249,35 @@ class ServeConfig:
     # slot at full length plus the reserved trash page (no oversubscription);
     # set lower to oversubscribe memory for long-max_seq_len workloads.
     kv_pages: int | None = None
+    # Prefix-cache page sharing (paged layout only).  Full prompt pages are
+    # hash-chained into a prefix index; a same-prefix admission maps its
+    # leading block-table entries to the already-filled pages (refcounted)
+    # instead of allocating and filling fresh ones.  Finished requests'
+    # registered pages are retained (refcount 0, evictable LRU) so repeated
+    # prompts keep hitting after their first tenant completes.  Decode
+    # writes into a shared page copy-on-write a private copy first, so
+    # every logit stays bit-identical to the dense layout — greedy
+    # (temperature=0) token streams are bit-identical too,
+    # test-enforced.  Sampled (temperature>0) streams are equally
+    # distributed but not reproducible against a dense run: skipping a
+    # prefill dispatch reshuffles which PRNG key samples which token.
+    # Engines whose decode datapath is bit-exact with prefill (float
+    # GQA) additionally skip the prefill dispatch on a hit and
+    # teacher-force only the prompt tail through the decode program.
+    # No-op for the dense layout.
+    kv_prefix_cache: bool = False
+    # Page-aware preemption (paged layout only).  When the page pool cannot
+    # cover the queue head's reservation, preempt the youngest resident
+    # request — free its private pages and re-queue it at the queue front
+    # with prompt + generated-so-far as a resumable prompt — instead of
+    # head-of-line blocking until pages drain.  Only engines whose
+    # prefill/decode datapaths are bit-exact (float GQA) actually preempt
+    # (resume re-prefills previously-decoded positions); others keep the
+    # FIFO serialization so outputs stay bit-identical to dense.  As
+    # with kv_prefix_cache, the bit-identity guarantee is on logits and
+    # greedy token streams; a resume changes the PRNG dispatch schedule
+    # for sampled decoding.
+    kv_preemption: bool = False
     # --- engine v2: bucketed prefill + scan decode ---
     # Prompt-length buckets for prefill padding.  None = auto powers of two
     # up to max_seq_len; () = exact-length prefill (the v1 behavior, one

@@ -63,6 +63,17 @@ def main():
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="physical pages in the pool (default: worst case "
                          "max_batch x max_seq / page_size, + trash page)")
+    ap.add_argument("--kv-prefix-cache", action="store_true",
+                    help="share full prompt pages across same-prefix "
+                         "requests (paged layout; copy-on-write)")
+    ap.add_argument("--kv-preemption", action="store_true",
+                    help="preempt the youngest resident instead of "
+                         "head-of-line blocking when the page pool is "
+                         "exhausted (paged layout, bit-exact datapath)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a fixed preamble of this many tokens to "
+                         "every request (prefix-cache exercise; think "
+                         "repeated detector-geometry preambles)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=not args.full_config)
@@ -83,12 +94,16 @@ def main():
             kv_layout=args.kv_layout,
             kv_page_size=args.kv_page_size,
             kv_pages=args.kv_pages,
+            kv_prefix_cache=args.kv_prefix_cache,
+            kv_preemption=args.kv_preemption,
         ),
     )
     rng = np.random.default_rng(0)
+    preamble = list(rng.integers(0, cfg.vocab_size, args.shared_prefix))
     uids = [
         eng.submit(
-            list(rng.integers(0, cfg.vocab_size, rng.integers(4, 16))),
+            preamble
+            + list(rng.integers(0, cfg.vocab_size, rng.integers(4, 16))),
             max_new_tokens=args.max_new,
         )
         for _ in range(args.requests)
@@ -112,6 +127,15 @@ def main():
           f"pages {tel['pages_in_use']}/{tel['pages_capacity']} in use "
           f"(peak {tel['pages_in_use_peak']}, "
           f"page_size={tel['kv_page_size']})")
+    if args.kv_prefix_cache or args.kv_preemption:
+        print(f"prefix cache: hit rate {tel['prefix_hit_rate']:.2f} "
+              f"({tel['prefix_hits']}/{tel['prefix_queries']}) | "
+              f"prefill tokens saved {tel['prefill_tokens_saved']} "
+              f"(+{tel['prefix_tokens_shared']} shared-storage) | "
+              f"{tel['pages_cached']} pages retained, "
+              f"{tel['cow_copies']} CoW copies, "
+              f"{tel['page_evictions']} evictions | "
+              f"{tel['preemptions']} preemptions")
 
 
 if __name__ == "__main__":

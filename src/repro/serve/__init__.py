@@ -1,6 +1,6 @@
 # kv_cache first: it is import-standalone, and models/attention.py reaches
 # back into it (repro.serve.kv_cache) while engine -> models is importing
 from repro.serve import kv_cache  # noqa: F401
-from repro.serve.kv_cache import CacheManager  # noqa: F401
+from repro.serve.kv_cache import CacheManager, CacheStats, PrefixMatch  # noqa: F401
 from repro.serve.engine import Request, ServingEngine  # noqa: F401
 from repro.serve.sampling import sample  # noqa: F401

@@ -20,6 +20,29 @@ datacenter-scale counterpart and inherits that discipline:
   ``dense`` (per-slot slabs, the historical behavior) or ``paged``
   (block-table-indexed pages; long contexts allocate on demand, finished
   slots return pages immediately).  Both produce token-identical output.
+* **Prefix-cache page sharing** (``kv_prefix_cache``, paged layout) — a
+  same-prefix admission maps its leading block-table entries to pages the
+  prefix index already holds (refcounted, copy-on-write on decode
+  writes).  On the bit-exact datapath (float GQA, exact softmax, no
+  Pallas), a hit also skips the prefill dispatch entirely: the unshared
+  prompt tail is teacher-forced through the decode scan (forced steps
+  write prompt KV and emit nothing), so the saved prefill FLOPs are
+  real.  Elsewhere (MLA / int8-KV / LUT softmax, whose decode datapath
+  is not bitwise the prefill datapath) a hit still dedupes storage: the
+  full prompt is recomputed through the normal prefill program — logits
+  bit-identical to dense by construction — and the insert skips the
+  shared columns so shared history stays immutable.  Bit-identity is a
+  statement about logits, and therefore about greedy token streams
+  (test-enforced); sampled streams are equally distributed but not
+  reproducible against a dense run when a skip or preemption changes
+  the PRNG dispatch schedule.
+* **Page-aware preemption** (``kv_preemption``, paged layout) — when the
+  pool cannot cover the queue head's reservation, the youngest resident
+  slot is preempted (private pages freed, request re-queued at the queue
+  front with prompt + generated-so-far as a resumable prompt) instead of
+  head-of-line blocking.  Enabled only on the bit-exact datapath, where
+  re-prefilling previously-decoded positions reproduces the exact same
+  values; other engines keep the FIFO serialization.
 * **Telemetry** — tokens/s, queue wait, prefill/decode compile counters,
   and KV-cache occupancy (bytes, page utilization) from ``step()``/``run()``.
 * **Precision policy** — ``ServeConfig.policy`` (a ``core.precision``
@@ -65,12 +88,21 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     admitted_at: float = 0.0
+    #: times this request was preempted (pages freed, re-queued to resume
+    #: from prompt + generated-so-far); telemetry for the scheduler tests
+    preemptions: int = 0
 
     @property
     def done(self) -> bool:
         if self.eos_id is not None and self.generated and self.generated[-1] == self.eos_id:
             return True
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def resume_tokens(self) -> list[int]:
+        """Effective prompt at (re-)admission: the original prompt plus
+        everything generated before any preemption."""
+        return self.prompt + self.generated
 
     @property
     def queue_wait_s(self) -> float:
@@ -83,6 +115,17 @@ class _Slot:
     request: Request | None = None
     pos: int = 0  # next position to write (== current length)
     last_token: int = 0
+    #: prompt-tail tokens still to be teacher-forced through the decode
+    #: scan (prefill-skip admissions); drained decode_steps at a time
+    pending: list[int] = dataclasses.field(default_factory=list)
+    #: admission order stamp — preemption picks the youngest resident
+    admit_seq: int = -1
+    #: generated-token count at (re-)admission: a slot is only
+    #: preemptable once it has emitted at least one token this
+    #: residency, so every preemption cycle nets forward progress (a
+    #: skip-resumed slot replaying its forced tail would otherwise be
+    #: preempted before ever sampling — a livelock)
+    admit_gen: int = 0
 
 
 class ServingEngine:
@@ -145,6 +188,36 @@ class ServingEngine:
         self._queue: list[Request] = []
         self._finished: dict[int, Request] = {}
         self._uid = 0
+        self._admit_seq = 0
+
+        # Bit-exact datapath predicate: is a decode-path forward bitwise
+        # identical to the prefill-path forward for the same token at the
+        # same position?  True for float GQA with the exact softmax on the
+        # jnp reference path — prefill's attention_ref and decode's
+        # gather-view attend are then the same f32 math.  False for MLA
+        # (~1 ulp: different einsum orders when re-materializing K/V from
+        # the latent), int8 KV (prefill attends float K/V, decode attends
+        # dequantized codes), and LUT softmax (decode uses exact softmax).
+        # Prefill-skip (tail-via-forced-decode) and preemption-resume
+        # (re-prefill of previously-decoded positions) are only enabled
+        # where this holds, so token streams stay bit-identical to dense.
+        self._bit_exact_resume = (
+            self.kv_layout == "paged"
+            and cfg.attn_kind == "gqa"
+            and not self.quant_cache
+            and self.kernel.get("softmax_mode", "safe") == "safe"
+            and not self.kernel.get("use_pallas", False)
+        )
+        #: prefix hits skip the prefill dispatch (vs storage-only sharing)
+        self._prefix_skip = (
+            self.cache_mgr.prefix_cache and self._bit_exact_resume
+        )
+        #: page-aware preemption instead of FIFO head-of-line blocking
+        self._preempt_enabled = (
+            self.kv_layout == "paged"
+            and sc.kv_preemption
+            and self._bit_exact_resume
+        )
 
         # right-padding the prompt is only sound when the cache is
         # position-addressed and decode masks by position: true for dense
@@ -170,6 +243,13 @@ class ServingEngine:
             "prefill_time_s": 0.0,
             "decode_time_s": 0.0,
             "steps": 0,
+            # prompt tokens never recomputed thanks to a prefix hit
+            # (prefill-skip admissions only — real FLOPs saved)
+            "prefill_tokens_saved": 0,
+            # prompt tokens whose pages were deduped by a prefix hit on
+            # the storage-only path (recomputed, but no pages written)
+            "prefix_tokens_shared": 0,
+            "preemptions": 0,
             **self.cache_mgr.stats().as_dict(),
         }
 
@@ -230,7 +310,8 @@ class ServingEngine:
         return bool(self._queue) or any(s.active for s in self.slots)
 
     # ------------------------------------------------------------ device --
-    def _prefill_batch(self, params, tokens, lengths, caches, slots):
+    def _prefill_batch(self, params, tokens, lengths, caches, slots,
+                       shared=None):
         """Prefill up to ``max_batch`` same-bucket prompts in ONE dispatch.
 
         ``tokens``: (max_batch, bucket) int32, right-padded per row.
@@ -238,7 +319,11 @@ class ServingEngine:
         ``slots``: (max_batch,) destination slot per row; the value
         ``max_batch`` marks a pad row (dropped by the dense scatter,
         routed to the trash page by the paged scatter).
-        All three are traced, so every same-bucket wave reuses one
+        ``shared``: (max_batch,) leading prefix-cache pages per row whose
+        recomputed values must not touch shared storage (their insert
+        columns scatter to the trash page; 0 everywhere when the prefix
+        cache is off).
+        All four are traced, so every same-bucket wave reuses one
         compiled program.  Returns (per-row last-token logits (N, V),
         updated caches).
         """
@@ -271,11 +356,13 @@ class ServingEngine:
         idx = jnp.maximum(lengths - 1, 0)[:, None, None]
         last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
         filled = kv_cache.mask_cache_tail(filled, lengths)
-        new_caches = self.cache_mgr.insert_prefill(caches, filled, slots)
+        new_caches = self.cache_mgr.insert_prefill(
+            caches, filled, slots, shared
+        )
         return last, new_caches
 
     def _decode_scan(self, params, tokens, positions, active, rem, eos,
-                     caches, key):
+                     forced, n_forced, caches, key):
         """Run ``decode_steps`` fused decode steps under one dispatch.
 
         All arrays are per-slot (B,): ``tokens`` last sampled token,
@@ -286,83 +373,185 @@ class ServingEngine:
         and pages alike — retired paged slots write the trash page) and
         harmless for retired SSM slots (their state is overwritten on
         re-prefill).
+
+        ``forced``: (decode_steps, B) teacher-forced next tokens,
+        ``n_forced``: (B,) how many leading steps of this dispatch force
+        each slot (prefix-cache prefill-skip: the unshared prompt tail
+        rides the decode program).  A forced step writes its prompt
+        token's KV, overrides the sampled next token, emits nothing, and
+        leaves the generation budget and eos/budget deactivation alone —
+        so the first *sampled* token after the tail sees logits bitwise
+        equal to the prefill path's last-position logits.  All zeros when
+        nothing is forced, which reduces to the historical behavior.
+        Returns (per-step next tokens, per-step emit mask, final carry
+        token, final positions, final active mask, caches).
         """
         sc = self.serve_cfg
         keys = jax.random.split(key, sc.decode_steps)
+        flags = (
+            jnp.arange(sc.decode_steps, dtype=jnp.int32)[:, None]
+            < n_forced[None, :]
+        )  # (T, B)
 
-        def body(carry, k):
+        def body(carry, xs):
+            k, forced_t, flag_t = xs
             tok, pos, act, budget, c = carry
             logits, new_c, _ = lm.forward(
                 params, self.cfg, {"tokens": tok[:, None]}, mode="decode",
                 caches=c, positions=pos, kernel=self.kernel,
             )
-            nxt = sample(logits[:, -1], k, temperature=sc.temperature)
-            nxt = jnp.where(act, nxt, tok)
-            emitted = (nxt, act)
-            budget = jnp.where(act, budget - 1, budget)
+            sampled = sample(logits[:, -1], k, temperature=sc.temperature)
+            nxt = jnp.where(act, jnp.where(flag_t, forced_t, sampled), tok)
+            emit = act & ~flag_t
+            emitted = (nxt, emit)
+            budget = jnp.where(emit, budget - 1, budget)
             new_pos = jnp.where(act, pos + 1, pos)
             new_act = (
                 act
-                & (nxt != eos)
-                & (budget > 0)
+                & (flag_t | ((nxt != eos) & (budget > 0)))
                 & (new_pos + 1 < sc.max_seq_len)
             )
             return (nxt, new_pos, new_act, budget, new_c), emitted
 
         init = (tokens, positions, active, rem, caches)
-        (tok, pos, act, rem, caches), (toks_t, act_t) = jax.lax.scan(
-            body, init, keys
+        (tok, pos, act, rem, caches), (toks_t, emit_t) = jax.lax.scan(
+            body, init, (keys, forced, flags)
         )
-        return toks_t, act_t, pos, act, caches
+        return toks_t, emit_t, tok, pos, act, caches
 
     # -------------------------------------------------------------- step --
+    def _try_preempt(self, free: list[int]) -> bool:
+        """Preempt the youngest resident slot to unblock the queue head:
+        free its pages (shared prefix pages survive via refcounts), stamp
+        the preemption, and re-queue it right behind the head with
+        prompt + generated-so-far as a resumable prompt.  Returns False
+        when preemption is off or nothing is preemptable.
+
+        A slot whose resume prompt no longer fits the largest configured
+        prefill bucket is not preemptable: re-prefilling it would mint an
+        exact-length jit program and silently blow the
+        len(prefill_buckets) + 1 program budget.  Neither is a slot that
+        has not emitted a token since its (re-)admission: preempting it
+        would discard a residency that made no progress, and a
+        skip-resumed slot still replaying its teacher-forced tail could
+        be preempted every step forever (livelock)."""
+        if not self._preempt_enabled:
+            return False
+        max_bucket = max(self._buckets) if self._buckets else None
+        victims = [
+            i for i, s in enumerate(self.slots)
+            if s.active
+            and len(s.request.generated) > s.admit_gen
+            and (
+                max_bucket is None
+                or len(s.request.resume_tokens) <= max_bucket
+            )
+        ]
+        if not victims:
+            return False
+        idx = max(victims, key=lambda i: self.slots[i].admit_seq)
+        req = self.slots[idx].request
+        req.preemptions += 1
+        # the wait clock restarts at requeue: the next admission's queue
+        # wait measures time spent waiting to resume, not time since the
+        # original submission (which would double-count the residency)
+        req.submitted_at = time.perf_counter()
+        self.telemetry["preemptions"] += 1
+        self.cache_mgr.free(idx)
+        self.slots[idx] = _Slot()
+        free.append(idx)
+        self._queue.insert(1, req)
+        return True
+
     def step(self) -> dict:
         """One engine iteration: admit waiting prompts (grouped by bucket,
-        one dispatch per same-bucket group), then scan-decode."""
+        one dispatch per same-bucket group; prefix-hit prompts on the
+        bit-exact datapath skip prefill entirely), then scan-decode."""
         tel = self.telemetry
         tel["steps"] += 1
         stats = {"prefilled": 0, "decoded": 0}
         sc = self.serve_cfg
         # 1. admission: fill free slots with queued prompts.  FIFO order;
-        # a prompt that cannot get pages yet blocks the queue head until
-        # finished slots return pages (no reordering, no starvation).
+        # when the queue head cannot get pages, either preempt the
+        # youngest resident (kv_preemption on the bit-exact datapath) or
+        # block the head until finished slots return pages (no
+        # reordering, no starvation either way).
         cap = sc.max_prefill_per_step or sc.max_batch
         free = [i for i, s in enumerate(self.slots) if not s.active]
-        admitted: list[tuple[int, Request]] = []
-        while self._queue and free and len(admitted) < cap:
+        admitted: list[tuple[int, Request, list[int], int]] = []
+        n_admitted = 0
+        while self._queue and free and n_admitted < cap:
             head = self._queue[0]
+            seq = head.resume_tokens
             # reserve worst-case pages (prompt + generation budget) so
             # decode growth can never exhaust the pool mid-run; pages
-            # still allocate lazily as the sequence actually grows
+            # still allocate lazily as the sequence actually grows.  A
+            # prefix hit reserves only the unshared tail (+1 CoW page
+            # when the first write lands inside a shared page).
             reserve_len = self._reserve_len(head)
-            if not self.cache_mgr.can_reserve(
-                self.cache_mgr.pages_for(reserve_len)
-            ):
+            match = self.cache_mgr.match_prefix(seq)
+            skip = bool(match) and self._prefix_skip and len(seq) > 1
+            write_from = min(match.tokens, len(seq) - 1) if skip else len(seq)
+            need = self.cache_mgr.admission_need(match, reserve_len, write_from)
+            if not self.cache_mgr.can_reserve(need):
+                if self._try_preempt(free):
+                    continue  # pages (and a slot) came back; retry head
                 break
             req = self._queue.pop(0)
             # queue wait ends at pop: prefill execution/compile time that
-            # follows is prefill_time_s, not waiting
+            # follows is prefill_time_s, not waiting.  A preemption-resume
+            # adds its re-wait to the total but the prompt counts once.
+            if req.admitted_at == 0.0:
+                tel["prompts_admitted"] += 1
             req.admitted_at = time.perf_counter()
             tel["queue_wait_s_total"] += req.queue_wait_s
-            tel["prompts_admitted"] += 1
+            n_admitted += 1
             idx = free.pop(0)
-            self.cache_mgr.admit(idx, len(req.prompt), reserve_len)
-            admitted.append((idx, req))
-        groups: dict[int, list[tuple[int, Request]]] = {}
-        for idx, req in admitted:
-            groups.setdefault(self.bucket_for(len(req.prompt)), []).append(
-                (idx, req)
+            self._admit_seq += 1
+            self.slots[idx].admit_seq = self._admit_seq
+            self.slots[idx].admit_gen = len(req.generated)
+            shared = self.cache_mgr.admit(
+                idx, seq, reserve_len,
+                match=match, lazy_tail=skip, write_from=write_from,
+            )
+            if skip:
+                # the shared pages hold every position < write_from; the
+                # remaining tail rides the decode scan teacher-forced —
+                # no prefill dispatch at all for this admission
+                slot = self.slots[idx]
+                slot.active, slot.request = True, req
+                slot.pos = write_from
+                slot.last_token = seq[write_from]
+                slot.pending = list(seq[write_from + 1:])
+                tel["prefill_tokens_saved"] += write_from
+                stats["prefilled"] += 1
+            else:
+                tel["prefix_tokens_shared"] += match.tokens if match else 0
+                admitted.append((idx, req, seq, shared))
+        groups: dict[int, list[tuple[int, Request, list[int], int]]] = {}
+        for idx, req, seq, shared in admitted:
+            groups.setdefault(self.bucket_for(len(seq)), []).append(
+                (idx, req, seq, shared)
             )
         for bucket in sorted(groups):
             self._dispatch_prefill(bucket, groups[bucket], stats)
 
         # 2. scan decode for all active slots
         if any(s.active for s in self.slots):
+            nb = sc.max_batch
+            forced = np.zeros((sc.decode_steps, nb), np.int32)
+            n_forced = np.zeros((nb,), np.int32)
             for idx, slot in enumerate(self.slots):
                 if slot.active:
-                    # the scan advances at most min(decode_steps, remaining
-                    # budget) positions, so this never outgrows the pages
-                    # reserved at admission
+                    nf = min(len(slot.pending), sc.decode_steps)
+                    if nf:
+                        forced[:nf, idx] = slot.pending[:nf]
+                        n_forced[idx] = nf
+                    # the scan advances at most min(decode_steps, forced
+                    # tail + remaining budget) positions, so this never
+                    # outgrows the pages reserved at admission; passing
+                    # the write range lets the manager copy-on-write any
+                    # shared page before the dispatch scatters into it
                     rem_i = max(
                         slot.request.max_new_tokens
                         - len(slot.request.generated),
@@ -370,9 +559,11 @@ class ServingEngine:
                     )
                     self.cache_mgr.ensure(
                         idx,
-                        min(slot.pos + min(sc.decode_steps, rem_i),
+                        min(slot.pos + min(sc.decode_steps, nf + rem_i),
                             sc.max_seq_len),
+                        write_from=slot.pos,
                     )
+            self.caches = self.cache_mgr.flush_copies(self.caches)
             self.caches = self.cache_mgr.write_table(self.caches)
             tokens = np.asarray([s.last_token for s in self.slots], np.int32)
             positions = np.asarray(
@@ -401,26 +592,36 @@ class ServingEngine:
             if tel["decode_compiles"] == 0:
                 tel["decode_compiles"] = 1  # one program, fixed shapes
             t0 = time.perf_counter()
-            toks_t, act_t, pos_f, act_f, self.caches = self._decode_fn(
+            toks_t, emit_t, tok_f, pos_f, act_f, self.caches = self._decode_fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(positions),
                 jnp.asarray(active), jnp.asarray(rem), jnp.asarray(eos),
+                jnp.asarray(forced), jnp.asarray(n_forced),
                 self.caches, sub,
             )
-            toks_t, act_t = np.asarray(toks_t), np.asarray(act_t)
+            toks_t, emit_t = np.asarray(toks_t), np.asarray(emit_t)
+            tok_f = np.asarray(tok_f)
             pos_f, act_f = np.asarray(pos_f), np.asarray(act_f)
             tel["decode_time_s"] += time.perf_counter() - t0
             for idx, slot in enumerate(self.slots):
                 if not slot.active:
                     continue
+                if slot.pending:
+                    del slot.pending[:int(n_forced[idx])]
                 for t in range(toks_t.shape[0]):
-                    if not act_t[t, idx]:
-                        break
+                    if not emit_t[t, idx]:
+                        continue
                     slot.request.generated.append(int(toks_t[t, idx]))
                     stats["decoded"] += 1
                     tel["tokens_generated"] += 1
                 slot.pos = int(pos_f[idx])
-                if slot.request.generated:
-                    slot.last_token = slot.request.generated[-1]
+                slot.last_token = int(tok_f[idx])
+                if self._prefix_skip:
+                    # decode-completed full pages become shareable too:
+                    # their content is bit-exact with a prefill of the
+                    # same tokens on this datapath
+                    self.cache_mgr.register_filled(
+                        idx, slot.request.resume_tokens, slot.pos
+                    )
                 if not act_f[idx]:
                     self._finished[slot.request.uid] = slot.request
                     self.slots[idx] = _Slot()
@@ -435,21 +636,29 @@ class ServingEngine:
         return stats
 
     def _dispatch_prefill(
-        self, bucket: int, group: list[tuple[int, Request]], stats: dict
+        self,
+        bucket: int,
+        group: list[tuple[int, Request, list[int], int]],
+        stats: dict,
     ):
         """One fixed-shape prefill dispatch filling every slot in ``group``
         (all prompts share ``bucket``); pad rows carry the slot sentinel
-        ``max_batch`` so their writes are dropped."""
+        ``max_batch`` so their writes are dropped.  Each row's ``seq`` is
+        its effective prompt (original prompt + generated-so-far for a
+        preempted request being resumed) and ``shared`` its count of
+        prefix-cache pages the insert must not overwrite."""
         sc, tel = self.serve_cfg, self.telemetry
         nb = sc.max_batch
         toks = np.zeros((nb, bucket), np.int32)
         lengths = np.zeros((nb,), np.int32)
         slots_arr = np.full((nb,), nb, np.int32)
-        for row, (idx, req) in enumerate(group):
-            n = len(req.prompt)
-            toks[row, :n] = req.prompt
+        shared_arr = np.zeros((nb,), np.int32)
+        for row, (idx, req, seq, shared) in enumerate(group):
+            n = len(seq)
+            toks[row, :n] = seq
             lengths[row] = n
             slots_arr[row] = idx
+            shared_arr[row] = shared
         self.caches = self.cache_mgr.write_table(self.caches)
         fn = self._prefill_fn.get(bucket)
         if fn is None:
@@ -459,7 +668,7 @@ class ServingEngine:
         t0 = time.perf_counter()
         last, self.caches = fn(
             self.params, jnp.asarray(toks), jnp.asarray(lengths),
-            self.caches, jnp.asarray(slots_arr),
+            self.caches, jnp.asarray(slots_arr), jnp.asarray(shared_arr),
         )
         tel["prefill_dispatches"] += 1
         # one vectorized sample + one device->host transfer for the group
@@ -467,13 +676,13 @@ class ServingEngine:
         first_tokens = np.asarray(
             sample(last[:len(group)], sub, temperature=sc.temperature)
         )
-        for row, (idx, req) in enumerate(group):
+        for row, (idx, req, seq, _) in enumerate(group):
             nxt = int(first_tokens[row])
             req.generated.append(nxt)
             tel["tokens_generated"] += 1
             slot = self.slots[idx]
             slot.active, slot.request = True, req
-            slot.pos = len(req.prompt)  # next write position
+            slot.pos = len(seq)  # next write position
             slot.last_token = nxt
             stats["prefilled"] += 1
             self._retire(idx)

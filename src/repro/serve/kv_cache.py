@@ -46,6 +46,26 @@ prefill fallback.
 int8 KV policies compose: the per-token scales ride their own pools
 ``(num_pages, ..., page_size)``, so the precision plan's ``kv_cache``
 rule applies per page exactly as it applies per slab in dense layout.
+
+**Prefix-cache page sharing** (``ServeConfig.kv_prefix_cache``, paged
+layout): every *full* prompt page is registered in a prefix index under a
+hash chain key — ``key_i = intern(key_{i-1}, tokens[i*ps:(i+1)*ps])`` —
+so a page is only ever matched when its entire causal token prefix is
+identical (keys are interned exact token tuples, never lossy hashes).
+A same-prefix admission maps its leading block-table entries to the
+matched pages and bumps their refcounts; only the unshared tail needs
+pages (and, on the bit-exact float-GQA datapath, compute).  When a
+request finishes, its refcount-0 registered pages are *retained* on an
+evictable LRU instead of being wiped, so repeated-prompt workloads (the
+same detector-geometry preamble across a physics batch) keep hitting
+after the first tenant completes; allocation evicts the LRU tail only
+under pool pressure.  A decode write aimed at a page with refcount > 1
+triggers copy-on-write — allocate a fresh page, copy the pool rows,
+swap the writer's table entry — and a write into a registered
+refcount-1 page first drops the page from the index, so shared history
+is immutable and every token stream stays bit-identical to the dense
+layout.  Sharing, CoW bookkeeping, and preemption are host-side
+block-table operations: the jitted program set does not grow.
 """
 
 from __future__ import annotations
@@ -458,7 +478,8 @@ def insert_prefill_dense(big: PyTree, filled: PyTree, slots: jax.Array):
 
 
 def insert_prefill_paged(
-    big: PyTree, filled: PyTree, slots: jax.Array, page_size: int
+    big: PyTree, filled: PyTree, slots: jax.Array, page_size: int,
+    shared_pages: jax.Array | None = None,
 ):
     """Scatter dense prefilled rows into each slot's physical pages.
 
@@ -471,12 +492,23 @@ def insert_prefill_paged(
     it becomes valid).  Unallocated table entries — the pad tail beyond
     a prompt's allocated pages, and entire rows for padding slots —
     point at the trash page, so those writes are inert.
+
+    ``shared_pages``: optional (N,) per-row count of leading table
+    entries that alias prefix-cache pages owned by earlier requests.
+    Those columns are redirected to the trash page for this scatter, so
+    the (recomputed, bit-identical) prefix values never touch shared
+    storage — shared history stays immutable without copy-on-write.
     """
     layers = dict(big["layers"])
     table = layers["page_table"][0]  # identical across layers: (B, n_pages)
     row_tables = jnp.take(
         table, slots, axis=0, mode="fill", fill_value=TRASH_PAGE
     )  # (N, pages_per_slot)
+    if shared_pages is not None:
+        col = jnp.arange(row_tables.shape[1], dtype=jnp.int32)
+        row_tables = jnp.where(
+            col[None, :] < shared_pages[:, None], TRASH_PAGE, row_tables
+        )
     for name, small in filled["layers"].items():
         pool = layers[name]
         axis = small.ndim - SEQ_AXIS_FROM_RIGHT[name]
@@ -506,10 +538,26 @@ class CacheStats:
     pages_capacity: int
     page_allocs_total: int
     pages_in_use_peak: int
+    pages_cached: int = 0
+    prefix_queries: int = 0
+    prefix_hits: int = 0
+    prefix_pages_hit: int = 0
+    cow_copies: int = 0
+    page_evictions: int = 0
 
     @property
     def page_utilization(self) -> float:
-        return self.pages_in_use / max(self.pages_capacity, 1)
+        # a dense manager built with max_batch=0 (spec-only probes) or a
+        # hand-rolled stats row may carry zero capacity
+        if self.pages_capacity <= 0:
+            return 0.0
+        return self.pages_in_use / self.pages_capacity
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        if self.prefix_queries <= 0:
+            return 0.0
+        return self.prefix_hits / self.prefix_queries
 
     def as_dict(self) -> dict:
         return {
@@ -521,22 +569,52 @@ class CacheStats:
             "page_utilization": self.page_utilization,
             "page_allocs_total": self.page_allocs_total,
             "pages_in_use_peak": self.pages_in_use_peak,
+            "pages_cached": self.pages_cached,
+            "prefix_queries": self.prefix_queries,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": self.prefix_hit_rate,
+            "prefix_pages_hit": self.prefix_pages_hit,
+            "cow_copies": self.cow_copies,
+            "page_evictions": self.page_evictions,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Longest prefix-index match for a prompt: ``pages[i]`` holds the KV
+    of token chunk ``i`` (all full pages), ``keys[i]`` its interned chain
+    key.  ``tokens`` == ``len(pages) * page_size``."""
+
+    pages: tuple[int, ...] = ()
+    keys: tuple[int, ...] = ()
+    tokens: int = 0
+
+    def __bool__(self) -> bool:
+        return bool(self.pages)
 
 
 class CacheManager:
     """Owns the KV-cache storage layout for one serving engine.
 
     Host-side responsibilities: building the device cache pytree,
-    page allocation / reclamation per slot (paged layout), and keeping
-    the device page table in sync.  Traced responsibility: inserting a
-    prefilled dense slab into the big caches inside the engine's jitted
-    prefill program (:meth:`insert_prefill` — static layout config only,
-    so it adds no jit programs).
+    page allocation / reclamation / refcounting per slot (paged layout),
+    the prefix-cache index (hash-chained full prompt pages, shared
+    copy-on-write), and keeping the device page table in sync.  Traced
+    responsibility: inserting a prefilled dense slab into the big caches
+    inside the engine's jitted prefill program (:meth:`insert_prefill` —
+    static layout config only, so it adds no jit programs).
 
     Dense layout is modeled as one page of ``max_seq_len`` tokens per
     slot, statically bound to the slot — which makes the occupancy
-    telemetry uniform across layouts.
+    telemetry uniform across layouts.  Prefix caching degenerates to a
+    no-op for dense (slot-bound slabs cannot be shared).
+
+    Paged page lifecycle: ``free`` (no meaningful content) -> ``live``
+    (refcount >= 1, owned by one or more slot tables) -> either back to
+    ``free`` (unregistered content) or ``cached`` (refcount 0 but still
+    registered in the prefix index, evictable LRU) when its last owner
+    finishes.  The reserved trash page 0 never enters any of the three
+    sets.
     """
 
     def __init__(
@@ -593,16 +671,48 @@ class CacheManager:
             self.pages_per_slot = 1
             self.num_pages = sc.max_batch
             self._free = []
+        #: prefix-cache sharing is a paged-layout feature; dense slabs are
+        #: slot-bound and the knob is silently inert there
+        self.prefix_cache = bool(sc.kv_prefix_cache and self.layout == "paged")
         self._slot_pages: list[list[int]] = [[] for _ in range(sc.max_batch)]
         # worst-case pages promised to each resident request at admission;
         # allocation stays lazy, but admission never over-promises the pool
         self._slot_reserved: list[int] = [0] * sc.max_batch
+        #: per-slot interned chain keys for pages [0, len(keys)) — the
+        #: registration watermark, so register_filled only chunks/interns
+        #: pages completed since its previous call (truncated when a
+        #: write mutates a chained page, i.e. CoW / deregister-on-write)
+        self._slot_keys: list[list[int]] = [[] for _ in range(sc.max_batch)]
         self._table = np.zeros(
             (sc.max_batch, self.pages_per_slot), np.int32
         )
         self._table_dirty = True
         self._allocs_total = 0
         self._peak_in_use = 0
+        # --- refcounts + prefix index (paged sharing) ---
+        self._page_ref = np.zeros(self.num_pages, np.int32)
+        #: retained refcount-0 registered pages, insertion order == LRU
+        self._cached: dict[int, None] = {}
+        #: interned hash-chain keys: (parent_key, token chunk) -> key id.
+        #: Keys are exact token tuples (no lossy hashing), so two distinct
+        #: prefixes can never collide into the same page.  Ids come from a
+        #: monotonic counter (never reused), and the table is mark-swept
+        #: once it doubles past the reachable set (_maybe_gc_intern) so a
+        #: long-running server does not leak an entry per page ever served.
+        self._key_intern: dict[tuple[int, tuple[int, ...]], int] = {}
+        self._next_key_id = 1
+        self._intern_gc_floor = 1024
+        self._intern_gc_at = self._intern_gc_floor
+        self._prefix_index: dict[int, int] = {}  # key id -> physical page
+        self._page_key: dict[int, int] = {}  # physical page -> key id
+        #: device page copies scheduled by copy-on-write, flushed by the
+        #: engine (flush_copies) before the next decode dispatch
+        self._pending_copies: list[tuple[int, int]] = []
+        self._cow_copies = 0
+        self._evictions = 0
+        self._prefix_queries = 0
+        self._prefix_hits = 0
+        self._prefix_pages_hit = 0
         self.kv_bytes = sum(
             int(np.prod(leaf.shape)) * leaf.dtype.itemsize
             for leaf in jax.tree.leaves(self._abstract())
@@ -645,36 +755,224 @@ class CacheManager:
 
     def can_reserve(self, n_pages: int) -> bool:
         """Whether the pool can promise ``n_pages`` to a new request without
-        eating another resident request's unallocated reservation."""
+        eating another resident request's unallocated reservation.  Cached
+        (refcount-0 retained) pages count as available: allocation evicts
+        them LRU under pressure."""
         if self.layout != "paged":
             return True  # dense slabs are slot-bound; engine gates on slots
-        return len(self._free) - self.pages_reserved_unallocated >= n_pages
+        avail = len(self._free) + len(self._cached)
+        return avail - self.pages_reserved_unallocated >= n_pages
 
-    def admit(self, slot: int, prompt_len: int, reserve_len: int) -> None:
-        """Admit a request: reserve worst-case pages for its whole lifetime
+    def _take_page(self) -> int | None:
+        """Pop a free page, evicting the LRU cached page when the free list
+        is empty.  Returns None when the pool is truly exhausted."""
+        if self._free:
+            return self._free.pop()
+        if self._cached:
+            page = next(iter(self._cached))
+            del self._cached[page]
+            self._deregister(page)
+            self._evictions += 1
+            return page
+        return None
+
+    def _deregister(self, page: int) -> None:
+        key = self._page_key.pop(page, None)
+        if key is not None and self._prefix_index.get(key) == page:
+            del self._prefix_index[key]
+
+    def _intern_key(self, parent: int, chunk: tuple[int, ...]) -> int:
+        key = self._key_intern.get((parent, chunk))
+        if key is None:
+            key = self._next_key_id
+            self._next_key_id += 1
+            self._key_intern[(parent, chunk)] = key
+            self._maybe_gc_intern()
+        return key
+
+    def _maybe_gc_intern(self) -> None:
+        """Mark-sweep the chain-key intern table once it doubles past its
+        last post-sweep size: keep only keys reachable (via parent links)
+        from a registered page or a resident slot's chain watermark.
+        Without this, every full page of every request ever served leaves
+        an entry behind — an unbounded host-memory leak on long-running
+        engines.  Dropped prefixes simply re-intern under fresh ids (the
+        monotonic counter guarantees no id is ever reused)."""
+        if len(self._key_intern) <= self._intern_gc_at:
+            return
+        parent_of = {
+            kid: parent for (parent, _), kid in self._key_intern.items()
+        }
+        live: set[int] = set()
+        roots = list(self._prefix_index)
+        for keys in self._slot_keys:
+            roots.extend(keys)
+        for key in roots:
+            while key and key not in live:
+                live.add(key)
+                key = parent_of.get(key, 0)
+        self._key_intern = {
+            pk: kid for pk, kid in self._key_intern.items() if kid in live
+        }
+        self._intern_gc_at = max(
+            self._intern_gc_floor, 2 * len(self._key_intern)
+        )
+
+    # ----------------------------------------------------- prefix cache --
+    def match_prefix(self, tokens: list[int]) -> PrefixMatch:
+        """Longest run of leading *full* prompt pages already present in
+        the prefix index.  Pure lookup — hit/query telemetry is counted at
+        :meth:`admit` so admission retries don't inflate the rate."""
+        if not self.prefix_cache:
+            return PrefixMatch()
+        parent = 0
+        pages: list[int] = []
+        keys: list[int] = []
+        for i in range(len(tokens) // self.page_size):
+            chunk = tuple(tokens[i * self.page_size:(i + 1) * self.page_size])
+            key = self._key_intern.get((parent, chunk))
+            page = None if key is None else self._prefix_index.get(key)
+            if page is None:
+                break
+            pages.append(page)
+            keys.append(key)
+            parent = key
+        return PrefixMatch(
+            tuple(pages), tuple(keys), len(pages) * self.page_size
+        )
+
+    def _tail_need(
+        self, match: PrefixMatch | None, reserve_len: int, write_from: int
+    ) -> int:
+        """Pages this admission will still have to allocate beyond its
+        shared prefix: the unshared tail, plus one copy-on-write headroom
+        page when the first decode write lands inside a shared page (a
+        full-coverage prefix hit)."""
+        total = self.pages_for(min(reserve_len, self.serve_cfg.max_seq_len))
+        shared = len(match.pages) if match else 0
+        headroom = 1 if match and write_from < match.tokens else 0
+        return max(total - shared, 0) + headroom
+
+    def _revived(self, match: PrefixMatch | None) -> int:
+        """Matched pages currently on the cached LRU (refcount 0): mapping
+        them revives them, removing them from the evictable pool, so the
+        admission check must count them against availability even though
+        they are not fresh allocations."""
+        if not match:
+            return 0
+        return sum(1 for p in match.pages if self._page_ref[p] == 0)
+
+    def admission_need(
+        self, match: PrefixMatch | None, reserve_len: int, write_from: int
+    ) -> int:
+        """Pages the pool must have available (free + evictable-cached,
+        net of other residents' unallocated reservations) to admit this
+        request: its unshared tail's worst case plus any cached matched
+        pages its admission revives."""
+        if self.layout != "paged":
+            return 0
+        return (
+            self._tail_need(match, reserve_len, write_from)
+            + self._revived(match)
+        )
+
+    def admit(
+        self,
+        slot: int,
+        tokens: list[int],
+        reserve_len: int,
+        match: PrefixMatch | None = None,
+        lazy_tail: bool = False,
+        write_from: int | None = None,
+    ) -> int:
+        """Admit a request: map any prefix-cache hit onto the slot's
+        leading table entries (refcount++, reviving retained pages),
+        reserve worst-case pages for the unshared remainder
         (``reserve_len`` = prompt + generation budget, capped at
-        max_seq_len), then allocate the prompt's pages.  Reservation is a
-        counter, not an allocation — pages still materialize lazily in
-        :meth:`ensure` — but admission-time reservation guarantees decode
-        growth can never exhaust the pool mid-run."""
-        need = self.pages_for(min(reserve_len, self.serve_cfg.max_seq_len))
-        if self.layout == "paged":
-            if not self.can_reserve(need):
-                raise RuntimeError(
-                    f"cannot reserve {need} KV pages for admission; check "
-                    "can_reserve() before calling admit()"
-                )
-            self._slot_reserved[slot] = need
-        self.alloc(slot, prompt_len)
+        max_seq_len), then allocate — and register in the prefix index —
+        the prompt's own pages.  ``lazy_tail=True`` skips the prompt-tail
+        allocation (the engine's prefill-skip path fills the tail through
+        decode writes, so :meth:`ensure` allocates it lazily like any
+        decode growth).  Returns the number of shared leading pages.
+
+        Reservation is a counter, not an allocation — but admission-time
+        reservation guarantees decode growth (including at most one
+        copy-on-write allocation) can never exhaust the pool mid-run."""
+        if write_from is None:
+            write_from = len(tokens)
+        if self.layout != "paged":
+            self.alloc(slot, len(tokens))
+            return 0
+        if self.prefix_cache:
+            self._prefix_queries += 1
+        shared = list(match.pages) if match else []
+        need = self.admission_need(match, reserve_len, write_from)
+        if not self.can_reserve(need):
+            raise RuntimeError(
+                f"cannot reserve {need} KV pages for admission; check "
+                "can_reserve() before calling admit()"
+            )
+        tail_need = self._tail_need(match, reserve_len, write_from)
+        if shared:
+            self._prefix_hits += 1
+            self._prefix_pages_hit += len(shared)
+            pages = self._slot_pages[slot]
+            for col, page in enumerate(shared):
+                if self._page_ref[page] == 0:  # revive a retained page
+                    del self._cached[page]
+                self._page_ref[page] += 1
+                self._table[slot, col] = page
+                pages.append(page)
+            self._slot_keys[slot] = list(match.keys)
+            self._table_dirty = True
+        self._slot_reserved[slot] = len(shared) + tail_need
+        if not lazy_tail:
+            self.ensure(slot, len(tokens))
+            self.register_filled(slot, tokens, len(tokens))
+        self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
+        return len(shared)
+
+    def register_filled(
+        self, slot: int, tokens: list[int], upto_len: int
+    ) -> None:
+        """Register ``slot``'s fully-written pages (positions
+        [0, upto_len), token ids ``tokens``) in the prefix index so later
+        same-prefix admissions can share them.  Idempotent; pages already
+        registered (shared prefix pages) and keys already served by
+        another live page are left untouched.  Incremental: the slot's
+        chain-key watermark (``_slot_keys``) means each page is chunked
+        and interned once per residency, not once per decode dispatch."""
+        if not self.prefix_cache:
+            return
+        pages = self._slot_pages[slot]
+        keys = self._slot_keys[slot]
+        parent = keys[-1] if keys else 0
+        for i in range(len(keys), min(upto_len // self.page_size, len(pages))):
+            chunk = tuple(tokens[i * self.page_size:(i + 1) * self.page_size])
+            parent = self._intern_key(parent, chunk)
+            keys.append(parent)
+            page = pages[i]
+            if page in self._page_key or parent in self._prefix_index:
+                continue
+            self._prefix_index[parent] = page
+            self._page_key[page] = parent
 
     def alloc(self, slot: int, length: int) -> None:
         """Ensure ``slot`` owns pages covering positions [0, length)."""
         self.ensure(slot, length)
 
-    def ensure(self, slot: int, upto_len: int) -> None:
+    def ensure(
+        self, slot: int, upto_len: int, write_from: int | None = None
+    ) -> None:
         """Grow ``slot``'s page list to cover ``upto_len`` positions —
         called before each decode dispatch so mid-scan writes never cross
-        into unallocated space.  Under the engine's admission discipline
+        into unallocated space.  When ``write_from`` is given, pages
+        overlapping the write range [write_from, upto_len) are made
+        privately writable first: a shared page (refcount > 1) is
+        copy-on-write replaced (fresh page, device copy scheduled for
+        :meth:`flush_copies`, table entry swapped), and a registered
+        sole-owner page is dropped from the prefix index, so shared
+        history is immutable.  Under the engine's admission discipline
         (reservation at admit()), the pool-exhausted error below is
         unreachable; it guards direct misuse of the manager."""
         if self.layout != "paged":
@@ -686,31 +984,95 @@ class CacheManager:
         pages = self._slot_pages[slot]
         need = self.pages_for(upto_len)
         while len(pages) < need:
-            if not self._free:
+            page = self._take_page()
+            if page is None:
                 raise RuntimeError(
                     f"KV page pool exhausted ({self.num_pages} pages of "
                     f"{self.page_size} tokens); raise ServeConfig.kv_pages "
                     "or admit fewer concurrent long sequences"
                 )
-            page = self._free.pop()
             self._table[slot, len(pages)] = page
             pages.append(page)
+            self._page_ref[page] = 1
             self._allocs_total += 1
             self._table_dirty = True
+        if write_from is not None and upto_len > write_from:
+            first = write_from // self.page_size
+            last = (upto_len - 1) // self.page_size
+            for col in range(first, min(last + 1, len(pages))):
+                page = pages[col]
+                if self._page_ref[page] > 1:
+                    fresh = self._take_page()
+                    if fresh is None:
+                        raise RuntimeError(
+                            "KV page pool exhausted during copy-on-write; "
+                            "raise ServeConfig.kv_pages"
+                        )
+                    self._pending_copies.append((page, fresh))
+                    self._page_ref[page] -= 1
+                    self._page_ref[fresh] = 1
+                    pages[col] = fresh
+                    self._table[slot, col] = fresh
+                    self._table_dirty = True
+                    self._cow_copies += 1
+                    self._allocs_total += 1
+                    # the CoW headroom reserved at admission is now spent
+                    self._slot_reserved[slot] = max(
+                        self._slot_reserved[slot] - 1, len(pages)
+                    )
+                    # the chunk content diverges from the chained key
+                    del self._slot_keys[slot][col:]
+                elif page in self._page_key:
+                    # sole owner about to mutate a registered page: the
+                    # index must never serve stale content
+                    self._deregister(page)
+                    del self._slot_keys[slot][col:]
         self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
 
     def free(self, slot: int) -> None:
-        """Return a finished slot's pages (and reservation) immediately."""
+        """Drop a finished (or preempted) slot's references immediately.
+        A page whose refcount falls to zero returns to the free list —
+        unless it is registered in the prefix index and prefix caching is
+        on, in which case it is retained on the evictable LRU so repeated
+        prompts keep hitting."""
         pages = self._slot_pages[slot]
         self._slot_pages[slot] = []
         self._slot_reserved[slot] = 0
+        self._slot_keys[slot] = []
         if self.layout != "paged" or not pages:
             return
-        self._free.extend(reversed(pages))
+        for page in reversed(pages):
+            self._page_ref[page] -= 1
+            if self._page_ref[page] > 0:
+                continue
+            if self.prefix_cache and page in self._page_key:
+                self._cached[page] = None
+            else:
+                self._free.append(page)
         self._table[slot, :] = TRASH_PAGE
         self._table_dirty = True
 
     # ------------------------------------------------------ device sync --
+    def flush_copies(self, caches: PyTree) -> PyTree:
+        """Apply scheduled copy-on-write page copies to the device pools.
+
+        Host-side eager scatter of whole pool rows — it runs outside the
+        engine's jitted prefill/decode programs, so the compiled program
+        budget is untouched.  Must run before the decode dispatch that
+        writes the copied pages (the engine calls it right after the
+        per-slot :meth:`ensure` pass)."""
+        if self.layout != "paged" or not self._pending_copies:
+            return caches
+        src = jnp.asarray([s for s, _ in self._pending_copies], jnp.int32)
+        dst = jnp.asarray([d for _, d in self._pending_copies], jnp.int32)
+        self._pending_copies.clear()
+        layers = dict(caches["layers"])
+        for name, pool in layers.items():
+            if name == "page_table":
+                continue
+            layers[name] = pool.at[:, dst].set(pool[:, src])
+        return {**caches, "layers": layers}
+
     def write_table(self, caches: PyTree) -> PyTree:
         """Refresh the stacked device page table from the host table
         (no-op for dense or when nothing changed since the last sync)."""
@@ -727,17 +1089,29 @@ class CacheManager:
 
     # --------------------------------------------------- traced insert --
     def insert_prefill(
-        self, big: PyTree, filled: PyTree, slots: jax.Array
+        self,
+        big: PyTree,
+        filled: PyTree,
+        slots: jax.Array,
+        shared_pages: jax.Array | None = None,
     ) -> PyTree:
         """Insert tail-masked dense prefill rows into the big caches
-        (traced inside the engine's per-bucket jitted prefill)."""
+        (traced inside the engine's per-bucket jitted prefill).
+        ``shared_pages``: per-row count of leading prefix-cache pages
+        whose (recomputed, bit-identical) values must not be re-written
+        — their columns scatter to the trash page instead."""
         if self.layout == "paged":
-            return insert_prefill_paged(big, filled, slots, self.page_size)
+            return insert_prefill_paged(
+                big, filled, slots, self.page_size, shared_pages
+            )
         return insert_prefill_dense(big, filled, slots)
 
     # ---------------------------------------------------------- metrics --
     @property
     def pages_in_use(self) -> int:
+        """Distinct live pages (a shared page counts once)."""
+        if self.layout == "paged":
+            return int((self._page_ref > 0).sum())
         return sum(len(p) for p in self._slot_pages)
 
     @property
@@ -755,4 +1129,78 @@ class CacheManager:
             pages_capacity=self.pages_capacity,
             page_allocs_total=self._allocs_total,
             pages_in_use_peak=self._peak_in_use,
+            pages_cached=len(self._cached),
+            prefix_queries=self._prefix_queries,
+            prefix_hits=self._prefix_hits,
+            prefix_pages_hit=self._prefix_pages_hit,
+            cow_copies=self._cow_copies,
+            page_evictions=self._evictions,
         )
+
+    # ------------------------------------------------------- invariants --
+    def check_invariants(self) -> None:
+        """Assert the paged pool's structural invariants; raises
+        AssertionError with a descriptive message on any violation.  Used
+        by the property-based trace tests after every operation; cheap
+        enough (O(pages + table)) to call in debugging sessions too."""
+        if self.layout != "paged":
+            return
+        ref = self._page_ref
+        assert ref[TRASH_PAGE] == 0, "trash page acquired a refcount"
+        assert TRASH_PAGE not in self._free, "trash page on the free list"
+        assert TRASH_PAGE not in self._cached, "trash page retained as cached"
+        assert TRASH_PAGE not in self._page_key, "trash page registered"
+        live = {p for p in range(self.num_pages) if ref[p] > 0}
+        free_set, cached_set = set(self._free), set(self._cached)
+        assert len(free_set) == len(self._free), "free list holds duplicates"
+        assert not (free_set & cached_set), "page both free and cached"
+        assert not (free_set & live), "live page on the free list"
+        assert not (cached_set & live), "live page retained as cached"
+        universe = free_set | cached_set | live
+        expected = set(range(self.num_pages)) - {TRASH_PAGE}
+        assert universe == expected, (
+            f"page leak/double-free: missing={sorted(expected - universe)} "
+            f"extra={sorted(universe - expected)}"
+        )
+        # refcount conservation: every reference is a slot table entry
+        counts = np.zeros(self.num_pages, np.int64)
+        for slot, pages in enumerate(self._slot_pages):
+            for col, page in enumerate(pages):
+                assert page != TRASH_PAGE, f"slot {slot} maps the trash page"
+                assert self._table[slot, col] == page, (
+                    f"table desync at slot {slot} col {col}"
+                )
+                counts[page] += 1
+            for col in range(len(pages), self.pages_per_slot):
+                assert self._table[slot, col] == TRASH_PAGE, (
+                    f"stale table entry at slot {slot} col {col}"
+                )
+        assert np.array_equal(counts, ref), (
+            f"refcount drift: table refs {counts.nonzero()[0].tolist()} vs "
+            f"refcounts {ref.nonzero()[0].tolist()}"
+        )
+        assert self.pages_in_use == len(live) == len(
+            {p for pages in self._slot_pages for p in pages}
+        ), "pages_in_use != distinct live table entries"
+        for page in self._cached:
+            assert page in self._page_key, "cached page lost its index key"
+        for key, page in self._prefix_index.items():
+            assert self._page_key.get(page) == key, (
+                f"index/page key desync for page {page}"
+            )
+            assert page in live or page in cached_set, (
+                f"prefix index maps a freed page {page}"
+            )
+        for page in self._page_key:
+            assert page in live or page in cached_set, (
+                f"registered page {page} is neither live nor cached"
+            )
+        for slot, (reserved, pages) in enumerate(
+            zip(self._slot_reserved, self._slot_pages)
+        ):
+            assert reserved >= len(pages) or reserved == 0, (
+                f"slot {slot} holds more pages than it reserved"
+            )
+            assert len(self._slot_keys[slot]) <= len(pages), (
+                f"slot {slot} chain-key watermark outran its page list"
+            )

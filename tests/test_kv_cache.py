@@ -171,10 +171,19 @@ def _program_count(fn):
     return size() if callable(size) else 1
 
 
-@pytest.mark.parametrize("layout", ["dense", "paged"])
-def test_jit_program_budget(layout):
+@pytest.mark.parametrize(
+    "layout,features",
+    [
+        ("dense", {}),
+        ("paged", {}),
+        ("paged", {"kv_prefix_cache": True, "kv_preemption": True}),
+    ],
+)
+def test_jit_program_budget(layout, features):
     """len(prefill_buckets) prefill programs + 1 decode program, enforced
-    on the actual jit caches — for both layouts."""
+    on the actual jit caches — for both layouts, and with the prefix
+    cache + preemption knobs on (sharing/preemption are host-side
+    block-table operations and must not grow the program set)."""
     cfg = configs.get_config("granite-8b", reduced=True)
     params = _params(cfg)
     rng = np.random.default_rng(0)
@@ -182,7 +191,7 @@ def test_jit_program_budget(layout):
         list(rng.integers(0, cfg.vocab_size, n))
         for n in (3, 4, 5, 6, 9, 11, 13, 15)
     ]
-    sc = _serve(layout, max_batch=4, prefill_buckets=(4, 8, 16))
+    sc = _serve(layout, max_batch=4, prefill_buckets=(4, 8, 16), **features)
     eng, _ = _generate(cfg, params, sc, prompts)
     assert eng.telemetry["prefill_compiles"] <= len(eng.prefill_buckets)
     assert eng.telemetry["decode_compiles"] == 1
