@@ -8,6 +8,14 @@ on a physics-scale LM (paper Table I dims as a causal LM) and the reduced
 ``minicpm-2b`` config.  ``--kv-layout paged`` runs the same sweep through
 the block-table page pool (serve/kv_cache.py) instead of dense slabs.
 
+``--api stream`` drives the measured wave through the client-facing
+``Engine.stream`` API instead of the batch ``Engine.generate`` wrapper
+and adds latency percentiles computed from ``TokenEvent`` timestamps:
+``ttft_ms_p50/p95`` (submit -> first token) and ``itl_ms_p50/p95``
+(inter-token gaps within a request; with ``decode_steps`` tokens
+arriving per host dispatch, intra-dispatch gaps are ~0 and the p95
+exposes the dispatch boundary).
+
 ``--workload prefix`` switches the request stream from uniform random
 prompts to a prefix-heavy one — every prompt starts with the same long
 preamble, the physics pattern of a fixed detector-geometry prefix ahead
@@ -31,7 +39,7 @@ import numpy as np
 from repro import configs
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import lm
-from repro.serve import ServingEngine
+from repro.serve import Engine
 
 
 def physics_scale_lm() -> ModelConfig:
@@ -59,11 +67,31 @@ def _page_util_peak(tel: dict) -> float:
     return tel.get("pages_in_use_peak", 0) / capacity
 
 
+def _stream_wave(eng: Engine, handles) -> tuple[list[float], list[float]]:
+    """Drain every handle's stream; return (per-request TTFT seconds,
+    inter-token gaps in seconds).  Event timestamps are stamped when each
+    dispatch's results reach the host, so gaps measure real host-loop
+    latency regardless of which stream performed the pump."""
+    ttfts: list[float] = []
+    gaps: list[float] = []
+    for h in handles:
+        last_ts = None
+        for ev in eng.stream(h):
+            if last_ts is None:
+                # created_at is never restamped; submitted_at is (the
+                # preemption requeue resets the queue-wait clock)
+                ttfts.append(ev.ts - eng.request(h).created_at)
+            else:
+                gaps.append(ev.ts - last_ts)
+            last_ts = ev.ts
+    return ttfts, gaps
+
+
 def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
                policy=None, kv_layout="dense", workload="uniform",
-               n_requests=8, max_new=16, seed=0):
+               api="batch", n_requests=8, max_new=16, seed=0):
     prefix_mode = workload == "prefix"
-    eng = ServingEngine(
+    eng = Engine(
         cfg, params,
         ServeConfig(
             max_batch=max_batch, max_seq_len=64,
@@ -79,31 +107,47 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
     )
 
     def wave(wave_seed):
+        import time
         rng = np.random.default_rng(wave_seed)
+        handles = []
         for _ in range(n_requests):
             payload = list(
                 rng.integers(0, cfg.vocab_size, int(rng.integers(3, 14)))
             )
             prompt = preamble + payload if prefix_mode else payload
-            eng.submit(prompt, max_new_tokens=max_new)
-        eng.run()
+            handles.append(eng.submit(prompt, max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        if api == "stream":
+            ttfts, gaps = _stream_wave(eng, handles)
+        else:
+            eng.generate()
+            ttfts, gaps = [], []
+        return time.perf_counter() - t0, ttfts, gaps
 
     # warmup wave: same length distribution, so it compiles the full
     # bucket/decode program set — the measured wave is steady-state
     wave(seed)
     tokens_before = eng.telemetry["tokens_generated"]
-    wave(seed + 1)
+    wall_s, ttfts, gaps = wave(seed + 1)
     tel = eng.telemetry
     toks = tel["tokens_generated"] - tokens_before
-    us_per_tok = tel["run_wall_s"] / max(toks, 1) * 1e6
+    us_per_tok = wall_s / max(toks, 1) * 1e6
+    tok_s = toks / max(wall_s, 1e-9)
     derived = (
-        f"tok_s={tel['tokens_per_s']:.1f};"
+        f"tok_s={tok_s:.1f};"
         f"prefill_compiles={tel['prefill_compiles']};"
         f"decode_compiles={tel['decode_compiles']};"
         f"kv_layout={tel['kv_layout']};"
         f"kv_mib={tel['kv_bytes'] / 2**20:.2f};"
         f"page_util_peak={_page_util_peak(tel):.2f}"
     )
+    if api == "stream":
+        derived += (
+            f";ttft_ms_p50={np.percentile(ttfts, 50)*1e3:.1f}"
+            f";ttft_ms_p95={np.percentile(ttfts, 95)*1e3:.1f}"
+            f";itl_ms_p50={np.percentile(gaps, 50)*1e3:.2f}"
+            f";itl_ms_p95={np.percentile(gaps, 95)*1e3:.2f}"
+        )
     if prefix_mode:
         derived += (
             f";prefix_hit_rate={tel['prefix_hit_rate']:.2f}"
@@ -118,7 +162,7 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
 
 
 def run(policy: str | None = None, kv_layout: str = "dense",
-        workload: str = "uniform") -> list[str]:
+        workload: str = "uniform", api: str = "batch") -> list[str]:
     if workload == "prefix" and kv_layout == "dense":
         kv_layout = "paged"  # sharing needs pages; dense would be inert
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
@@ -137,7 +181,7 @@ def run(policy: str | None = None, kv_layout: str = "dense",
                         name, cfg, params,
                         max_batch=max_batch, buckets=buckets,
                         decode_steps=decode_steps, policy=arch_policy,
-                        kv_layout=kv_layout, workload=workload,
+                        kv_layout=kv_layout, workload=workload, api=api,
                     )
                 )
     return rows
@@ -155,6 +199,10 @@ def main():
     ap.add_argument("--kv-layout", default="dense",
                     choices=("dense", "paged"),
                     help="KV-cache storage layout (serve/kv_cache.py)")
+    ap.add_argument("--api", default="batch", choices=("batch", "stream"),
+                    help="drive the measured wave through Engine.generate "
+                         "(batch) or Engine.stream (per-token events; adds "
+                         "ttft/itl p50/p95 columns)")
     ap.add_argument("--workload", default="uniform",
                     choices=("uniform", "prefix"),
                     help="request stream: uniform random prompts, or "
@@ -164,7 +212,7 @@ def main():
     args = ap.parse_args()
     t0 = time.time()
     rows = run(policy=args.policy, kv_layout=args.kv_layout,
-               workload=args.workload)
+               workload=args.workload, api=args.api)
     for row in rows:
         print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")

@@ -18,7 +18,7 @@ from repro.configs.base import ServeConfig, TrainConfig
 from repro.core import latency_model as lat
 from repro.data.synthetic import SyntheticLM, SyntheticLMConfig
 from repro.models import lm
-from repro.serve import ServingEngine
+from repro.serve import Engine
 from repro.train import run_training
 
 
@@ -55,16 +55,16 @@ def main():
     params = state["params"]
 
     prompt = list(np.asarray(ds.batch(999)["tokens"][0, :8]))
-    float_eng = ServingEngine(cfg, params, ServeConfig(max_batch=1, max_seq_len=64))
-    uid = float_eng.submit(prompt, 12)
-    float_out = float_eng.run()[uid].generated
+    float_eng = Engine(cfg, params, ServeConfig(max_batch=1, max_seq_len=64))
+    h = float_eng.submit(prompt, max_new_tokens=12)
+    float_out = float_eng.generate()[h.uid].generated
 
-    quant_eng = ServingEngine(
+    quant_eng = Engine(
         cfg, params,
         ServeConfig(max_batch=1, max_seq_len=64, policy="int8_serve"),
     )
-    uid = quant_eng.submit(prompt, 12)
-    quant_out = quant_eng.run()[uid].generated
+    h = quant_eng.submit(prompt, max_new_tokens=12)
+    quant_out = quant_eng.generate()[h.uid].generated
 
     agree = sum(a == b for a, b in zip(float_out, quant_out))
     print(f"float   continuation: {float_out}")

@@ -3,6 +3,11 @@ small LM with batched requests through the continuous-batching engine,
 with the paper's quantized datapath enabled.
 
     PYTHONPATH=src python examples/serve_lm.py --arch granite-8b --requests 12
+
+``--stream`` consumes two interleaved ``Engine.stream`` iterators (the
+rest batch behind them) and prints per-token events with
+time-to-first-token — the client-facing side of the
+Scheduler / Executor / Engine split.
 """
 
 import argparse
@@ -12,96 +17,83 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.configs.base import ServeConfig
-from repro.launch.serve import resolve_policy_arg
 from repro.models import lm
-from repro.serve import ServingEngine
+from repro.serve import Engine
+from repro.serve.cli import add_serving_args, config_from_args
+
+
+def stream_demo(eng, handles):
+    """Interleave the first two streams token-by-token (proving both
+    make progress on shared engine pumps), then drain the rest."""
+    first_ts = {}
+    live = [eng.stream(h) for h in handles[:2]]
+    while live:
+        for it in list(live):
+            ev = next(it, None)
+            if ev is None:
+                live.remove(it)
+            else:
+                first_ts.setdefault(ev.uid, ev.ts)
+                print(f"  [stream] req {ev.uid} token#{ev.index} = {ev.token}"
+                      f"{'  <done:' + ev.finish_reason + '>' if ev.finished else ''}")
+    for h in handles[2:]:
+        for ev in eng.stream(h):
+            first_ts.setdefault(ev.uid, ev.ts)
+    for h in handles[:3]:
+        req = eng.result(h)
+        if h.uid not in first_ts:  # zero-token finish (sequence cap)
+            print(f"  req {h.uid}: no tokens -> {req.generated}")
+            continue
+        ttft_ms = (first_ts[h.uid] - req.created_at) * 1e3
+        print(f"  req {h.uid}: ttft {ttft_ms:.1f} ms -> {req.generated}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.7)
-    ap.add_argument("--policy", default=None,
-                    help="precision policy preset (float, int8_serve, "
-                         "paper_vu13p, ptq_fixed<W,I>, qat_fixed<W,I>) or "
-                         "'auto' for the arch's recommended serve_policy")
-    ap.add_argument("--quantized", action="store_true",
-                    help="deprecated alias for --policy int8_serve")
-    ap.add_argument("--prefill-buckets", type=int, nargs="*", default=None,
-                    help="prompt-length buckets (default: powers of two; "
-                         "pass with no values for exact-length v1 prefill)")
-    ap.add_argument("--decode-steps", type=int, default=4,
-                    help="decode tokens per host dispatch (lax.scan)")
-    ap.add_argument("--max-prefill-per-step", type=int, default=0,
-                    help="cap on prompts admitted per step (0 = all free slots)")
-    ap.add_argument("--kv-layout", default="dense",
-                    choices=("dense", "paged"),
-                    help="KV-cache storage layout: dense per-slot slabs or "
-                         "block-table pages (serve/kv_cache.py)")
-    ap.add_argument("--kv-page-size", type=int, default=16,
-                    help="tokens per page (paged layout)")
-    ap.add_argument("--kv-prefix-cache", action="store_true",
-                    help="share full prompt pages across same-prefix "
-                         "requests (paged layout; copy-on-write)")
-    ap.add_argument("--kv-preemption", action="store_true",
-                    help="preempt the youngest resident instead of "
-                         "head-of-line blocking when the page pool is "
-                         "exhausted (paged layout, bit-exact datapath)")
-    ap.add_argument("--shared-prefix", type=int, default=0,
-                    help="prepend a fixed preamble of this many tokens to "
-                         "every request (prefix-cache exercise)")
+    add_serving_args(ap, max_batch=4, max_seq=128, max_new=16,
+                     temperature=0.7)
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=True)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    serve_cfg = ServeConfig(
-        max_batch=args.max_batch,
-        max_seq_len=128,
-        temperature=args.temperature,
-        policy=resolve_policy_arg(args.policy, args.quantized, cfg),
-        prefill_buckets=(
-            None if args.prefill_buckets is None
-            else tuple(args.prefill_buckets)
-        ),
-        decode_steps=args.decode_steps,
-        max_prefill_per_step=args.max_prefill_per_step,
-        kv_layout=args.kv_layout,
-        kv_page_size=args.kv_page_size,
-        kv_prefix_cache=args.kv_prefix_cache,
-        kv_preemption=args.kv_preemption,
-    )
-    eng = ServingEngine(cfg, params, serve_cfg)
+    eng = Engine(cfg, params, config_from_args(args, cfg))
     print(f"serving {cfg.name} ({lm.count_params(cfg):,} params), "
-          f"max_batch={args.max_batch}, policy={eng.policy.name}, "
-          f"kv_layout={eng.kv_layout}, "
-          f"buckets={eng.prefill_buckets or 'exact'}, "
-          f"decode_steps={serve_cfg.decode_steps}")
+          f"max_batch={args.max_batch}, policy={eng.executor.policy.name}, "
+          f"kv_layout={eng.executor.kv_layout}, "
+          f"buckets={eng.executor.buckets or 'exact'}, "
+          f"decode_steps={eng.serve_cfg.decode_steps}"
+          + (f", prefill_chunk={args.prefill_chunk}"
+             if args.prefill_chunk else ""))
 
     rng = np.random.default_rng(0)
     preamble = list(rng.integers(0, cfg.vocab_size, args.shared_prefix))
-    uids = []
-    for i in range(args.requests):
+    handles = []
+    for _ in range(args.requests):
         prompt = preamble + list(
             rng.integers(0, cfg.vocab_size, rng.integers(3, 12))
         )
-        uids.append(eng.submit(prompt, max_new_tokens=args.max_new))
+        handles.append(eng.submit(prompt, max_new_tokens=args.max_new))
 
     t0 = time.perf_counter()
-    steps = 0
-    while eng.has_work:
-        stats = eng.step()
-        steps += 1
-        if steps % 8 == 0:
-            active = sum(s.active for s in eng.slots)
-            print(f"  step {steps}: active={active} queued={len(eng._queue)} "
-                  f"prefilled={stats['prefilled']} decoded={stats['decoded']}")
+    if args.stream:
+        stream_demo(eng, handles)
+        results = {h.uid: eng.result(h) for h in handles}
+    else:
+        steps = 0
+        while eng.has_work:
+            stats = eng.step()
+            steps += 1
+            if steps % 8 == 0:
+                active = sum(s.active for s in eng.executor.slots)
+                print(f"  step {steps}: active={active} "
+                      f"queued={len(eng.scheduler.queue)} "
+                      f"prefilled={stats['prefilled']} "
+                      f"decoded={stats['decoded']}")
+        results = {h.uid: eng.result(h) for h in handles}
     dt = time.perf_counter() - t0
 
-    results = {u: eng.result(u) for u in uids}
     total_tokens = sum(len(r.generated) for r in results.values())
     print(f"\ncompleted {len(results)} requests / {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on CPU host)")
@@ -120,9 +112,10 @@ def main():
               f"(+{tel['prefix_tokens_shared']} shared-storage) | "
               f"{tel['cow_copies']} CoW copies | "
               f"{tel['preemptions']} preemptions")
-    for u in uids[:3]:
-        r = results[u]
-        print(f"  req {u}: prompt {r.prompt[:6]}... -> {r.generated}")
+    if not args.stream:
+        for h in handles[:3]:
+            r = results[h.uid]
+            print(f"  req {h.uid}: prompt {r.prompt[:6]}... -> {r.generated}")
 
 
 if __name__ == "__main__":

@@ -289,6 +289,20 @@ class ServeConfig:
     # Max prompts admitted (prefilled) per engine step; 0 = fill every
     # free slot (v1 behavior).
     max_prefill_per_step: int = 0
+    # --- chunked prefill (scheduler policy; serve/scheduler.py) ---
+    # When set, a prompt longer than this admits by prefilling only its
+    # first `prefill_chunk` tokens through the bucketed prefill program
+    # and teacher-forcing the remaining prompt tail through the decode
+    # scan, interleaved with resident decode steps — so admitting a long
+    # prompt stalls resident decoding by at most a chunk-sized dispatch
+    # instead of a full-prompt-sized one, within the unchanged
+    # len(prefill_buckets) + 1 compiled-program budget.  Must not exceed
+    # the largest prefill bucket (the chunk dispatch reuses a bucketed
+    # program).  Only engines whose decode datapath is bit-exact with
+    # prefill (float GQA, exact softmax, jnp reference) chunk — there,
+    # greedy token streams are bit-identical to unchunked (test-enforced);
+    # other datapaths silently keep whole-prompt prefill.  None = off.
+    prefill_chunk: int | None = None
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """Prefill buckets, ascending.  Auto mode: powers of two in

@@ -2,6 +2,10 @@
 quantized datapath, fed from a simple request file or synthetic load.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --quantized
+
+All engine flags come from the shared serving CLI (serve/cli.py);
+``--stream`` switches from the batch ``Engine.generate`` wrapper to
+per-token ``Engine.stream`` consumption and reports time-to-first-token.
 """
 
 from __future__ import annotations
@@ -13,22 +17,13 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.configs.base import ServeConfig
 from repro.models import lm
-from repro.serve import ServingEngine
-
-
-def resolve_policy_arg(policy: str | None, quantized: bool, cfg) -> str | None:
-    """Shared --policy semantics for the serving CLIs: explicit --policy
-    wins; 'auto' resolves to the arch's recommended ``cfg.serve_policy``;
-    the deprecated --quantized maps to the int8_serve preset."""
-    if policy == "auto":
-        return cfg.serve_policy
-    if policy is not None:
-        return policy
-    if quantized:
-        return "int8_serve"
-    return None
+from repro.serve import Engine
+from repro.serve.cli import (  # noqa: F401  (resolve_policy_arg re-export)
+    add_serving_args,
+    config_from_args,
+    resolve_policy_arg,
+)
 
 
 def main():
@@ -36,71 +31,16 @@ def main():
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--policy", default=None,
-                    help="precision policy: a preset name (float, int8_serve, "
-                         "paper_vu13p, ptq_fixed<W,I>, qat_fixed<W,I>) or "
-                         "'auto' for the arch's recommended serve_policy")
-    ap.add_argument("--quantized", action="store_true",
-                    help="deprecated alias for --policy int8_serve")
-    ap.add_argument("--prefill-buckets", type=int, nargs="*", default=None,
-                    help="prompt-length buckets (default: powers of two; "
-                         "pass with no values for exact-length v1 prefill)")
-    ap.add_argument("--decode-steps", type=int, default=4,
-                    help="decode tokens per host dispatch (lax.scan)")
-    ap.add_argument("--max-prefill-per-step", type=int, default=0,
-                    help="cap on prompts admitted per step (0 = all free slots)")
-    ap.add_argument("--kv-layout", default="dense",
-                    choices=("dense", "paged"),
-                    help="KV-cache storage layout: dense per-slot slabs or "
-                         "block-table pages (serve/kv_cache.py)")
-    ap.add_argument("--kv-page-size", type=int, default=16,
-                    help="tokens per page (paged layout; must divide "
-                         "--max-seq)")
-    ap.add_argument("--kv-pages", type=int, default=None,
-                    help="physical pages in the pool (default: worst case "
-                         "max_batch x max_seq / page_size, + trash page)")
-    ap.add_argument("--kv-prefix-cache", action="store_true",
-                    help="share full prompt pages across same-prefix "
-                         "requests (paged layout; copy-on-write)")
-    ap.add_argument("--kv-preemption", action="store_true",
-                    help="preempt the youngest resident instead of "
-                         "head-of-line blocking when the page pool is "
-                         "exhausted (paged layout, bit-exact datapath)")
-    ap.add_argument("--shared-prefix", type=int, default=0,
-                    help="prepend a fixed preamble of this many tokens to "
-                         "every request (prefix-cache exercise; think "
-                         "repeated detector-geometry preambles)")
+    add_serving_args(ap, max_batch=4, max_seq=128, max_new=16,
+                     temperature=0.0)
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=not args.full_config)
-    policy = resolve_policy_arg(args.policy, args.quantized, cfg)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(
-        cfg, params,
-        ServeConfig(
-            max_batch=args.max_batch, max_seq_len=args.max_seq,
-            temperature=args.temperature,
-            policy=policy,
-            prefill_buckets=(
-                None if args.prefill_buckets is None
-                else tuple(args.prefill_buckets)
-            ),
-            decode_steps=args.decode_steps,
-            max_prefill_per_step=args.max_prefill_per_step,
-            kv_layout=args.kv_layout,
-            kv_page_size=args.kv_page_size,
-            kv_pages=args.kv_pages,
-            kv_prefix_cache=args.kv_prefix_cache,
-            kv_preemption=args.kv_preemption,
-        ),
-    )
+    eng = Engine(cfg, params, config_from_args(args, cfg))
     rng = np.random.default_rng(0)
     preamble = list(rng.integers(0, cfg.vocab_size, args.shared_prefix))
-    uids = [
+    handles = [
         eng.submit(
             preamble
             + list(rng.integers(0, cfg.vocab_size, rng.integers(4, 16))),
@@ -109,17 +49,37 @@ def main():
         for _ in range(args.requests)
     ]
     t0 = time.perf_counter()
-    results = eng.run()
-    dt = time.perf_counter() - t0
-    toks = sum(len(results[u].generated) for u in uids)
-    print(f"{len(uids)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s host throughput)")
+    if args.stream:
+        ttfts, toks = [], 0
+        for h in handles:
+            events = list(eng.stream(h))
+            toks += len(events)
+            if events:  # a request can legally finish with zero tokens
+                # created_at, not submitted_at: preemption restamps the
+                # latter for queue-wait accounting
+                ttfts.append(events[0].ts - eng.request(h).created_at)
+        dt = time.perf_counter() - t0
+        print(f"{len(handles)} requests streamed, {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s) | "
+              f"ttft p50 {np.percentile(ttfts, 50)*1e3:.1f} ms / "
+              f"p95 {np.percentile(ttfts, 95)*1e3:.1f} ms"
+              if ttfts else
+              f"{len(handles)} requests streamed, {toks} tokens in {dt:.2f}s")
+    else:
+        results = eng.generate()
+        dt = time.perf_counter() - t0
+        toks = sum(len(results[h.uid].generated) for h in handles)
+        print(f"{len(handles)} requests, {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s host throughput)")
     tel = eng.telemetry
-    print(f"telemetry: {tel['tokens_per_s']:.1f} tok/s | "
-          f"policy={eng.policy.name} | "
-          f"queue wait mean {tel['queue_wait_s_mean']*1e3:.1f} ms | "
+    queue_wait_ms = (
+        tel["queue_wait_s_total"] / max(tel["prompts_admitted"], 1) * 1e3
+    )
+    print(f"telemetry: policy={eng.executor.policy.name} | "
+          f"queue wait mean {queue_wait_ms:.1f} ms | "
           f"{tel['prefill_compiles']} prefill programs "
-          f"(buckets={eng.prefill_buckets or 'exact'}), "
+          f"(buckets={eng.executor.buckets or 'exact'}"
+          f"{f', chunk={args.prefill_chunk}' if args.prefill_chunk else ''}), "
           f"{tel['decode_compiles']} decode program "
           f"(decode_steps={eng.serve_cfg.decode_steps})")
     print(f"kv cache: layout={tel['kv_layout']} "

@@ -2,5 +2,16 @@
 # back into it (repro.serve.kv_cache) while engine -> models is importing
 from repro.serve import kv_cache  # noqa: F401
 from repro.serve.kv_cache import CacheManager, CacheStats, PrefixMatch  # noqa: F401
-from repro.serve.engine import Request, ServingEngine  # noqa: F401
-from repro.serve.sampling import sample  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    Admission,
+    ExecutorCaps,
+    FifoScheduler,
+    Request,
+    ScheduleDecision,
+    Scheduler,
+    Slot,
+)
+from repro.serve.executor import ModelExecutor, StepOutput  # noqa: F401
+from repro.serve.api import Engine, RequestHandle, TokenEvent  # noqa: F401
+from repro.serve.engine import ServingEngine  # noqa: F401  (deprecated shim)
+from repro.serve.sampling import SamplingParams, sample  # noqa: F401

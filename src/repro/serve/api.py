@@ -1,0 +1,319 @@
+"""Client-facing serving API: submit / stream / cancel / generate.
+
+The top layer of the Scheduler / Executor / Engine split (see
+``serve/scheduler.py`` for the layering contract).  :class:`Engine`
+wires a scheduling policy to a :class:`~repro.serve.executor.ModelExecutor`
+and exposes the request lifecycle the batch-only ``run()`` API could
+not express:
+
+* :meth:`Engine.submit` — enqueue a prompt, get a :class:`RequestHandle`.
+* :meth:`Engine.stream` — iterate :class:`TokenEvent`s as they are
+  produced (time-to-first-token and inter-token latency are the event
+  timestamp deltas).  Pumping any one stream advances the whole engine;
+  events for other requests buffer on their own handles, so interleaved
+  streams each see their full ordered token sequence.
+* :meth:`Engine.cancel` — drop a queued request, or evict a resident one
+  and free its KV pages immediately.
+* :meth:`Engine.generate` — the batch convenience wrapper (submit
+  everything, run to completion, return finished requests) that
+  ``ServingEngine.run()`` callers migrate to.
+
+The engine loop is synchronous and single-threaded: each
+:meth:`Engine.step` asks the scheduler for an explicit
+:class:`~repro.serve.scheduler.ScheduleDecision` and has the executor
+apply it.  All telemetry is merged from the two layers plus the cache
+manager under :attr:`Engine.telemetry` (same key set as the historical
+monolith).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from collections.abc import Iterator
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.serve.executor import ModelExecutor
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import FifoScheduler, Request, Scheduler
+
+PyTree = Any
+
+#: finish reasons stamped on the terminal TokenEvent / request
+FINISH_EOS = "eos"
+FINISH_LENGTH = "length"
+FINISH_CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestHandle:
+    """Opaque ticket for a submitted request."""
+
+    uid: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One generated token, stamped when its decode/prefill dispatch
+    result reached the host.  ``index`` is the token's position in the
+    request's generated sequence; ``finished`` marks the request's final
+    token (``finish_reason`` in {"eos", "length"}).  A cancelled request
+    simply stops producing events — cancellation is not a token."""
+
+    uid: int
+    token: int
+    index: int
+    ts: float
+    finished: bool = False
+    finish_reason: str | None = None
+
+
+class Engine:
+    """Streaming serving engine: a scheduling policy (default
+    :class:`~repro.serve.scheduler.FifoScheduler`) driving a
+    :class:`~repro.serve.executor.ModelExecutor`.
+
+    ``scheduler_factory`` swaps the policy: it is called with
+    ``(serve_cfg, executor.caps, executor.cache_mgr)`` and must return a
+    :class:`~repro.serve.scheduler.Scheduler`.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: PyTree,
+        serve_cfg: ServeConfig | None = None,
+        kernel: dict | None = None,
+        seed: int = 0,
+        scheduler_factory: Callable[..., Scheduler] | None = None,
+    ):
+        self.executor = ModelExecutor(
+            cfg, params, serve_cfg, kernel=kernel, seed=seed
+        )
+        self.serve_cfg = self.executor.serve_cfg
+        factory = scheduler_factory or FifoScheduler
+        self.scheduler: Scheduler = factory(
+            self.serve_cfg, self.executor.caps, self.executor.cache_mgr
+        )
+        self._uid = 0
+        self._requests: dict[int, Request] = {}
+        self._finished: dict[int, Request] = {}
+        self._finish_reason: dict[int, str] = {}
+        self._events: dict[int, collections.deque[TokenEvent]] = {}
+        self._run_tel: dict[str, float] = {}
+
+    # --------------------------------------------------------- lifecycle --
+    def submit(
+        self,
+        prompt: list[int],
+        params: SamplingParams | None = None,
+        *,
+        max_new_tokens: int | None = None,
+        eos_id: int | None = None,
+    ) -> RequestHandle:
+        """Enqueue a prompt.  Per-request knobs ride a
+        :class:`~repro.serve.sampling.SamplingParams` (or the keyword
+        shortcuts); returns a handle for :meth:`stream` / :meth:`cancel`
+        / :meth:`result`."""
+        if params is None:
+            params = SamplingParams(
+                max_new_tokens=16 if max_new_tokens is None else max_new_tokens,
+                eos_id=eos_id,
+            )
+        elif max_new_tokens is not None or eos_id is not None:
+            raise ValueError(
+                "pass either SamplingParams or the keyword shortcuts, not both"
+            )
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.serve_cfg.max_seq_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_seq_len "
+                f"{self.serve_cfg.max_seq_len}"
+            )
+        now = time.perf_counter()
+        req = Request(
+            self._uid + 1, list(prompt), params.max_new_tokens, params.eos_id,
+            created_at=now, submitted_at=now,
+        )
+        cache = self.executor.cache_mgr
+        need = cache.pages_for(
+            min(len(prompt) + params.max_new_tokens, self.serve_cfg.max_seq_len)
+        )
+        if need > cache.pages_capacity:
+            raise ValueError(
+                f"request needs {need} KV pages (prompt {len(prompt)} + "
+                f"up to {params.max_new_tokens} new tokens) but the pool only "
+                f"holds {cache.pages_capacity}; raise "
+                "ServeConfig.kv_pages or lower max_new_tokens"
+            )
+        self._uid += 1
+        self._requests[req.uid] = req
+        self._events[req.uid] = collections.deque()
+        self.scheduler.enqueue(req)
+        return RequestHandle(req.uid)
+
+    def cancel(self, handle: RequestHandle | int) -> bool:
+        """Cancel a request: a queued one is dropped before it ever
+        prefills; a resident one is evicted and its KV pages return to
+        the pool immediately.  Returns False when the request already
+        finished (nothing to cancel)."""
+        uid = handle.uid if isinstance(handle, RequestHandle) else handle
+        if uid in self._finished or uid not in self._requests:
+            return False
+        req = self.scheduler.remove(uid)
+        if req is None:
+            for idx, slot in enumerate(self.executor.slots):
+                if slot.active and slot.request.uid == uid:
+                    req = slot.request
+                    self.executor.release(idx)
+                    break
+        if req is None:  # not queued, not resident: raced a finish
+            return False
+        req.cancelled = True
+        self._finished[uid] = req
+        self._finish_reason[uid] = FINISH_CANCELLED
+        return True
+
+    def result(self, handle: RequestHandle | int) -> Request | None:
+        """The finished request, or None while it is still queued/running."""
+        uid = handle.uid if isinstance(handle, RequestHandle) else handle
+        return self._finished.get(uid)
+
+    def request(self, handle: RequestHandle | int) -> Request:
+        """The live request record (queued, resident, or finished) —
+        e.g. for submit timestamps while a stream is still open."""
+        uid = handle.uid if isinstance(handle, RequestHandle) else handle
+        return self._requests[uid]
+
+    def finish_reason(self, handle: RequestHandle | int) -> str | None:
+        uid = handle.uid if isinstance(handle, RequestHandle) else handle
+        return self._finish_reason.get(uid)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.queue) or any(
+            s.active for s in self.executor.slots
+        )
+
+    # -------------------------------------------------------------- loop --
+    def step(self) -> dict:
+        """One engine iteration: ``scheduler.schedule`` then
+        ``executor.execute``; route the step's emissions into per-request
+        event queues."""
+        decision = self.scheduler.schedule(self.executor.slots)
+        out = self.executor.execute(decision)
+        now = time.perf_counter()
+        finished_uids = {req.uid for req in out.finished}
+        reasons = {
+            req.uid: (
+                FINISH_EOS
+                if req.eos_id is not None
+                and req.generated
+                and req.generated[-1] == req.eos_id
+                else FINISH_LENGTH
+            )
+            for req in out.finished
+        }
+        last_index = {
+            req.uid: len(req.generated) - 1 for req in out.finished
+        }
+        for uid, token, index in out.tokens:
+            final = uid in finished_uids and index == last_index[uid]
+            self._events.setdefault(uid, collections.deque()).append(TokenEvent(
+                uid=uid, token=token, index=index, ts=now,
+                finished=final,
+                finish_reason=reasons[uid] if final else None,
+            ))
+        for req in out.finished:
+            self._finished[req.uid] = req
+            self._finish_reason[req.uid] = reasons[req.uid]
+        stats = out.stats
+        stats.update(
+            prefill_compiles=self.executor.tel["prefill_compiles"],
+            decode_compiles=self.executor.tel["decode_compiles"],
+        )
+        return stats
+
+    def stream(self, handle: RequestHandle | int) -> Iterator[TokenEvent]:
+        """Yield the request's :class:`TokenEvent`s in order, pumping the
+        engine as needed.  Other requests progress on the same pumps;
+        their events buffer for their own streams.  The iterator ends
+        after the request's final event (or silently on cancellation)."""
+        uid = handle.uid if isinstance(handle, RequestHandle) else handle
+        if uid not in self._requests:
+            raise KeyError(f"unknown request {uid}")
+        queue = self._events.get(uid, collections.deque())
+        while True:
+            while queue:
+                yield queue.popleft()
+            if uid in self._finished or not self.has_work:
+                # a finished request emits no further events: release the
+                # (drained) buffer so a long-lived engine stays bounded
+                self._events.pop(uid, None)
+                return
+            self.step()
+
+    def generate(
+        self,
+        prompts: list[list[int]] | None = None,
+        params: SamplingParams | None = None,
+        *,
+        max_new_tokens: int = 16,
+        eos_id: int | None = None,
+        max_steps: int = 10_000,
+    ) -> dict[int, Request]:
+        """Batch convenience wrapper (the ``ServingEngine.run`` migration
+        target): optionally submit ``prompts`` (all with the same
+        sampling params), run the engine until idle, and return every
+        finished request keyed by uid — including requests submitted
+        earlier through :meth:`submit`.
+
+        Buffered :class:`TokenEvent`s of requests that finished are
+        discarded on return (generated tokens live on the Request):
+        streams opened before this call drain normally, but the batch
+        path never accumulates per-token event state across waves."""
+        if prompts is not None:
+            sp = params or SamplingParams(
+                max_new_tokens=max_new_tokens, eos_id=eos_id
+            )
+            for prompt in prompts:
+                self.submit(prompt, sp)
+        t0 = time.perf_counter()
+        tokens0 = self.executor.tel["tokens_generated"]
+        steps = 0
+        while self.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+        dt = time.perf_counter() - t0
+        self._run_tel["run_wall_s"] = dt
+        self._run_tel["tokens_per_s"] = (
+            self.executor.tel["tokens_generated"] - tokens0
+        ) / max(dt, 1e-9)
+        admitted = max(self.scheduler.stats["prompts_admitted"], 1)
+        self._run_tel["queue_wait_s_mean"] = (
+            self.scheduler.stats["queue_wait_s_total"] / admitted
+        )
+        # finished requests emit no further events; dropping their
+        # buffers keeps a wave-after-wave batch engine O(resident), not
+        # O(tokens ever generated).  Open streams hold their own deque
+        # reference and still drain what was buffered before this call.
+        for uid in [u for u in self._events if u in self._finished]:
+            del self._events[uid]
+        return dict(self._finished)
+
+    # --------------------------------------------------------- telemetry --
+    @property
+    def telemetry(self) -> dict:
+        """Merged view over the scheduler, executor, cache-manager, and
+        run-level counters (the historical monolith's key set)."""
+        tel = dict(self.executor.tel)
+        tel.update(self.scheduler.stats)
+        tel.update(self.executor.cache_mgr.stats().as_dict())
+        tel.update(self._run_tel)
+        return tel
+
+    def kv_stats(self) -> dict:
+        return self.executor.kv_stats()

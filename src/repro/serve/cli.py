@@ -1,0 +1,111 @@
+"""Shared serving CLI: one flag set and one ServeConfig builder for every
+serving entry point (``launch/serve.py``, ``examples/serve_lm.py``,
+benchmarks).  The launchers used to re-declare the same ~12 flags each;
+they now both import :func:`add_serving_args` / :func:`config_from_args`
+so a new engine knob lands in every CLI by construction.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import ServeConfig
+
+
+def resolve_policy_arg(policy: str | None, quantized: bool, cfg) -> str | None:
+    """Shared --policy semantics for the serving CLIs: explicit --policy
+    wins; 'auto' resolves to the arch's recommended ``cfg.serve_policy``;
+    the deprecated --quantized maps to the int8_serve preset."""
+    if policy == "auto":
+        return cfg.serve_policy
+    if policy is not None:
+        return policy
+    if quantized:
+        return "int8_serve"
+    return None
+
+
+def add_serving_args(
+    ap: argparse.ArgumentParser,
+    *,
+    max_batch: int = 4,
+    max_seq: int = 128,
+    max_new: int = 16,
+    temperature: float = 0.0,
+) -> argparse.ArgumentParser:
+    """Register the engine flag set (batch/sequence shape, precision
+    policy, prefill/decode knobs, KV-cache layout and sharing, chunked
+    prefill, streaming).  Per-script defaults ride the keyword args."""
+    ap.add_argument("--max-batch", type=int, default=max_batch)
+    ap.add_argument("--max-seq", type=int, default=max_seq)
+    ap.add_argument("--max-new", type=int, default=max_new)
+    ap.add_argument("--temperature", type=float, default=temperature)
+    ap.add_argument("--policy", default=None,
+                    help="precision policy: a preset name (float, int8_serve, "
+                         "paper_vu13p, ptq_fixed<W,I>, qat_fixed<W,I>) or "
+                         "'auto' for the arch's recommended serve_policy")
+    ap.add_argument("--quantized", action="store_true",
+                    help="deprecated alias for --policy int8_serve")
+    ap.add_argument("--prefill-buckets", type=int, nargs="*", default=None,
+                    help="prompt-length buckets (default: powers of two; "
+                         "pass with no values for exact-length v1 prefill)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: admit long prompts with a "
+                         "chunk-sized bucketed dispatch and teacher-force "
+                         "the prompt tail through the decode scan, "
+                         "interleaved with resident decode (bit-exact "
+                         "datapaths only; must not exceed the largest "
+                         "bucket)")
+    ap.add_argument("--decode-steps", type=int, default=4,
+                    help="decode tokens per host dispatch (lax.scan)")
+    ap.add_argument("--max-prefill-per-step", type=int, default=0,
+                    help="cap on prompts admitted per step (0 = all free slots)")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache storage layout: dense per-slot slabs or "
+                         "block-table pages (serve/kv_cache.py)")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per page (paged layout; must divide "
+                         "--max-seq)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="physical pages in the pool (default: worst case "
+                         "max_batch x max_seq / page_size, + trash page)")
+    ap.add_argument("--kv-prefix-cache", action="store_true",
+                    help="share full prompt pages across same-prefix "
+                         "requests (paged layout; copy-on-write)")
+    ap.add_argument("--kv-preemption", action="store_true",
+                    help="preempt the youngest resident instead of "
+                         "head-of-line blocking when the page pool is "
+                         "exhausted (paged layout, bit-exact datapath)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a fixed preamble of this many tokens to "
+                         "every request (prefix-cache exercise; think "
+                         "repeated detector-geometry preambles)")
+    ap.add_argument("--stream", action="store_true",
+                    help="consume requests through Engine.stream "
+                         "(per-token events with TTFT) instead of the "
+                         "batch Engine.generate wrapper")
+    return ap
+
+
+def config_from_args(args: argparse.Namespace, model_cfg) -> ServeConfig:
+    """Build the ServeConfig from parsed serving args (``model_cfg``
+    resolves ``--policy auto`` to the arch's recommended preset)."""
+    return ServeConfig(
+        max_batch=args.max_batch,
+        max_seq_len=args.max_seq,
+        temperature=args.temperature,
+        policy=resolve_policy_arg(args.policy, args.quantized, model_cfg),
+        prefill_buckets=(
+            None if args.prefill_buckets is None
+            else tuple(args.prefill_buckets)
+        ),
+        prefill_chunk=args.prefill_chunk,
+        decode_steps=args.decode_steps,
+        max_prefill_per_step=args.max_prefill_per_step,
+        kv_layout=args.kv_layout,
+        kv_page_size=args.kv_page_size,
+        kv_pages=args.kv_pages,
+        kv_prefix_cache=args.kv_prefix_cache,
+        kv_preemption=args.kv_preemption,
+    )

@@ -1,134 +1,40 @@
-"""Serving engine v3: continuous batching with bucketed *batched* prefill,
-multi-token scan decode, and pluggable KV-cache layouts.
+"""Deprecated monolithic serving facade.
 
-The paper's subject is low-latency *inference* with a bounded, pre-compiled
-set of fixed-iteration datapaths (hls4ml pipelines); this engine is the
-datacenter-scale counterpart and inherits that discipline:
+The serving engine was split into three layers — scheduling policy
+(``serve/scheduler.py``), device execution (``serve/executor.py``), and
+the client-facing streaming API (``serve/api.py``).  This module keeps
+the old ``ServingEngine`` surface alive for one release as a thin shim
+over :class:`repro.serve.api.Engine`: numerics are identical (the shim
+adds no logic of its own), but every construction emits a
+``DeprecationWarning``.  Migrate:
 
-* **Bucketed, batched prefill** — prompts are right-padded to power-of-two
-  length buckets with an explicit per-row length mask, and every prompt
-  sharing a bucket in one engine step rides ONE fixed-shape dispatch that
-  fills up to ``max_batch`` slots at once.  The jit cache holds at most
-  ``len(prefill_buckets)`` prefill programs (each at the fixed batch
-  width) plus one decode program — test-enforced.
-* **Scan decode** — ``decode_steps`` tokens per host dispatch via
-  ``jax.lax.scan`` over the fused decode program, with per-slot active
-  masks so finished slots (eos / max-tokens / sequence cap) freeze their
-  position and stop emitting mid-scan.
-* **KV-cache layouts** — all layout knowledge lives in
-  ``serve/kv_cache.py`` behind a :class:`~repro.serve.kv_cache.CacheManager`:
-  ``dense`` (per-slot slabs, the historical behavior) or ``paged``
-  (block-table-indexed pages; long contexts allocate on demand, finished
-  slots return pages immediately).  Both produce token-identical output.
-* **Prefix-cache page sharing** (``kv_prefix_cache``, paged layout) — a
-  same-prefix admission maps its leading block-table entries to pages the
-  prefix index already holds (refcounted, copy-on-write on decode
-  writes).  On the bit-exact datapath (float GQA, exact softmax, no
-  Pallas), a hit also skips the prefill dispatch entirely: the unshared
-  prompt tail is teacher-forced through the decode scan (forced steps
-  write prompt KV and emit nothing), so the saved prefill FLOPs are
-  real.  Elsewhere (MLA / int8-KV / LUT softmax, whose decode datapath
-  is not bitwise the prefill datapath) a hit still dedupes storage: the
-  full prompt is recomputed through the normal prefill program — logits
-  bit-identical to dense by construction — and the insert skips the
-  shared columns so shared history stays immutable.  Bit-identity is a
-  statement about logits, and therefore about greedy token streams
-  (test-enforced); sampled streams are equally distributed but not
-  reproducible against a dense run when a skip or preemption changes
-  the PRNG dispatch schedule.
-* **Page-aware preemption** (``kv_preemption``, paged layout) — when the
-  pool cannot cover the queue head's reservation, the youngest resident
-  slot is preempted (private pages freed, request re-queued at the queue
-  front with prompt + generated-so-far as a resumable prompt) instead of
-  head-of-line blocking.  Enabled only on the bit-exact datapath, where
-  re-prefilling previously-decoded positions reproduces the exact same
-  values; other engines keep the FIFO serialization.
-* **Telemetry** — tokens/s, queue wait, prefill/decode compile counters,
-  and KV-cache occupancy (bytes, page utilization) from ``step()``/``run()``.
-* **Precision policy** — ``ServeConfig.policy`` (a ``core.precision``
-  PrecisionPolicy / preset name) selects the quantized datapath: offline
-  weight transforms, KV-cache dtype (int8 per-token scales apply per page
-  under the paged layout), LUT softmax, and any runtime fake-quant — all
-  without adding jit programs beyond the float baseline.
+    ``ServingEngine(cfg, params, sc)``   -> ``Engine(cfg, params, sc)``
+    ``uid = eng.submit(p, n)``           -> ``h = eng.submit(p, max_new_tokens=n)``
+    ``eng.run()``                        -> ``eng.generate()``
+    (new) token streaming                -> ``for ev in eng.stream(h): ...``
+    (new) cancellation                   -> ``eng.cancel(h)``
 
-Families whose caches are not position-addressed (SSM/hybrid state,
-rolling sliding-window buffers) transparently fall back to exact-length
-prefill and the dense layout, so every architecture keeps working.
-
-Host-side state is just the slot table plus the page free-list; all
-device work happens in the per-bucket prefill programs and one
-decode-scan program.
+See README "Serving API" for the full migration table.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.core import precision as precision_lib
-from repro.models import lm
-from repro.serve import kv_cache
-from repro.serve.sampling import sample
+from repro.serve.api import Engine
+from repro.serve.scheduler import Request  # noqa: F401  (re-export)
 
 PyTree = Any
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: list[int]
-    max_new_tokens: int = 16
-    eos_id: int | None = None
-    generated: list[int] = dataclasses.field(default_factory=list)
-    submitted_at: float = 0.0
-    admitted_at: float = 0.0
-    #: times this request was preempted (pages freed, re-queued to resume
-    #: from prompt + generated-so-far); telemetry for the scheduler tests
-    preemptions: int = 0
-
-    @property
-    def done(self) -> bool:
-        if self.eos_id is not None and self.generated and self.generated[-1] == self.eos_id:
-            return True
-        return len(self.generated) >= self.max_new_tokens
-
-    @property
-    def resume_tokens(self) -> list[int]:
-        """Effective prompt at (re-)admission: the original prompt plus
-        everything generated before any preemption."""
-        return self.prompt + self.generated
-
-    @property
-    def queue_wait_s(self) -> float:
-        return max(0.0, self.admitted_at - self.submitted_at)
-
-
-@dataclasses.dataclass
-class _Slot:
-    active: bool = False
-    request: Request | None = None
-    pos: int = 0  # next position to write (== current length)
-    last_token: int = 0
-    #: prompt-tail tokens still to be teacher-forced through the decode
-    #: scan (prefill-skip admissions); drained decode_steps at a time
-    pending: list[int] = dataclasses.field(default_factory=list)
-    #: admission order stamp — preemption picks the youngest resident
-    admit_seq: int = -1
-    #: generated-token count at (re-)admission: a slot is only
-    #: preemptable once it has emitted at least one token this
-    #: residency, so every preemption cycle nets forward progress (a
-    #: skip-resumed slot replaying its forced tail would otherwise be
-    #: preempted before ever sampling — a livelock)
-    admit_gen: int = 0
-
-
 class ServingEngine:
+    """Deprecated: use :class:`repro.serve.Engine` (``generate`` /
+    ``stream``) instead.  Delegates everything to a wrapped Engine —
+    same scheduler, same executor, same compiled programs, token
+    streams bit-identical."""
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -137,579 +43,132 @@ class ServingEngine:
         kernel: dict | None = None,
         seed: int = 0,
     ):
-        self.serve_cfg = serve_cfg or ServeConfig()
-        if self.serve_cfg.decode_steps < 1:
-            raise ValueError(
-                f"decode_steps must be >= 1, got {self.serve_cfg.decode_steps}"
-            )
-        if self.serve_cfg.max_prefill_per_step < 0:
-            raise ValueError(
-                "max_prefill_per_step must be >= 0 (0 = fill all free slots)"
-            )
-        self.kernel = kernel or {}
-        self.key = jax.random.PRNGKey(seed)
-
-        # Precision: one declarative policy governs weights (offline PTQ /
-        # int8 quantize-dequantize; the true int8 GEMM path is
-        # kernels/qmatmul on TPU), the KV-cache dtype, the softmax kernel
-        # mode, and any runtime fake-quant the model applies in-graph.
-        # ServeConfig.policy wins; otherwise the model's own policy applies.
-        if self.serve_cfg.policy is not None:
-            policy = precision_lib.get_policy(self.serve_cfg.policy)
-            cfg = dataclasses.replace(cfg, precision=policy)
-        else:
-            policy = precision_lib.model_policy(cfg)
-        self.cfg = cfg
-        self.policy = policy
-        self.plan = policy.resolve(cfg.n_layers)
-        self.kernel = self.plan.kernel_defaults(self.kernel) or {}
-        self.params = precision_lib.apply_plan_to_params(params, self.plan)
-
-        if self.plan.int8_kv_cache and self.plan.kv_cache.bits != 8:
-            raise NotImplementedError(
-                "the KV cache implements 8-bit per-token quantization only; "
-                f"policy {self.policy.name!r} asks for "
-                f"{self.plan.kv_cache.bits}-bit"
-            )
-        sc = self.serve_cfg
-        self.quant_cache = bool(
-            self.plan.int8_kv_cache
-            and cfg.attn_kind in ("gqa", "mla")
-            and cfg.family not in ("ssm", "hybrid")
+        warnings.warn(
+            "ServingEngine is deprecated and will be removed next release; "
+            "use repro.serve.Engine (Engine.generate replaces run, "
+            "Engine.stream adds token streaming)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        # All layout knowledge (dense slabs vs block-table pages, specs,
-        # insertion, allocation) lives in the manager.
-        self.cache_mgr = kv_cache.CacheManager(
-            cfg, sc, quantized=self.quant_cache, dtype=jnp.float32
-        )
-        self.kv_layout = self.cache_mgr.layout
-        self.caches = self.cache_mgr.init_device_caches()
-        self.slots = [_Slot() for _ in range(sc.max_batch)]
-        self._queue: list[Request] = []
-        self._finished: dict[int, Request] = {}
-        self._uid = 0
-        self._admit_seq = 0
+        self._engine = Engine(cfg, params, serve_cfg, kernel=kernel, seed=seed)
 
-        # Bit-exact datapath predicate: is a decode-path forward bitwise
-        # identical to the prefill-path forward for the same token at the
-        # same position?  True for float GQA with the exact softmax on the
-        # jnp reference path — prefill's attention_ref and decode's
-        # gather-view attend are then the same f32 math.  False for MLA
-        # (~1 ulp: different einsum orders when re-materializing K/V from
-        # the latent), int8 KV (prefill attends float K/V, decode attends
-        # dequantized codes), and LUT softmax (decode uses exact softmax).
-        # Prefill-skip (tail-via-forced-decode) and preemption-resume
-        # (re-prefill of previously-decoded positions) are only enabled
-        # where this holds, so token streams stay bit-identical to dense.
-        self._bit_exact_resume = (
-            self.kv_layout == "paged"
-            and cfg.attn_kind == "gqa"
-            and not self.quant_cache
-            and self.kernel.get("softmax_mode", "safe") == "safe"
-            and not self.kernel.get("use_pallas", False)
-        )
-        #: prefix hits skip the prefill dispatch (vs storage-only sharing)
-        self._prefix_skip = (
-            self.cache_mgr.prefix_cache and self._bit_exact_resume
-        )
-        #: page-aware preemption instead of FIFO head-of-line blocking
-        self._preempt_enabled = (
-            self.kv_layout == "paged"
-            and sc.kv_preemption
-            and self._bit_exact_resume
-        )
-
-        # right-padding the prompt is only sound when the cache is
-        # position-addressed and decode masks by position: true for dense
-        # GQA / MLA caches, false for SSM/hybrid state and for rolling
-        # sliding-window buffers (padding would evict real tokens).
-        self._bucketable = self.cache_mgr.position_addressed
-        # a bucket longer than the cache could not be inserted; drop those
-        self._buckets = (
-            tuple(b for b in sc.resolved_buckets() if b <= sc.max_seq_len)
-            if self._bucketable
-            else ()
-        )
-
-        self._decode_fn = jax.jit(self._decode_scan)
-        self._prefill_fn: dict[int, Any] = {}  # jit cache per bucket length
-        self.telemetry = {
-            "tokens_generated": 0,
-            "prompts_admitted": 0,
-            "prefill_compiles": 0,
-            "prefill_dispatches": 0,
-            "decode_compiles": 0,
-            "queue_wait_s_total": 0.0,
-            "prefill_time_s": 0.0,
-            "decode_time_s": 0.0,
-            "steps": 0,
-            # prompt tokens never recomputed thanks to a prefix hit
-            # (prefill-skip admissions only — real FLOPs saved)
-            "prefill_tokens_saved": 0,
-            # prompt tokens whose pages were deduped by a prefix hit on
-            # the storage-only path (recomputed, but no pages written)
-            "prefix_tokens_shared": 0,
-            "preemptions": 0,
-            **self.cache_mgr.stats().as_dict(),
-        }
-
-    # ------------------------------------------------------------- utils --
-    @property
-    def prefill_buckets(self) -> tuple[int, ...]:
-        """Active buckets; empty for exact-length (v1-style) prefill."""
-        return self._buckets
-
-    def bucket_for(self, n: int) -> int:
-        """Padded prefill length for an n-token prompt: the smallest bucket
-        >= n, or n itself for unbucketable families / oversized prompts."""
-        for b in self._buckets:
-            if b >= n:
-                return b
-        return n
-
-    def kv_stats(self) -> dict:
-        """Current KV-cache occupancy (layout, bytes, page utilization)."""
-        return self.cache_mgr.stats().as_dict()
-
-    def _reserve_len(self, req: Request) -> int:
-        """Worst-case sequence length for a request: decode writes reach at
-        most position prompt + max_new_tokens - 1 (capped by max_seq_len)."""
-        return min(
-            len(req.prompt) + req.max_new_tokens, self.serve_cfg.max_seq_len
-        )
-
-    # ----------------------------------------------------------- requests --
+    # ------------------------------------------------------- old surface --
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                eos_id: int | None = None) -> int:
-        if not prompt:
-            raise ValueError("empty prompt")
-        if len(prompt) >= self.serve_cfg.max_seq_len:
-            raise ValueError(
-                f"prompt length {len(prompt)} >= max_seq_len "
-                f"{self.serve_cfg.max_seq_len}"
-            )
-        req = Request(self._uid + 1, list(prompt), max_new_tokens, eos_id,
-                      submitted_at=time.perf_counter())
-        need = self.cache_mgr.pages_for(self._reserve_len(req))
-        if need > self.cache_mgr.pages_capacity:
-            raise ValueError(
-                f"request needs {need} KV pages (prompt {len(prompt)} + "
-                f"up to {max_new_tokens} new tokens) but the pool only "
-                f"holds {self.cache_mgr.pages_capacity}; raise "
-                "ServeConfig.kv_pages or lower max_new_tokens"
-            )
-        self._uid += 1
-        self._queue.append(req)
-        return self._uid
+        return self._engine.submit(
+            prompt, max_new_tokens=max_new_tokens, eos_id=eos_id
+        ).uid
+
+    def run(self, max_steps: int = 10_000) -> dict[int, Request]:
+        return self._engine.generate(max_steps=max_steps)
+
+    def step(self) -> dict:
+        return self._engine.step()
 
     def result(self, uid: int) -> Request | None:
-        return self._finished.get(uid)
+        return self._engine.result(uid)
 
     @property
     def has_work(self) -> bool:
-        return bool(self._queue) or any(s.active for s in self.slots)
+        return self._engine.has_work
 
-    # ------------------------------------------------------------ device --
-    def _prefill_batch(self, params, tokens, lengths, caches, slots,
-                       shared=None):
-        """Prefill up to ``max_batch`` same-bucket prompts in ONE dispatch.
+    def kv_stats(self) -> dict:
+        return self._engine.kv_stats()
 
-        ``tokens``: (max_batch, bucket) int32, right-padded per row.
-        ``lengths``: (max_batch,) true prompt lengths (0 for pad rows).
-        ``slots``: (max_batch,) destination slot per row; the value
-        ``max_batch`` marks a pad row (dropped by the dense scatter,
-        routed to the trash page by the paged scatter).
-        ``shared``: (max_batch,) leading prefix-cache pages per row whose
-        recomputed values must not touch shared storage (their insert
-        columns scatter to the trash page; 0 everywhere when the prefix
-        cache is off).
-        All four are traced, so every same-bucket wave reuses one
-        compiled program.  Returns (per-row last-token logits (N, V),
-        updated caches).
-        """
-        cfg = self.cfg
-        nb, bucket = tokens.shape
-        mask = jnp.arange(bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
-        tokens = jnp.where(mask, tokens, 0)  # canonical pad id
-        # the model writes its natural contiguous (dense) scratch cache;
-        # insert_prefill is the only layout-specific step.  Paged: the
-        # scratch only needs to cover the bucket (rounded up to whole
-        # pages), so the transient footprint scales with the bucket, not
-        # with max_batch x max_seq_len.  Dense keeps the full-length
-        # scratch: its insert scatters whole slot slabs (bit-identical
-        # historical behavior, zeroed tail included).
-        if self.kv_layout == "paged":
-            ps = self.cache_mgr.page_size
-            scratch_len = -(-bucket // ps) * ps
-        else:
-            scratch_len = self.serve_cfg.max_seq_len
-        small = kv_cache.init_caches(
-            cfg, nb, scratch_len,
-            dtype=jnp.float32, quantized=self.quant_cache,
-        )
-        logits, filled, _ = lm.forward(
-            params, cfg, {"tokens": tokens}, mode="prefill",
-            caches=small, kernel=self.kernel,
-        )
-        # causal attention keeps positions < length independent of the pad
-        # tail; each row's true logits live at index length-1
-        idx = jnp.maximum(lengths - 1, 0)[:, None, None]
-        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
-        filled = kv_cache.mask_cache_tail(filled, lengths)
-        new_caches = self.cache_mgr.insert_prefill(
-            caches, filled, slots, shared
-        )
-        return last, new_caches
+    def bucket_for(self, n: int) -> int:
+        return self._engine.scheduler.bucket_for(n)
 
-    def _decode_scan(self, params, tokens, positions, active, rem, eos,
-                     forced, n_forced, caches, key):
-        """Run ``decode_steps`` fused decode steps under one dispatch.
+    @property
+    def prefill_buckets(self) -> tuple[int, ...]:
+        """Active buckets; empty for exact-length (v1-style) prefill."""
+        return self._engine.executor.buckets
 
-        All arrays are per-slot (B,): ``tokens`` last sampled token,
-        ``positions`` next write position, ``active`` live mask, ``rem``
-        generation budget left, ``eos`` per-request eos id (-1 = none).
-        Inactive slots freeze (token, position); re-running a frozen
-        position is idempotent for position-addressed caches (dense slabs
-        and pages alike — retired paged slots write the trash page) and
-        harmless for retired SSM slots (their state is overwritten on
-        re-prefill).
+    @property
+    def telemetry(self) -> dict:
+        return self._engine.telemetry
 
-        ``forced``: (decode_steps, B) teacher-forced next tokens,
-        ``n_forced``: (B,) how many leading steps of this dispatch force
-        each slot (prefix-cache prefill-skip: the unshared prompt tail
-        rides the decode program).  A forced step writes its prompt
-        token's KV, overrides the sampled next token, emits nothing, and
-        leaves the generation budget and eos/budget deactivation alone —
-        so the first *sampled* token after the tail sees logits bitwise
-        equal to the prefill path's last-position logits.  All zeros when
-        nothing is forced, which reduces to the historical behavior.
-        Returns (per-step next tokens, per-step emit mask, final carry
-        token, final positions, final active mask, caches).
-        """
-        sc = self.serve_cfg
-        keys = jax.random.split(key, sc.decode_steps)
-        flags = (
-            jnp.arange(sc.decode_steps, dtype=jnp.int32)[:, None]
-            < n_forced[None, :]
-        )  # (T, B)
+    # ------------------------------------------------ legacy attributes --
+    # The monolith exposed its internals; tests and tooling built on them
+    # keep working against the split layers for the deprecation window.
+    @property
+    def cfg(self):
+        return self._engine.executor.cfg
 
-        def body(carry, xs):
-            k, forced_t, flag_t = xs
-            tok, pos, act, budget, c = carry
-            logits, new_c, _ = lm.forward(
-                params, self.cfg, {"tokens": tok[:, None]}, mode="decode",
-                caches=c, positions=pos, kernel=self.kernel,
-            )
-            sampled = sample(logits[:, -1], k, temperature=sc.temperature)
-            nxt = jnp.where(act, jnp.where(flag_t, forced_t, sampled), tok)
-            emit = act & ~flag_t
-            emitted = (nxt, emit)
-            budget = jnp.where(emit, budget - 1, budget)
-            new_pos = jnp.where(act, pos + 1, pos)
-            new_act = (
-                act
-                & (flag_t | ((nxt != eos) & (budget > 0)))
-                & (new_pos + 1 < sc.max_seq_len)
-            )
-            return (nxt, new_pos, new_act, budget, new_c), emitted
+    @property
+    def serve_cfg(self):
+        return self._engine.serve_cfg
 
-        init = (tokens, positions, active, rem, caches)
-        (tok, pos, act, rem, caches), (toks_t, emit_t) = jax.lax.scan(
-            body, init, (keys, forced, flags)
-        )
-        return toks_t, emit_t, tok, pos, act, caches
+    @property
+    def params(self):
+        return self._engine.executor.params
 
-    # -------------------------------------------------------------- step --
-    def _try_preempt(self, free: list[int]) -> bool:
-        """Preempt the youngest resident slot to unblock the queue head:
-        free its pages (shared prefix pages survive via refcounts), stamp
-        the preemption, and re-queue it right behind the head with
-        prompt + generated-so-far as a resumable prompt.  Returns False
-        when preemption is off or nothing is preemptable.
+    @property
+    def policy(self):
+        return self._engine.executor.policy
 
-        A slot whose resume prompt no longer fits the largest configured
-        prefill bucket is not preemptable: re-prefilling it would mint an
-        exact-length jit program and silently blow the
-        len(prefill_buckets) + 1 program budget.  Neither is a slot that
-        has not emitted a token since its (re-)admission: preempting it
-        would discard a residency that made no progress, and a
-        skip-resumed slot still replaying its teacher-forced tail could
-        be preempted every step forever (livelock)."""
-        if not self._preempt_enabled:
-            return False
-        max_bucket = max(self._buckets) if self._buckets else None
-        victims = [
-            i for i, s in enumerate(self.slots)
-            if s.active
-            and len(s.request.generated) > s.admit_gen
-            and (
-                max_bucket is None
-                or len(s.request.resume_tokens) <= max_bucket
-            )
-        ]
-        if not victims:
-            return False
-        idx = max(victims, key=lambda i: self.slots[i].admit_seq)
-        req = self.slots[idx].request
-        req.preemptions += 1
-        # the wait clock restarts at requeue: the next admission's queue
-        # wait measures time spent waiting to resume, not time since the
-        # original submission (which would double-count the residency)
-        req.submitted_at = time.perf_counter()
-        self.telemetry["preemptions"] += 1
-        self.cache_mgr.free(idx)
-        self.slots[idx] = _Slot()
-        free.append(idx)
-        self._queue.insert(1, req)
-        return True
+    @property
+    def plan(self):
+        return self._engine.executor.plan
 
-    def step(self) -> dict:
-        """One engine iteration: admit waiting prompts (grouped by bucket,
-        one dispatch per same-bucket group; prefix-hit prompts on the
-        bit-exact datapath skip prefill entirely), then scan-decode."""
-        tel = self.telemetry
-        tel["steps"] += 1
-        stats = {"prefilled": 0, "decoded": 0}
-        sc = self.serve_cfg
-        # 1. admission: fill free slots with queued prompts.  FIFO order;
-        # when the queue head cannot get pages, either preempt the
-        # youngest resident (kv_preemption on the bit-exact datapath) or
-        # block the head until finished slots return pages (no
-        # reordering, no starvation either way).
-        cap = sc.max_prefill_per_step or sc.max_batch
-        free = [i for i, s in enumerate(self.slots) if not s.active]
-        admitted: list[tuple[int, Request, list[int], int]] = []
-        n_admitted = 0
-        while self._queue and free and n_admitted < cap:
-            head = self._queue[0]
-            seq = head.resume_tokens
-            # reserve worst-case pages (prompt + generation budget) so
-            # decode growth can never exhaust the pool mid-run; pages
-            # still allocate lazily as the sequence actually grows.  A
-            # prefix hit reserves only the unshared tail (+1 CoW page
-            # when the first write lands inside a shared page).
-            reserve_len = self._reserve_len(head)
-            match = self.cache_mgr.match_prefix(seq)
-            skip = bool(match) and self._prefix_skip and len(seq) > 1
-            write_from = min(match.tokens, len(seq) - 1) if skip else len(seq)
-            need = self.cache_mgr.admission_need(match, reserve_len, write_from)
-            if not self.cache_mgr.can_reserve(need):
-                if self._try_preempt(free):
-                    continue  # pages (and a slot) came back; retry head
-                break
-            req = self._queue.pop(0)
-            # queue wait ends at pop: prefill execution/compile time that
-            # follows is prefill_time_s, not waiting.  A preemption-resume
-            # adds its re-wait to the total but the prompt counts once.
-            if req.admitted_at == 0.0:
-                tel["prompts_admitted"] += 1
-            req.admitted_at = time.perf_counter()
-            tel["queue_wait_s_total"] += req.queue_wait_s
-            n_admitted += 1
-            idx = free.pop(0)
-            self._admit_seq += 1
-            self.slots[idx].admit_seq = self._admit_seq
-            self.slots[idx].admit_gen = len(req.generated)
-            shared = self.cache_mgr.admit(
-                idx, seq, reserve_len,
-                match=match, lazy_tail=skip, write_from=write_from,
-            )
-            if skip:
-                # the shared pages hold every position < write_from; the
-                # remaining tail rides the decode scan teacher-forced —
-                # no prefill dispatch at all for this admission
-                slot = self.slots[idx]
-                slot.active, slot.request = True, req
-                slot.pos = write_from
-                slot.last_token = seq[write_from]
-                slot.pending = list(seq[write_from + 1:])
-                tel["prefill_tokens_saved"] += write_from
-                stats["prefilled"] += 1
-            else:
-                tel["prefix_tokens_shared"] += match.tokens if match else 0
-                admitted.append((idx, req, seq, shared))
-        groups: dict[int, list[tuple[int, Request, list[int], int]]] = {}
-        for idx, req, seq, shared in admitted:
-            groups.setdefault(self.bucket_for(len(seq)), []).append(
-                (idx, req, seq, shared)
-            )
-        for bucket in sorted(groups):
-            self._dispatch_prefill(bucket, groups[bucket], stats)
+    @property
+    def kernel(self):
+        return self._engine.executor.kernel
 
-        # 2. scan decode for all active slots
-        if any(s.active for s in self.slots):
-            nb = sc.max_batch
-            forced = np.zeros((sc.decode_steps, nb), np.int32)
-            n_forced = np.zeros((nb,), np.int32)
-            for idx, slot in enumerate(self.slots):
-                if slot.active:
-                    nf = min(len(slot.pending), sc.decode_steps)
-                    if nf:
-                        forced[:nf, idx] = slot.pending[:nf]
-                        n_forced[idx] = nf
-                    # the scan advances at most min(decode_steps, forced
-                    # tail + remaining budget) positions, so this never
-                    # outgrows the pages reserved at admission; passing
-                    # the write range lets the manager copy-on-write any
-                    # shared page before the dispatch scatters into it
-                    rem_i = max(
-                        slot.request.max_new_tokens
-                        - len(slot.request.generated),
-                        1,
-                    )
-                    self.cache_mgr.ensure(
-                        idx,
-                        min(slot.pos + min(sc.decode_steps, nf + rem_i),
-                            sc.max_seq_len),
-                        write_from=slot.pos,
-                    )
-            self.caches = self.cache_mgr.flush_copies(self.caches)
-            self.caches = self.cache_mgr.write_table(self.caches)
-            tokens = np.asarray([s.last_token for s in self.slots], np.int32)
-            positions = np.asarray(
-                [s.pos if s.active else 0 for s in self.slots], np.int32
-            )
-            active = np.asarray([s.active for s in self.slots], bool)
-            rem = np.asarray(
-                [
-                    max(s.request.max_new_tokens - len(s.request.generated), 0)
-                    if s.active
-                    else 0
-                    for s in self.slots
-                ],
-                np.int32,
-            )
-            eos = np.asarray(
-                [
-                    s.request.eos_id
-                    if s.active and s.request.eos_id is not None
-                    else -1
-                    for s in self.slots
-                ],
-                np.int32,
-            )
-            self.key, sub = jax.random.split(self.key)
-            if tel["decode_compiles"] == 0:
-                tel["decode_compiles"] = 1  # one program, fixed shapes
-            t0 = time.perf_counter()
-            toks_t, emit_t, tok_f, pos_f, act_f, self.caches = self._decode_fn(
-                self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                jnp.asarray(active), jnp.asarray(rem), jnp.asarray(eos),
-                jnp.asarray(forced), jnp.asarray(n_forced),
-                self.caches, sub,
-            )
-            toks_t, emit_t = np.asarray(toks_t), np.asarray(emit_t)
-            tok_f = np.asarray(tok_f)
-            pos_f, act_f = np.asarray(pos_f), np.asarray(act_f)
-            tel["decode_time_s"] += time.perf_counter() - t0
-            for idx, slot in enumerate(self.slots):
-                if not slot.active:
-                    continue
-                if slot.pending:
-                    del slot.pending[:int(n_forced[idx])]
-                for t in range(toks_t.shape[0]):
-                    if not emit_t[t, idx]:
-                        continue
-                    slot.request.generated.append(int(toks_t[t, idx]))
-                    stats["decoded"] += 1
-                    tel["tokens_generated"] += 1
-                slot.pos = int(pos_f[idx])
-                slot.last_token = int(tok_f[idx])
-                if self._prefix_skip:
-                    # decode-completed full pages become shareable too:
-                    # their content is bit-exact with a prefill of the
-                    # same tokens on this datapath
-                    self.cache_mgr.register_filled(
-                        idx, slot.request.resume_tokens, slot.pos
-                    )
-                if not act_f[idx]:
-                    self._finished[slot.request.uid] = slot.request
-                    self.slots[idx] = _Slot()
-                    self.cache_mgr.free(idx)
-                else:
-                    self._retire(idx)
-        tel.update(self.cache_mgr.stats().as_dict())
-        stats.update(
-            prefill_compiles=tel["prefill_compiles"],
-            decode_compiles=tel["decode_compiles"],
-        )
-        return stats
+    @property
+    def quant_cache(self):
+        return self._engine.executor.quant_cache
 
-    def _dispatch_prefill(
-        self,
-        bucket: int,
-        group: list[tuple[int, Request, list[int], int]],
-        stats: dict,
-    ):
-        """One fixed-shape prefill dispatch filling every slot in ``group``
-        (all prompts share ``bucket``); pad rows carry the slot sentinel
-        ``max_batch`` so their writes are dropped.  Each row's ``seq`` is
-        its effective prompt (original prompt + generated-so-far for a
-        preempted request being resumed) and ``shared`` its count of
-        prefix-cache pages the insert must not overwrite."""
-        sc, tel = self.serve_cfg, self.telemetry
-        nb = sc.max_batch
-        toks = np.zeros((nb, bucket), np.int32)
-        lengths = np.zeros((nb,), np.int32)
-        slots_arr = np.full((nb,), nb, np.int32)
-        shared_arr = np.zeros((nb,), np.int32)
-        for row, (idx, req, seq, shared) in enumerate(group):
-            n = len(seq)
-            toks[row, :n] = seq
-            lengths[row] = n
-            slots_arr[row] = idx
-            shared_arr[row] = shared
-        self.caches = self.cache_mgr.write_table(self.caches)
-        fn = self._prefill_fn.get(bucket)
-        if fn is None:
-            fn = jax.jit(self._prefill_batch)
-            self._prefill_fn[bucket] = fn
-            tel["prefill_compiles"] += 1
-        t0 = time.perf_counter()
-        last, self.caches = fn(
-            self.params, jnp.asarray(toks), jnp.asarray(lengths),
-            self.caches, jnp.asarray(slots_arr), jnp.asarray(shared_arr),
-        )
-        tel["prefill_dispatches"] += 1
-        # one vectorized sample + one device->host transfer for the group
-        self.key, sub = jax.random.split(self.key)
-        first_tokens = np.asarray(
-            sample(last[:len(group)], sub, temperature=sc.temperature)
-        )
-        for row, (idx, req, seq, _) in enumerate(group):
-            nxt = int(first_tokens[row])
-            req.generated.append(nxt)
-            tel["tokens_generated"] += 1
-            slot = self.slots[idx]
-            slot.active, slot.request = True, req
-            slot.pos = len(seq)  # next write position
-            slot.last_token = nxt
-            stats["prefilled"] += 1
-            self._retire(idx)
-        tel["prefill_time_s"] += time.perf_counter() - t0
+    @property
+    def cache_mgr(self):
+        return self._engine.executor.cache_mgr
 
-    def _retire(self, idx: int):
-        slot = self.slots[idx]
-        if slot.active and (
-            slot.request.done or slot.pos + 1 >= self.serve_cfg.max_seq_len
-        ):
-            self._finished[slot.request.uid] = slot.request
-            self.slots[idx] = _Slot()
-            self.cache_mgr.free(idx)
+    @property
+    def kv_layout(self):
+        return self._engine.executor.kv_layout
 
-    def run(self, max_steps: int = 10_000) -> dict[int, Request]:
-        t0 = time.perf_counter()
-        tokens0 = self.telemetry["tokens_generated"]
-        steps = 0
-        while self.has_work and steps < max_steps:
-            self.step()
-            steps += 1
-        dt = time.perf_counter() - t0
-        tel = self.telemetry
-        tel["run_wall_s"] = dt
-        tel["tokens_per_s"] = (tel["tokens_generated"] - tokens0) / max(
-            dt, 1e-9
-        )
-        admitted = max(tel["prompts_admitted"], 1)
-        tel["queue_wait_s_mean"] = tel["queue_wait_s_total"] / admitted
-        return dict(self._finished)
+    @property
+    def caches(self):
+        return self._engine.executor.caches
+
+    @property
+    def slots(self):
+        return self._engine.executor.slots
+
+    @property
+    def key(self):
+        return self._engine.executor.key
+
+    @property
+    def _queue(self):
+        return self._engine.scheduler.queue
+
+    @property
+    def _finished(self):
+        return self._engine._finished
+
+    @property
+    def _prefill_fn(self):
+        return self._engine.executor._prefill_fn
+
+    @property
+    def _decode_fn(self):
+        return self._engine.executor._decode_fn
+
+    def _prefill_batch(self, *args, **kwargs):
+        return self._engine.executor._prefill_batch(*args, **kwargs)
+
+    @property
+    def _bucketable(self):
+        return self._engine.executor.bucketable
+
+    @property
+    def _bit_exact_resume(self):
+        return self._engine.executor.bit_exact
+
+    @property
+    def _prefix_skip(self):
+        return self._engine.scheduler.prefix_skip
+
+    @property
+    def _preempt_enabled(self):
+        return self._engine.scheduler.preempt_enabled

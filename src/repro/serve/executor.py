@@ -1,0 +1,508 @@
+"""Execution layer of the serving stack: *device work only, no policy*.
+
+:class:`ModelExecutor` owns everything that touches the accelerator —
+the precision plan applied to the params, the per-bucket prefill jit
+cache and the single decode-scan program, the
+:class:`~repro.serve.kv_cache.CacheManager` with its device cache
+pytree, and the slot table (execution state: write positions, carry
+tokens, pending teacher-forced tails).  It consumes an explicit
+:class:`~repro.serve.scheduler.ScheduleDecision` and mechanically
+applies it: reset preempted slots, activate admissions, run one
+fixed-shape prefill dispatch per bucket group, run the decode scan,
+retire finished slots.  Every *choice* (who is admitted where, who
+preempts, what chunks) was already made by the scheduler; the executor
+never inspects the queue and never makes a policy decision.
+
+The compiled-program discipline is unchanged from the monolithic
+engine: at most ``len(prefill_buckets)`` prefill programs (each at the
+fixed ``max_batch`` width) plus one decode program, test-enforced on
+the real jit caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.core import precision as precision_lib
+from repro.models import lm
+from repro.serve import kv_cache
+from repro.serve.sampling import sample
+from repro.serve.scheduler import (
+    MODE_SKIP,
+    Admission,
+    ExecutorCaps,
+    Request,
+    ScheduleDecision,
+    Slot,
+)
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class StepOutput:
+    """What one executed decision produced, for the API layer to route:
+    ``tokens`` are (uid, token, index-in-generated) in emission order,
+    ``finished``/``preempted`` the requests that left their slots."""
+
+    stats: dict
+    tokens: list[tuple[int, int, int]] = dataclasses.field(default_factory=list)
+    finished: list[Request] = dataclasses.field(default_factory=list)
+    preempted: list[Request] = dataclasses.field(default_factory=list)
+
+
+class ModelExecutor:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: PyTree,
+        serve_cfg: ServeConfig | None = None,
+        kernel: dict | None = None,
+        seed: int = 0,
+    ):
+        self.serve_cfg = serve_cfg or ServeConfig()
+        if self.serve_cfg.decode_steps < 1:
+            raise ValueError(
+                f"decode_steps must be >= 1, got {self.serve_cfg.decode_steps}"
+            )
+        if self.serve_cfg.max_prefill_per_step < 0:
+            raise ValueError(
+                "max_prefill_per_step must be >= 0 (0 = fill all free slots)"
+            )
+        self.kernel = kernel or {}
+        self.key = jax.random.PRNGKey(seed)
+
+        # Precision: one declarative policy governs weights (offline PTQ /
+        # int8 quantize-dequantize; the true int8 GEMM path is
+        # kernels/qmatmul on TPU), the KV-cache dtype, the softmax kernel
+        # mode, and any runtime fake-quant the model applies in-graph.
+        # ServeConfig.policy wins; otherwise the model's own policy applies.
+        if self.serve_cfg.policy is not None:
+            policy = precision_lib.get_policy(self.serve_cfg.policy)
+            cfg = dataclasses.replace(cfg, precision=policy)
+        else:
+            policy = precision_lib.model_policy(cfg)
+        self.cfg = cfg
+        self.policy = policy
+        self.plan = policy.resolve(cfg.n_layers)
+        self.kernel = self.plan.kernel_defaults(self.kernel) or {}
+        self.params = precision_lib.apply_plan_to_params(params, self.plan)
+
+        if self.plan.int8_kv_cache and self.plan.kv_cache.bits != 8:
+            raise NotImplementedError(
+                "the KV cache implements 8-bit per-token quantization only; "
+                f"policy {self.policy.name!r} asks for "
+                f"{self.plan.kv_cache.bits}-bit"
+            )
+        sc = self.serve_cfg
+        self.quant_cache = bool(
+            self.plan.int8_kv_cache
+            and cfg.attn_kind in ("gqa", "mla")
+            and cfg.family not in ("ssm", "hybrid")
+        )
+        # All layout knowledge (dense slabs vs block-table pages, specs,
+        # insertion, allocation) lives in the manager.
+        self.cache_mgr = kv_cache.CacheManager(
+            cfg, sc, quantized=self.quant_cache, dtype=jnp.float32
+        )
+        self.kv_layout = self.cache_mgr.layout
+        self.caches = self.cache_mgr.init_device_caches()
+        self.slots = [Slot() for _ in range(sc.max_batch)]
+
+        # Bit-exact datapath predicate: is a decode-path forward bitwise
+        # identical to the prefill-path forward for the same token at the
+        # same position?  True for float GQA with the exact softmax on the
+        # jnp reference path — prefill's attention_ref and decode's
+        # gather-view attend are then the same f32 math.  False for MLA
+        # (~1 ulp: different einsum orders when re-materializing K/V from
+        # the latent), int8 KV (prefill attends float K/V, decode attends
+        # dequantized codes), and LUT softmax (decode uses exact softmax).
+        # The scheduler gates prefill-skip, preemption-resume, and chunked
+        # prefill on this capability so token streams stay bit-identical
+        # to dense.
+        self.bit_exact = (
+            cfg.attn_kind == "gqa"
+            and not self.quant_cache
+            and self.kernel.get("softmax_mode", "safe") == "safe"
+            and not self.kernel.get("use_pallas", False)
+        )
+
+        # right-padding the prompt is only sound when the cache is
+        # position-addressed and decode masks by position: true for dense
+        # GQA / MLA caches, false for SSM/hybrid state and for rolling
+        # sliding-window buffers (padding would evict real tokens).
+        self.bucketable = self.cache_mgr.position_addressed
+        # a bucket longer than the cache could not be inserted; drop those
+        self.buckets = (
+            tuple(b for b in sc.resolved_buckets() if b <= sc.max_seq_len)
+            if self.bucketable
+            else ()
+        )
+
+        self._decode_fn = jax.jit(self._decode_scan)
+        self._prefill_fn: dict[int, Any] = {}  # jit cache per bucket length
+        self.tel = {
+            "tokens_generated": 0,
+            "prefill_compiles": 0,
+            "prefill_dispatches": 0,
+            "decode_compiles": 0,
+            "prefill_time_s": 0.0,
+            "decode_time_s": 0.0,
+            "steps": 0,
+        }
+
+    # ------------------------------------------------------------- view --
+    @property
+    def caps(self) -> ExecutorCaps:
+        """Capabilities schedulers plan against (policy never inspects
+        device state directly)."""
+        return ExecutorCaps(
+            max_batch=self.serve_cfg.max_batch,
+            max_seq_len=self.serve_cfg.max_seq_len,
+            decode_steps=self.serve_cfg.decode_steps,
+            buckets=self.buckets,
+            bucketable=self.bucketable,
+            paged=self.kv_layout == "paged",
+            bit_exact=self.bit_exact,
+            prefix_cache=self.cache_mgr.prefix_cache,
+        )
+
+    def kv_stats(self) -> dict:
+        """Current KV-cache occupancy (layout, bytes, page utilization)."""
+        return self.cache_mgr.stats().as_dict()
+
+    # ------------------------------------------------------------ device --
+    def _prefill_batch(self, params, tokens, lengths, caches, slots,
+                       shared=None):
+        """Prefill up to ``max_batch`` same-bucket prompts in ONE dispatch.
+
+        ``tokens``: (max_batch, bucket) int32, right-padded per row.
+        ``lengths``: (max_batch,) true prompt lengths (0 for pad rows).
+        ``slots``: (max_batch,) destination slot per row; the value
+        ``max_batch`` marks a pad row (dropped by the dense scatter,
+        routed to the trash page by the paged scatter).
+        ``shared``: (max_batch,) leading prefix-cache pages per row whose
+        recomputed values must not touch shared storage (their insert
+        columns scatter to the trash page; 0 everywhere when the prefix
+        cache is off).
+        All four are traced, so every same-bucket wave reuses one
+        compiled program.  Returns (per-row last-token logits (N, V),
+        updated caches).
+        """
+        cfg = self.cfg
+        nb, bucket = tokens.shape
+        mask = jnp.arange(bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
+        tokens = jnp.where(mask, tokens, 0)  # canonical pad id
+        # the model writes its natural contiguous (dense) scratch cache;
+        # insert_prefill is the only layout-specific step.  Paged: the
+        # scratch only needs to cover the bucket (rounded up to whole
+        # pages), so the transient footprint scales with the bucket, not
+        # with max_batch x max_seq_len.  Dense keeps the full-length
+        # scratch: its insert scatters whole slot slabs (bit-identical
+        # historical behavior, zeroed tail included).
+        if self.kv_layout == "paged":
+            ps = self.cache_mgr.page_size
+            scratch_len = -(-bucket // ps) * ps
+        else:
+            scratch_len = self.serve_cfg.max_seq_len
+        small = kv_cache.init_caches(
+            cfg, nb, scratch_len,
+            dtype=jnp.float32, quantized=self.quant_cache,
+        )
+        logits, filled, _ = lm.forward(
+            params, cfg, {"tokens": tokens}, mode="prefill",
+            caches=small, kernel=self.kernel,
+        )
+        # causal attention keeps positions < length independent of the pad
+        # tail; each row's true logits live at index length-1
+        idx = jnp.maximum(lengths - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        filled = kv_cache.mask_cache_tail(filled, lengths)
+        new_caches = self.cache_mgr.insert_prefill(
+            caches, filled, slots, shared
+        )
+        return last, new_caches
+
+    def _decode_scan(self, params, tokens, positions, active, rem, eos,
+                     forced, n_forced, caches, key):
+        """Run ``decode_steps`` fused decode steps under one dispatch.
+
+        All arrays are per-slot (B,): ``tokens`` last sampled token,
+        ``positions`` next write position, ``active`` live mask, ``rem``
+        generation budget left, ``eos`` per-request eos id (-1 = none).
+        Inactive slots freeze (token, position); re-running a frozen
+        position is idempotent for position-addressed caches (dense slabs
+        and pages alike — retired paged slots write the trash page) and
+        harmless for retired SSM slots (their state is overwritten on
+        re-prefill).
+
+        ``forced``: (decode_steps, B) teacher-forced next tokens,
+        ``n_forced``: (B,) how many leading steps of this dispatch force
+        each slot (prefix-cache prefill-skip and chunked prefill: the
+        unprefilled prompt tail rides the decode program).  A forced step
+        writes its prompt token's KV, overrides the sampled next token,
+        emits nothing, and leaves the generation budget and eos/budget
+        deactivation alone — so the first *sampled* token after the tail
+        sees logits bitwise equal to the prefill path's last-position
+        logits.  All zeros when nothing is forced, which reduces to the
+        historical behavior.
+        Returns (per-step next tokens, per-step emit mask, final carry
+        token, final positions, final active mask, caches).
+        """
+        sc = self.serve_cfg
+        keys = jax.random.split(key, sc.decode_steps)
+        flags = (
+            jnp.arange(sc.decode_steps, dtype=jnp.int32)[:, None]
+            < n_forced[None, :]
+        )  # (T, B)
+
+        def body(carry, xs):
+            k, forced_t, flag_t = xs
+            tok, pos, act, budget, c = carry
+            logits, new_c, _ = lm.forward(
+                params, self.cfg, {"tokens": tok[:, None]}, mode="decode",
+                caches=c, positions=pos, kernel=self.kernel,
+            )
+            sampled = sample(logits[:, -1], k, temperature=sc.temperature)
+            nxt = jnp.where(act, jnp.where(flag_t, forced_t, sampled), tok)
+            emit = act & ~flag_t
+            emitted = (nxt, emit)
+            budget = jnp.where(emit, budget - 1, budget)
+            new_pos = jnp.where(act, pos + 1, pos)
+            new_act = (
+                act
+                & (flag_t | ((nxt != eos) & (budget > 0)))
+                & (new_pos + 1 < sc.max_seq_len)
+            )
+            return (nxt, new_pos, new_act, budget, new_c), emitted
+
+        init = (tokens, positions, active, rem, caches)
+        (tok, pos, act, rem, caches), (toks_t, emit_t) = jax.lax.scan(
+            body, init, (keys, forced, flags)
+        )
+        return toks_t, emit_t, tok, pos, act, caches
+
+    # ----------------------------------------------------------- execute --
+    def execute(self, decision: ScheduleDecision) -> StepOutput:
+        """Apply one :class:`ScheduleDecision`: reset preempted slots,
+        activate admissions (prefix-skip slots immediately, prefill /
+        chunked slots through their bucket dispatches), then scan-decode
+        the decision's decode slots.  The scheduler already performed the
+        host-side page bookkeeping; nothing here chooses anything."""
+        tel = self.tel
+        tel["steps"] += 1
+        out = StepOutput(stats={"prefilled": 0, "decoded": 0})
+        for idx, req in decision.preempted:
+            # pages were freed by the scheduler; drop the execution state
+            self.slots[idx] = Slot()
+            out.preempted.append(req)
+        for adm in decision.admissions:
+            slot = self.slots[adm.slot]
+            slot.admit_seq = adm.admit_seq
+            slot.admit_gen = adm.admit_gen
+            if adm.mode == MODE_SKIP:
+                # the shared pages hold every position < write_from; the
+                # remaining tail rides the decode scan teacher-forced —
+                # no prefill dispatch at all for this admission
+                slot.active, slot.request = True, adm.request
+                slot.pos = adm.write_from
+                slot.last_token = adm.tokens[adm.write_from]
+                slot.pending = list(adm.tokens[adm.write_from + 1:])
+                out.stats["prefilled"] += 1
+        for bucket, group in decision.prefill_groups.items():
+            self._dispatch_prefill(bucket, group, out)
+        self._run_decode(decision, out)
+        return out
+
+    def release(self, idx: int) -> None:
+        """Immediately free a resident slot's pages and execution state
+        (request cancellation); safe on inactive slots."""
+        self.cache_mgr.free(idx)
+        self.slots[idx] = Slot()
+
+    def _dispatch_prefill(
+        self, bucket: int, group: list[Admission], out: StepOutput
+    ):
+        """One fixed-shape prefill dispatch filling every slot in ``group``
+        (all rows share ``bucket``); pad rows carry the slot sentinel
+        ``max_batch`` so their writes are dropped.  Each row's dispatched
+        tokens are its effective prompt (original prompt + generated-so-far
+        for a preempted request being resumed) truncated to ``fill_len``
+        (the whole prompt for MODE_PREFILL, the first chunk for
+        MODE_CHUNKED) and ``shared_pages`` its count of prefix-cache pages
+        the insert must not overwrite.  Only MODE_PREFILL rows sample a
+        first token from the dispatch's last-position logits; a chunk's
+        logits predict a prompt token the request already has, so chunked
+        rows activate with their teacher-forced tail instead."""
+        sc, tel = self.serve_cfg, self.tel
+        nb = sc.max_batch
+        toks = np.zeros((nb, bucket), np.int32)
+        lengths = np.zeros((nb,), np.int32)
+        slots_arr = np.full((nb,), nb, np.int32)
+        shared_arr = np.zeros((nb,), np.int32)
+        for row, adm in enumerate(group):
+            n = adm.fill_len
+            toks[row, :n] = adm.tokens[:n]
+            lengths[row] = n
+            slots_arr[row] = adm.slot
+            shared_arr[row] = adm.shared_pages
+        self.caches = self.cache_mgr.write_table(self.caches)
+        fn = self._prefill_fn.get(bucket)
+        if fn is None:
+            fn = jax.jit(self._prefill_batch)
+            self._prefill_fn[bucket] = fn
+            tel["prefill_compiles"] += 1
+        t0 = time.perf_counter()
+        last, self.caches = fn(
+            self.params, jnp.asarray(toks), jnp.asarray(lengths),
+            self.caches, jnp.asarray(slots_arr), jnp.asarray(shared_arr),
+        )
+        tel["prefill_dispatches"] += 1
+        # one vectorized sample + one device->host transfer for the group
+        self.key, sub = jax.random.split(self.key)
+        first_tokens = np.asarray(
+            sample(last[:len(group)], sub, temperature=sc.temperature)
+        )
+        for row, adm in enumerate(group):
+            slot = self.slots[adm.slot]
+            slot.active, slot.request = True, adm.request
+            if adm.emits_first_token:
+                nxt = int(first_tokens[row])
+                adm.request.generated.append(nxt)
+                tel["tokens_generated"] += 1
+                out.tokens.append(
+                    (adm.request.uid, nxt, len(adm.request.generated) - 1)
+                )
+                slot.pos = len(adm.tokens)  # next write position
+                slot.last_token = nxt
+            else:  # MODE_CHUNKED: the tail teacher-forces through decode
+                slot.pos = adm.fill_len
+                slot.last_token = adm.tokens[adm.fill_len]
+                slot.pending = list(adm.tokens[adm.fill_len + 1:])
+            out.stats["prefilled"] += 1
+            self._retire(adm.slot, out)
+        tel["prefill_time_s"] += time.perf_counter() - t0
+
+    def _run_decode(self, decision: ScheduleDecision, out: StepOutput):
+        """Scan-decode the decision's decode slots (per-slot active masks;
+        slots outside the decision freeze for this dispatch)."""
+        sc, tel = self.serve_cfg, self.tel
+        decode_set = {
+            i for i in decision.decode_slots if self.slots[i].active
+        }
+        if not decode_set:
+            return
+        nb = sc.max_batch
+        forced = np.zeros((sc.decode_steps, nb), np.int32)
+        n_forced = np.zeros((nb,), np.int32)
+        for idx in sorted(decode_set):
+            slot = self.slots[idx]
+            nf = min(len(slot.pending), sc.decode_steps)
+            if nf:
+                forced[:nf, idx] = slot.pending[:nf]
+                n_forced[idx] = nf
+            # the scan advances at most min(decode_steps, forced
+            # tail + remaining budget) positions, so this never
+            # outgrows the pages reserved at admission; passing
+            # the write range lets the manager copy-on-write any
+            # shared page before the dispatch scatters into it
+            rem_i = max(
+                slot.request.max_new_tokens - len(slot.request.generated),
+                1,
+            )
+            self.cache_mgr.ensure(
+                idx,
+                min(slot.pos + min(sc.decode_steps, nf + rem_i),
+                    sc.max_seq_len),
+                write_from=slot.pos,
+            )
+        self.caches = self.cache_mgr.flush_copies(self.caches)
+        self.caches = self.cache_mgr.write_table(self.caches)
+        tokens = np.asarray([s.last_token for s in self.slots], np.int32)
+        positions = np.asarray(
+            [s.pos if s.active else 0 for s in self.slots], np.int32
+        )
+        active = np.asarray(
+            [s.active and i in decode_set for i, s in enumerate(self.slots)],
+            bool,
+        )
+        rem = np.asarray(
+            [
+                max(s.request.max_new_tokens - len(s.request.generated), 0)
+                if s.active and i in decode_set
+                else 0
+                for i, s in enumerate(self.slots)
+            ],
+            np.int32,
+        )
+        eos = np.asarray(
+            [
+                s.request.eos_id
+                if s.active and s.request.eos_id is not None
+                else -1
+                for s in self.slots
+            ],
+            np.int32,
+        )
+        self.key, sub = jax.random.split(self.key)
+        if tel["decode_compiles"] == 0:
+            tel["decode_compiles"] = 1  # one program, fixed shapes
+        t0 = time.perf_counter()
+        toks_t, emit_t, tok_f, pos_f, act_f, self.caches = self._decode_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(active), jnp.asarray(rem), jnp.asarray(eos),
+            jnp.asarray(forced), jnp.asarray(n_forced),
+            self.caches, sub,
+        )
+        toks_t, emit_t = np.asarray(toks_t), np.asarray(emit_t)
+        tok_f = np.asarray(tok_f)
+        pos_f, act_f = np.asarray(pos_f), np.asarray(act_f)
+        tel["decode_time_s"] += time.perf_counter() - t0
+        for idx in sorted(decode_set):
+            slot = self.slots[idx]
+            if slot.pending:
+                del slot.pending[:int(n_forced[idx])]
+            for t in range(toks_t.shape[0]):
+                if not emit_t[t, idx]:
+                    continue
+                slot.request.generated.append(int(toks_t[t, idx]))
+                out.stats["decoded"] += 1
+                tel["tokens_generated"] += 1
+                out.tokens.append((
+                    slot.request.uid, int(toks_t[t, idx]),
+                    len(slot.request.generated) - 1,
+                ))
+            slot.pos = int(pos_f[idx])
+            slot.last_token = int(tok_f[idx])
+            if decision.register_decoded:
+                # decode-completed full pages become shareable too:
+                # their content is bit-exact with a prefill of the
+                # same tokens on this datapath
+                self.cache_mgr.register_filled(
+                    idx, slot.request.resume_tokens, slot.pos
+                )
+            if not act_f[idx]:
+                out.finished.append(slot.request)
+                self.slots[idx] = Slot()
+                self.cache_mgr.free(idx)
+            else:
+                self._retire(idx, out)
+
+    def _retire(self, idx: int, out: StepOutput):
+        slot = self.slots[idx]
+        if slot.active and (
+            slot.request.done or slot.pos + 1 >= self.serve_cfg.max_seq_len
+        ):
+            out.finished.append(slot.request)
+            self._finish_slot(idx)
+
+    def _finish_slot(self, idx: int):
+        self.slots[idx] = Slot()
+        self.cache_mgr.free(idx)

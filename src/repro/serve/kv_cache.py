@@ -884,6 +884,7 @@ class CacheManager:
         match: PrefixMatch | None = None,
         lazy_tail: bool = False,
         write_from: int | None = None,
+        fill_len: int | None = None,
     ) -> int:
         """Admit a request: map any prefix-cache hit onto the slot's
         leading table entries (refcount++, reviving retained pages),
@@ -893,7 +894,10 @@ class CacheManager:
         the prompt's own pages.  ``lazy_tail=True`` skips the prompt-tail
         allocation (the engine's prefill-skip path fills the tail through
         decode writes, so :meth:`ensure` allocates it lazily like any
-        decode growth).  Returns the number of shared leading pages.
+        decode growth); ``fill_len`` (chunked prefill) allocates and
+        registers only the leading ``fill_len`` positions now — the
+        prefill dispatch writes exactly those — leaving the rest lazy.
+        Returns the number of shared leading pages.
 
         Reservation is a counter, not an allocation — but admission-time
         reservation guarantees decode growth (including at most one
@@ -929,6 +933,12 @@ class CacheManager:
         if not lazy_tail:
             self.ensure(slot, len(tokens))
             self.register_filled(slot, tokens, len(tokens))
+        elif fill_len:
+            # chunked prefill: the dispatch fills [0, fill_len); its full
+            # pages are registerable like any prefilled page (causal
+            # attention makes their content independent of the suffix)
+            self.ensure(slot, fill_len)
+            self.register_filled(slot, tokens, fill_len)
         self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
         return len(shared)
 

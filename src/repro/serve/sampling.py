@@ -2,8 +2,25 @@
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation knobs for :meth:`repro.serve.Engine.submit`.
+
+    Temperature / top-k stay engine-level (``ServeConfig.temperature``):
+    they are baked into the single compiled decode program, and a
+    per-request temperature would either mint extra programs or force a
+    traced greedy/sampled select — both against the bounded-program
+    discipline this stack inherits from the paper's fixed datapaths.
+    """
+
+    max_new_tokens: int = 16
+    eos_id: int | None = None
 
 
 def sample(

@@ -1,0 +1,423 @@
+"""Scheduling layer of the serving stack: *policy only, no device work*.
+
+The serving engine is split into three layers (see ``serve/api.py`` for
+the client-facing one):
+
+* **Scheduler** (this module) — decides, each engine step, which queued
+  prompts are admitted into which bucket/slots, which resident slots
+  decode, and which residents are preempted.  It owns the request queue
+  and performs the host-side page-pool bookkeeping for its decisions
+  (reservation, prefix-hit mapping, preemption frees) through the
+  :class:`~repro.serve.kv_cache.CacheManager` — all numpy/list state,
+  never a device dispatch.  This module must stay importable without
+  jax: it contains **no jax imports and no device dispatches**
+  (test-enforced), which is what makes scheduling policy auditable and
+  swappable without touching compiled programs.
+* **Executor** (``serve/executor.py``) — owns the jit caches, the
+  CacheManager and the device cache pytree, and mechanically applies a
+  :class:`ScheduleDecision` (prefill dispatches, the decode scan, slot
+  bookkeeping).  It makes no policy choices.
+* **Engine** (``serve/api.py``) — the client API (submit / stream /
+  cancel / generate) looping ``scheduler.schedule -> executor.execute``.
+
+The default :class:`FifoScheduler` reproduces the historical engine
+behavior exactly: FIFO admission grouped by prefill bucket,
+prefix-cache hit planning (prefill-skip on the bit-exact datapath,
+storage-only sharing elsewhere), youngest-first page-aware preemption —
+plus **chunked prefill**, the first policy the split unlocks
+(``ServeConfig.prefill_chunk``): a long prompt is admitted by
+prefilling only its first ``prefill_chunk`` tokens through the bucketed
+prefill program and teacher-forcing the remaining prompt tail through
+the decode scan, interleaved with resident decode steps.  Each step
+then stalls residents by at most a chunk-sized prefill instead of a
+full-prompt-sized one, and the compiled-program set stays at
+``len(prefill_buckets)`` prefill + 1 decode programs (test-enforced).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+if TYPE_CHECKING:  # import-time dependency kept out of the policy layer
+    from repro.configs.base import ServeConfig
+    from repro.serve.kv_cache import CacheManager, PrefixMatch
+
+
+# ------------------------------------------------------------ requests --
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    #: original submission time; never restamped — the stable anchor for
+    #: client-side latency (TTFT = first TokenEvent.ts - created_at)
+    created_at: float = 0.0
+    #: queue-wait clock; a preemption restamps it at requeue so the next
+    #: admission's wait measures time-to-resume, not time-since-submit
+    submitted_at: float = 0.0
+    admitted_at: float = 0.0
+    #: times this request was preempted (pages freed, re-queued to resume
+    #: from prompt + generated-so-far); telemetry for the scheduler tests
+    preemptions: int = 0
+    #: set by Engine.cancel; a cancelled request emits no further tokens
+    cancelled: bool = False
+
+    @property
+    def done(self) -> bool:
+        if self.eos_id is not None and self.generated and self.generated[-1] == self.eos_id:
+            return True
+        return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def resume_tokens(self) -> list[int]:
+        """Effective prompt at (re-)admission: the original prompt plus
+        everything generated before any preemption."""
+        return self.prompt + self.generated
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(0.0, self.admitted_at - self.submitted_at)
+
+
+@dataclasses.dataclass
+class Slot:
+    """One continuous-batching slot.  Execution state (``pos``,
+    ``last_token``, ``pending``) is written by the executor; the
+    admission stamps (``admit_seq``, ``admit_gen``) are scheduler
+    bookkeeping carried on the slot record."""
+
+    active: bool = False
+    request: Request | None = None
+    pos: int = 0  # next position to write (== current length)
+    last_token: int = 0
+    #: prompt-tail tokens still to be teacher-forced through the decode
+    #: scan (prefix-skip / chunked-prefill admissions); drained
+    #: decode_steps at a time
+    pending: list[int] = dataclasses.field(default_factory=list)
+    #: admission order stamp — preemption picks the youngest resident
+    admit_seq: int = -1
+    #: generated-token count at (re-)admission: a slot is only
+    #: preemptable once it has emitted at least one token this
+    #: residency, so every preemption cycle nets forward progress (a
+    #: skip-resumed or chunked slot replaying its forced tail would
+    #: otherwise be preempted before ever sampling — a livelock)
+    admit_gen: int = 0
+
+
+# ------------------------------------------------------------ decisions --
+#: admission modes — how the prompt's KV gets into the cache
+MODE_PREFILL = "prefill"  # whole effective prompt through one bucket dispatch
+MODE_SKIP = "skip"        # prefix hit: no dispatch, tail teacher-forced
+MODE_CHUNKED = "chunked"  # first chunk through a bucket dispatch, tail forced
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One planned slot tenancy.  ``tokens`` is the effective prompt
+    (original prompt + generated-so-far for a preemption resume);
+    ``fill_len`` of it rides the prefill dispatch (0 for prefix-skip),
+    positions >= ``write_from`` are written by decode steps."""
+
+    slot: int
+    request: Request
+    tokens: tuple[int, ...]
+    mode: str  # MODE_PREFILL | MODE_SKIP | MODE_CHUNKED
+    bucket: int  # padded dispatch length (0 for MODE_SKIP)
+    fill_len: int  # prompt tokens the prefill dispatch computes
+    write_from: int  # first position filled through decode writes
+    shared_pages: int  # leading prefix-cache pages mapped at admit()
+    admit_seq: int
+    admit_gen: int
+
+    @property
+    def emits_first_token(self) -> bool:
+        """Whether the prefill dispatch's last-position logits sample the
+        first generated token (only when the dispatch saw the whole
+        prompt; a chunk's logits predict a token we already have)."""
+        return self.mode == MODE_PREFILL
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    """Explicit per-step plan consumed by the executor: which residents
+    preempt, which queued prompts prefill into which bucket/slots, and
+    which slots decode.  The scheduler has already performed the
+    host-side page bookkeeping (``CacheManager.admit``/``free``) for
+    everything listed here; the executor performs only device work and
+    slot bookkeeping."""
+
+    #: slots whose resident was preempted (pages already freed, request
+    #: already re-queued); the executor resets the slot records
+    preempted: list[tuple[int, Request]] = dataclasses.field(default_factory=list)
+    #: new tenancies, in admission order
+    admissions: list[Admission] = dataclasses.field(default_factory=list)
+    #: bucket -> same-bucket admissions riding ONE prefill dispatch,
+    #: ascending bucket order (MODE_SKIP admissions never appear here)
+    prefill_groups: dict[int, list[Admission]] = dataclasses.field(default_factory=dict)
+    #: slots that run the decode scan this step (residents surviving
+    #: preemption + this step's admissions)
+    decode_slots: list[int] = dataclasses.field(default_factory=list)
+    #: register decode-completed full pages in the prefix index (only
+    #: sound on the bit-exact datapath, where decode-written KV is
+    #: bitwise what a prefill of the same tokens would write)
+    register_decoded: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorCaps:
+    """Datapath capabilities the executor advertises; policies must plan
+    within them (the scheduler never inspects device state directly)."""
+
+    max_batch: int
+    max_seq_len: int
+    decode_steps: int
+    buckets: tuple[int, ...]  # active prefill buckets (() = exact-length)
+    bucketable: bool  # position-addressed cache: right-padding is sound
+    paged: bool  # block-table page pool (vs dense slot slabs)
+    #: decode-path forward bitwise identical to prefill-path forward
+    #: (float GQA, exact softmax, jnp reference) — the predicate behind
+    #: prefill-skip, preemption-resume, and chunked prefill
+    bit_exact: bool
+    prefix_cache: bool  # prefix index live (paged + kv_prefix_cache)
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Scheduling policy protocol.  ``schedule`` may query and perform
+    host-side bookkeeping on the executor-owned CacheManager (admission
+    reservations, preemption frees) but must never touch device state —
+    every dispatch consequence must be spelled out in the returned
+    :class:`ScheduleDecision`."""
+
+    #: policy counters merged into Engine.telemetry; must at least carry
+    #: ``prompts_admitted`` and ``queue_wait_s_total``
+    stats: dict
+
+    def enqueue(self, request: Request) -> None: ...
+
+    def remove(self, uid: int) -> Request | None: ...
+
+    @property
+    def queue(self) -> list[Request]: ...
+
+    def schedule(self, slots: list[Slot]) -> ScheduleDecision: ...
+
+
+class FifoScheduler:
+    """The default policy: FIFO admission bucketed by prompt length,
+    prefix-cache hit planning, youngest-first page-aware preemption, and
+    chunked prefill for long prompts (``ServeConfig.prefill_chunk``)."""
+
+    def __init__(
+        self, serve_cfg: ServeConfig, caps: ExecutorCaps, cache: CacheManager
+    ):
+        self.serve_cfg = serve_cfg
+        self.caps = caps
+        self.cache = cache
+        self.queue: list[Request] = []
+        self._admit_seq = 0
+        #: prefix hits skip the prefill dispatch (vs storage-only sharing)
+        self.prefix_skip = caps.bit_exact and caps.prefix_cache
+        #: page-aware preemption instead of FIFO head-of-line blocking
+        self.preempt_enabled = (
+            caps.paged and serve_cfg.kv_preemption and caps.bit_exact
+        )
+        #: chunked prefill: replaying prompt positions through the decode
+        #: scan must be bitwise the prefill computation, and the chunk
+        #: dispatch must reuse a bucketed program
+        self.chunk_len = (
+            serve_cfg.prefill_chunk
+            if (
+                serve_cfg.prefill_chunk is not None
+                and caps.bit_exact
+                and caps.bucketable
+                and caps.buckets
+            )
+            else None
+        )
+        if self.chunk_len is not None:
+            if self.chunk_len < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1, got {self.chunk_len}"
+                )
+            if self.chunk_len > max(caps.buckets):
+                raise ValueError(
+                    f"prefill_chunk={self.chunk_len} exceeds the largest "
+                    f"prefill bucket {max(caps.buckets)}; a chunk dispatch "
+                    "must ride an existing bucketed program"
+                )
+        self.stats = {
+            "prompts_admitted": 0,
+            "queue_wait_s_total": 0.0,
+            "preemptions": 0,
+            # prompt tokens never recomputed thanks to a prefix hit
+            # (prefill-skip admissions only — real FLOP savings)
+            "prefill_tokens_saved": 0,
+            # prompt tokens whose pages were deduped by a prefix hit on
+            # the storage-only path (recomputed, but no pages written)
+            "prefix_tokens_shared": 0,
+        }
+
+    # ------------------------------------------------------------ queue --
+    def enqueue(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def remove(self, uid: int) -> Request | None:
+        for i, req in enumerate(self.queue):
+            if req.uid == uid:
+                return self.queue.pop(i)
+        return None
+
+    def bucket_for(self, n: int) -> int:
+        """Padded prefill length for an n-token prompt: the smallest bucket
+        >= n, or n itself for unbucketable families / oversized prompts."""
+        for b in self.caps.buckets:
+            if b >= n:
+                return b
+        return n
+
+    # ------------------------------------------------------- preemption --
+    def _try_preempt(
+        self, slots: list[Slot], free: list[int], decision: ScheduleDecision
+    ) -> bool:
+        """Preempt the youngest resident slot to unblock the queue head:
+        free its pages (shared prefix pages survive via refcounts), stamp
+        the preemption, and re-queue it right behind the head with
+        prompt + generated-so-far as a resumable prompt.  Returns False
+        when preemption is off or nothing is preemptable.
+
+        A slot whose resume prompt no longer fits the largest configured
+        prefill bucket is not preemptable: re-prefilling it would mint an
+        exact-length jit program and silently blow the
+        len(prefill_buckets) + 1 program budget.  Neither is a slot that
+        has not emitted a token since its (re-)admission: preempting it
+        would discard a residency that made no progress, and a
+        skip-resumed slot still replaying its teacher-forced tail could
+        be preempted every step forever (livelock)."""
+        if not self.preempt_enabled:
+            return False
+        taken = {idx for idx, _ in decision.preempted}
+        max_bucket = max(self.caps.buckets) if self.caps.buckets else None
+        victims = [
+            i for i, s in enumerate(slots)
+            if s.active
+            and i not in taken
+            and len(s.request.generated) > s.admit_gen
+            and (
+                max_bucket is None
+                or len(s.request.resume_tokens) <= max_bucket
+            )
+        ]
+        if not victims:
+            return False
+        idx = max(victims, key=lambda i: slots[i].admit_seq)
+        req = slots[idx].request
+        req.preemptions += 1
+        # the wait clock restarts at requeue: the next admission's queue
+        # wait measures time spent waiting to resume, not time since the
+        # original submission (which would double-count the residency)
+        req.submitted_at = time.perf_counter()
+        self.stats["preemptions"] += 1
+        self.cache.free(idx)
+        decision.preempted.append((idx, req))
+        free.append(idx)
+        self.queue.insert(1, req)
+        return True
+
+    # -------------------------------------------------------- admission --
+    def _reserve_len(self, req: Request) -> int:
+        """Worst-case sequence length for a request: decode writes reach at
+        most position prompt + max_new_tokens - 1 (capped by max_seq_len)."""
+        return min(
+            len(req.prompt) + req.max_new_tokens, self.serve_cfg.max_seq_len
+        )
+
+    def schedule(self, slots: list[Slot]) -> ScheduleDecision:
+        """Plan one engine step.  FIFO order; when the queue head cannot
+        get pages, either preempt the youngest resident (kv_preemption on
+        the bit-exact datapath) or block the head until finished slots
+        return pages (no reordering, no starvation either way)."""
+        sc = self.serve_cfg
+        decision = ScheduleDecision(register_decoded=self.prefix_skip)
+        cap = sc.max_prefill_per_step or sc.max_batch
+        free = [i for i, s in enumerate(slots) if not s.active]
+        n_admitted = 0
+        while self.queue and free and n_admitted < cap:
+            head = self.queue[0]
+            seq = head.resume_tokens
+            # reserve worst-case pages (prompt + generation budget) so
+            # decode growth can never exhaust the pool mid-run; pages
+            # still allocate lazily as the sequence actually grows.  A
+            # prefix hit reserves only the unshared tail (+1 CoW page
+            # when the first write lands inside a shared page).
+            reserve_len = self._reserve_len(head)
+            match = self.cache.match_prefix(seq)
+            skip = bool(match) and self.prefix_skip and len(seq) > 1
+            # chunked prefill only applies where no prefix pages cover the
+            # prompt (a hit on this datapath always skips instead)
+            chunked = (
+                not skip
+                and not match
+                and self.chunk_len is not None
+                and len(seq) > self.chunk_len
+            )
+            if skip:
+                write_from = min(match.tokens, len(seq) - 1)
+            elif chunked:
+                write_from = self.chunk_len
+            else:
+                write_from = len(seq)
+            need = self.cache.admission_need(match, reserve_len, write_from)
+            if not self.cache.can_reserve(need):
+                if self._try_preempt(slots, free, decision):
+                    continue  # pages (and a slot) came back; retry head
+                break
+            req = self.queue.pop(0)
+            # queue wait ends at pop: prefill execution/compile time that
+            # follows is prefill_time_s, not waiting.  A preemption-resume
+            # adds its re-wait to the total but the prompt counts once.
+            if req.admitted_at == 0.0:
+                self.stats["prompts_admitted"] += 1
+            req.admitted_at = time.perf_counter()
+            self.stats["queue_wait_s_total"] += req.queue_wait_s
+            n_admitted += 1
+            idx = free.pop(0)
+            self._admit_seq += 1
+            shared = self.cache.admit(
+                idx, seq, reserve_len,
+                match=match, lazy_tail=skip or chunked,
+                write_from=write_from,
+                fill_len=self.chunk_len if chunked else None,
+            )
+            if skip:
+                mode, bucket, fill_len = MODE_SKIP, 0, 0
+                self.stats["prefill_tokens_saved"] += write_from
+            elif chunked:
+                mode = MODE_CHUNKED
+                fill_len = self.chunk_len
+                bucket = self.bucket_for(fill_len)
+            else:
+                mode = MODE_PREFILL
+                fill_len = len(seq)
+                bucket = self.bucket_for(fill_len)
+                self.stats["prefix_tokens_shared"] += match.tokens if match else 0
+            adm = Admission(
+                slot=idx, request=req, tokens=tuple(seq), mode=mode,
+                bucket=bucket, fill_len=fill_len, write_from=write_from,
+                shared_pages=shared, admit_seq=self._admit_seq,
+                admit_gen=len(req.generated),
+            )
+            decision.admissions.append(adm)
+            if mode != MODE_SKIP:
+                decision.prefill_groups.setdefault(bucket, []).append(adm)
+        decision.prefill_groups = dict(sorted(decision.prefill_groups.items()))
+        preempted = {idx for idx, _ in decision.preempted}
+        decision.decode_slots = sorted(
+            {i for i, s in enumerate(slots) if s.active and i not in preempted}
+            | {a.slot for a in decision.admissions}
+        )
+        return decision

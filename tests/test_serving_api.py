@@ -1,0 +1,458 @@
+"""Serving API redesign tests: the Scheduler / Executor / Engine layering
+contract (scheduler device-free, executor decision-driven), the request
+lifecycle (submit -> stream -> cancel frees pages, cancel-before-prefill,
+interleaved streams), `Engine.generate` vs legacy `ServingEngine.run`
+token identity across dense/paged x GQA/MLA/int8-KV, chunked prefill
+(greedy streams bit-identical to unchunked, jit budget unchanged), and
+scheduler pluggability."""
+
+import dataclasses
+import inspect
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ServeConfig
+from repro.core import precision as P
+from repro.models import lm
+from repro.serve import (
+    Engine,
+    FifoScheduler,
+    SamplingParams,
+    ServingEngine,
+)
+from repro.serve import executor as executor_mod
+from repro.serve import scheduler as scheduler_mod
+
+KEY = jax.random.PRNGKey(17)
+
+KV8 = P.PrecisionPolicy(
+    "kv8", (P.Rule("kv_cache", P.int8(per_channel=False)),)
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.get_config("granite-8b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init_params(cfg, KEY)
+
+
+def _serve(**kw):
+    base = dict(max_batch=2, max_seq_len=64, decode_steps=3)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+PROMPTS = ([5, 9, 3, 7], [11, 2, 6], [1, 2, 3, 4, 5, 6, 7, 8, 9], [4, 4])
+
+
+# ------------------------------------------------------ layering contract --
+
+
+def test_scheduler_module_is_device_free():
+    """The policy layer must stay importable and auditable without jax:
+    no jax import, no jnp usage, no device dispatch can hide in it."""
+    src = inspect.getsource(scheduler_mod)
+    assert "import jax" not in src
+    assert "jnp." not in src
+    assert "jax." not in src
+
+
+def test_executor_makes_no_policy_decisions():
+    """The executor consumes explicit decisions: it never inspects the
+    queue, never matches prefixes, never reserves or admits — those are
+    scheduler verbs (it may free pages: retirement is mechanical)."""
+    src = inspect.getsource(executor_mod)
+    for policy_verb in (
+        "FifoScheduler",
+        ".queue",
+        "match_prefix",
+        "admission_need",
+        "can_reserve",
+        ".admit(",
+        "_try_preempt",
+    ):
+        assert policy_verb not in src, f"executor performs policy: {policy_verb}"
+
+
+def test_custom_scheduler_pluggable(cfg, params):
+    """Engine accepts a scheduler_factory; a policy tweak (cap admissions
+    at one per step) needs no executor or engine change."""
+
+    class OneAtATime(FifoScheduler):
+        def __init__(self, serve_cfg, caps, cache):
+            super().__init__(
+                dataclasses.replace(serve_cfg, max_prefill_per_step=1),
+                caps, cache,
+            )
+
+    eng = Engine(cfg, params, _serve(max_batch=4),
+                 scheduler_factory=OneAtATime)
+    handles = [eng.submit(p, max_new_tokens=3) for p in PROMPTS[:3]]
+    stats = eng.step()
+    assert stats["prefilled"] == 1  # the policy capped admission
+    res = eng.generate()
+    assert all(len(res[h.uid].generated) == 3 for h in handles)
+
+
+# ------------------------------------------------- legacy-parity (shim) ----
+
+
+def test_servingengine_warns_deprecation(cfg, params):
+    with pytest.warns(DeprecationWarning, match="ServingEngine is deprecated"):
+        ServingEngine(cfg, params, _serve())
+
+
+@pytest.mark.parametrize(
+    "arch,policy",
+    [
+        ("granite-8b", None),   # GQA float (bit-exact datapath)
+        ("minicpm3-4b", None),  # MLA float
+        ("granite-8b", KV8),    # GQA int8 KV (per-page scales)
+    ],
+)
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_generate_token_identical_to_legacy_run(arch, policy, layout):
+    """`Engine.generate` is the `ServingEngine.run` migration target:
+    same prompts, same seed -> identical token streams through the shim,
+    across layouts and datapaths."""
+    acfg = configs.get_config(arch, reduced=True)
+    aparams = lm.init_params(acfg, KEY)
+    sc = _serve(kv_layout=layout, kv_page_size=8, policy=policy)
+    eng = Engine(acfg, aparams, sc)
+    handles = [eng.submit(list(p), max_new_tokens=5) for p in PROMPTS]
+    new = [eng.generate()[h.uid].generated for h in handles]
+    with pytest.warns(DeprecationWarning):
+        old_eng = ServingEngine(acfg, aparams, sc)
+    uids = [old_eng.submit(list(p), 5) for p in PROMPTS]
+    old = [old_eng.run()[u].generated for u in uids]
+    assert new == old
+
+
+# ------------------------------------------------------ request lifecycle --
+
+
+def test_stream_matches_generate_with_ordered_events(cfg, params):
+    handles_cfg = _serve()
+    ref_eng = Engine(cfg, params, handles_cfg)
+    ref_handles = [ref_eng.submit(list(p), max_new_tokens=6) for p in PROMPTS[:2]]
+    ref = [ref_eng.generate()[h.uid].generated for h in ref_handles]
+
+    eng = Engine(cfg, params, handles_cfg)
+    h0 = eng.submit(list(PROMPTS[0]), max_new_tokens=6)
+    h1 = eng.submit(list(PROMPTS[1]), max_new_tokens=6)
+    ev0 = list(eng.stream(h0))
+    ev1 = list(eng.stream(h1))
+    assert [e.token for e in ev0] == ref[0]
+    assert [e.token for e in ev1] == ref[1]
+    for evs in (ev0, ev1):
+        assert [e.index for e in evs] == list(range(len(evs)))
+        assert all(b.ts >= a.ts for a, b in zip(evs, evs[1:]))
+        assert evs[-1].finished and evs[-1].finish_reason == "length"
+        assert not any(e.finished for e in evs[:-1])
+        # time-to-first-token is measurable from the event stream
+        req = eng.request(evs[0].uid)
+        assert evs[0].ts >= req.submitted_at >= 0.0
+
+
+def test_two_interleaved_streams_make_progress(cfg, params):
+    """Alternately pulling two streams: each pump advances the shared
+    engine, and both consumers see their full ordered sequence."""
+    eng = Engine(cfg, params, _serve())
+    ha = eng.submit(list(PROMPTS[0]), max_new_tokens=6)
+    hb = eng.submit(list(PROMPTS[1]), max_new_tokens=6)
+    ita, itb = eng.stream(ha), eng.stream(hb)
+    got_a, got_b = [], []
+    while len(got_a) < 6 or len(got_b) < 6:
+        for it, got in ((ita, got_a), (itb, got_b)):
+            ev = next(it, None)
+            if ev is not None:
+                got.append(ev.token)
+    assert got_a == eng.result(ha).generated
+    assert got_b == eng.result(hb).generated
+
+
+def test_eos_finish_reason_on_stream(cfg, params):
+    probe = Engine(cfg, params, _serve())
+    hp = probe.submit(list(PROMPTS[0]), max_new_tokens=8)
+    free = probe.generate()[hp.uid].generated
+    eos = free[2]
+    eng = Engine(cfg, params, _serve())
+    h = eng.submit(list(PROMPTS[0]), SamplingParams(max_new_tokens=8, eos_id=eos))
+    events = list(eng.stream(h))
+    assert [e.token for e in events] == free[: free.index(eos) + 1]
+    assert events[-1].finished and events[-1].finish_reason == "eos"
+    assert eng.finish_reason(h) == "eos"
+
+
+def test_cancel_mid_generation_frees_pages(cfg, params):
+    """Cancelling a resident request returns its pages to the pool at
+    once (pool invariants clean), and concurrent requests are unharmed."""
+    eng = Engine(cfg, params, _serve(
+        kv_layout="paged", kv_page_size=8, decode_steps=2,
+    ))
+    mgr = eng.executor.cache_mgr
+    h_long = eng.submit(list(PROMPTS[2]), max_new_tokens=40)
+    h_short = eng.submit(list(PROMPTS[1]), max_new_tokens=5)
+    stream = eng.stream(h_long)
+    got = [next(stream), next(stream)]  # mid-generation
+    pages_before = mgr.pages_in_use
+    assert pages_before > 0
+    assert eng.cancel(h_long)
+    mgr.check_invariants()
+    assert not any(
+        s.active and s.request.uid == h_long.uid for s in eng.executor.slots
+    )
+    assert mgr.pages_in_use < pages_before
+    assert eng.finish_reason(h_long) == "cancelled"
+    assert eng.result(h_long).cancelled
+    # the open stream drains its buffer and stops; no post-cancel tokens
+    rest = list(stream)
+    n_before_cancel = len(eng.result(h_long).generated)
+    assert len(got) + len(rest) <= n_before_cancel
+    res = eng.generate()
+    assert len(res[h_short.uid].generated) == 5
+    mgr.check_invariants()
+    assert mgr.pages_in_use == 0
+    # cancelling twice is a no-op
+    assert not eng.cancel(h_long)
+
+
+def test_cancel_before_prefill(cfg, params):
+    """A queued request cancels without ever touching a slot or a page."""
+    eng = Engine(cfg, params, _serve(
+        max_batch=1, kv_layout="paged", kv_page_size=8,
+    ))
+    h_running = eng.submit(list(PROMPTS[0]), max_new_tokens=4)
+    h_queued = eng.submit(list(PROMPTS[1]), max_new_tokens=4)
+    eng.step()  # h_running occupies the only slot; h_queued waits
+    assert len(eng.scheduler.queue) == 1
+    assert eng.cancel(h_queued)
+    assert not eng.scheduler.queue
+    eng.executor.cache_mgr.check_invariants()
+    res = eng.generate()
+    assert len(res[h_running.uid].generated) == 4
+    assert res[h_queued.uid].generated == []
+    assert eng.finish_reason(h_queued) == "cancelled"
+    assert list(eng.stream(h_queued)) == []
+    assert eng.telemetry["prompts_admitted"] == 1
+
+
+def test_sequence_cap_skip_admission_streams_final_token(cfg, params):
+    """A prefix-skip admission with one token of sequence headroom: the
+    forced tail replays to the cap and the stream delivers exactly the
+    one sampled token, flagged final — identical to the unskipped run.
+    (Zero-event finishes happen only via cancel, covered above; stream
+    consumers still must not assume >= 1 event.)"""
+    sc = ServeConfig(
+        max_batch=1, max_seq_len=32, decode_steps=4,
+        prefill_buckets=(8, 16, 32),
+        kv_layout="paged", kv_page_size=8, kv_prefix_cache=True,
+    )
+    eng = Engine(cfg, params, sc)
+    prompt = list(range(31))  # max_seq_len - 1: one-token headroom
+    h1 = eng.submit(list(prompt), max_new_tokens=4)
+    first = eng.generate()[h1.uid].generated
+    assert len(first) == 1  # capped by the sequence limit
+    # second identical prompt: full-page prefix hit -> skip admission
+    h2 = eng.submit(list(prompt), max_new_tokens=4)
+    events = list(eng.stream(h2))
+    assert eng.telemetry["prefill_tokens_saved"] > 0  # it really skipped
+    assert [e.token for e in events] == first
+    assert events[-1].finished
+    eng.executor.cache_mgr.check_invariants()
+
+
+def test_created_at_survives_preemption_restamp(cfg, params):
+    """Preemption restamps Request.submitted_at (queue-wait clock) but
+    must never touch created_at — the TTFT anchor for TokenEvent
+    consumers."""
+    sc = ServeConfig(
+        max_batch=2, max_seq_len=32, decode_steps=2,
+        prefill_buckets=(8, 16, 32),
+        kv_layout="paged", kv_page_size=8, kv_pages=5,
+        kv_prefix_cache=True, kv_preemption=True,
+    )
+    eng = Engine(cfg, params, sc)
+    handles = [eng.submit([3 + i, 1, 4], max_new_tokens=20) for i in range(4)]
+    created = {h.uid: eng.request(h).created_at for h in handles}
+    res = eng.generate()
+    assert eng.telemetry["preemptions"] > 0  # the tight pool forced it
+    preempted = [r for r in res.values() if r.preemptions]
+    assert preempted
+    for req in preempted:
+        assert req.created_at == created[req.uid]
+        assert req.submitted_at > req.created_at  # requeue restamped it
+    for h in handles:
+        assert len(res[h.uid].generated) == 20
+
+
+def test_generate_releases_event_buffers(cfg, params):
+    """The batch path must not accumulate per-token event state across
+    waves (a long-lived engine would otherwise grow O(tokens ever
+    generated)); a stream opened later on a finished request just ends."""
+    eng = Engine(cfg, params, _serve())
+    for _ in range(3):
+        h = eng.submit(list(PROMPTS[0]), max_new_tokens=6)
+        eng.generate()
+    assert eng._events == {}
+    assert list(eng.stream(h)) == []  # finished, buffer released
+
+
+def test_submit_param_styles(cfg, params):
+    eng = Engine(cfg, params, _serve())
+    with pytest.raises(ValueError, match="not both"):
+        eng.submit([1, 2], SamplingParams(max_new_tokens=3), max_new_tokens=4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    h = eng.submit([1, 2], SamplingParams(max_new_tokens=3))
+    assert len(eng.generate()[h.uid].generated) == 3
+
+
+# -------------------------------------------------------- chunked prefill --
+
+
+LONG_PROMPTS = (
+    list(range(1, 21)),           # 20 tokens: chunk 8 -> 12 forced
+    list(range(3, 12)),           # 9 tokens: one chunk + 1 forced
+    [7, 7, 7],                    # shorter than the chunk: plain prefill
+    list(np.arange(2, 30) % 13),  # 28 tokens
+)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_chunked_prefill_greedy_token_identical(cfg, params, layout):
+    """prefill_chunk admits long prompts chunk-first + teacher-forced
+    tail; on the bit-exact datapath the greedy streams must be identical
+    to unchunked while only chunk-sized buckets compile."""
+    base = dict(
+        max_batch=2, max_seq_len=64, decode_steps=4,
+        prefill_buckets=(8, 16, 32), kv_layout=layout, kv_page_size=8,
+    )
+    ref_eng = Engine(cfg, params, ServeConfig(**base))
+    href = [ref_eng.submit(list(p), max_new_tokens=6) for p in LONG_PROMPTS]
+    ref = [ref_eng.generate()[h.uid].generated for h in href]
+
+    eng = Engine(cfg, params, ServeConfig(**base, prefill_chunk=8))
+    hc = [eng.submit(list(p), max_new_tokens=6) for h, p in zip(href, LONG_PROMPTS)]
+    got = [eng.generate()[h.uid].generated for h in hc]
+    assert got == ref
+    # long prompts never dispatched their full length: every compiled
+    # prefill program is at most the chunk's bucket
+    assert max(eng.executor._prefill_fn) <= 8
+    assert max(ref_eng.executor._prefill_fn) >= 32
+
+
+def test_chunked_prefill_interleaves_with_resident_decode(cfg, params):
+    """A long prompt admitted mid-run must not stall the resident: the
+    resident keeps emitting while the newcomer's tail teacher-forces
+    through the shared decode scans."""
+    eng = Engine(cfg, params, _serve(
+        max_batch=2, decode_steps=2, prefill_buckets=(4, 8, 16, 32),
+        prefill_chunk=4,
+    ))
+    h_res = eng.submit(list(PROMPTS[0]), max_new_tokens=12)
+    eng.step()
+    resident_before = len(eng.request(h_res).generated)
+    h_long = eng.submit(list(range(1, 20)), max_new_tokens=4)
+    eng.step()  # chunk dispatch + shared decode scan
+    # the newcomer is resident, still draining its forced tail...
+    slot = next(
+        s for s in eng.executor.slots
+        if s.active and s.request.uid == h_long.uid
+    )
+    assert slot.pending, "tail should drain over multiple steps"
+    assert not eng.request(h_long).generated
+    # ...and the resident advanced on the very same step
+    assert len(eng.request(h_res).generated) > resident_before
+    res = eng.generate()
+    assert len(res[h_long.uid].generated) == 4
+    assert len(res[h_res.uid].generated) == 12
+
+
+def test_chunked_prefill_jit_budget(cfg, params):
+    """With prefill_chunk on (and the prefix cache + preemption knobs on
+    top), the real jit caches still hold <= len(prefill_buckets) prefill
+    programs + 1 decode program."""
+
+    def programs(fn):
+        size = getattr(fn, "_cache_size", None)
+        return size() if callable(size) else 1
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        list(rng.integers(0, cfg.vocab_size, n))
+        for n in (3, 4, 5, 9, 12, 17, 23, 30)
+    ]
+    sc = ServeConfig(
+        max_batch=4, max_seq_len=64, decode_steps=3,
+        prefill_buckets=(4, 8, 16), prefill_chunk=8,
+        kv_layout="paged", kv_page_size=8,
+        kv_prefix_cache=True, kv_preemption=True,
+    )
+    eng = Engine(cfg, params, sc)
+    handles = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    res = eng.generate()
+    assert all(len(res[h.uid].generated) == 5 for h in handles)
+    buckets = eng.executor.buckets
+    assert eng.telemetry["prefill_compiles"] <= len(buckets)
+    assert sum(programs(f) for f in eng.executor._prefill_fn.values()) <= len(
+        buckets
+    )
+    assert programs(eng.executor._decode_fn) == 1
+    assert eng.telemetry["decode_compiles"] == 1
+
+
+def test_chunked_gated_off_on_non_bit_exact_datapaths():
+    """MLA's decode path is ~1ulp off prefill: chunking must silently
+    stay off there (whole-prompt prefill, tokens unchanged)."""
+    acfg = configs.get_config("minicpm3-4b", reduced=True)
+    aparams = lm.init_params(acfg, KEY)
+    base = dict(max_batch=2, max_seq_len=64, decode_steps=3,
+                prefill_buckets=(8, 32))
+    eng = Engine(acfg, aparams, ServeConfig(**base, prefill_chunk=8))
+    assert eng.scheduler.chunk_len is None
+    h = eng.submit(list(range(1, 20)), max_new_tokens=5)
+    got = eng.generate()[h.uid].generated
+    ref_eng = Engine(acfg, aparams, ServeConfig(**base))
+    hr = ref_eng.submit(list(range(1, 20)), max_new_tokens=5)
+    assert ref_eng.generate()[hr.uid].generated == got
+    # the full prompt length's bucket compiled (no chunking happened)
+    assert 32 in eng.executor._prefill_fn
+
+
+def test_chunk_must_fit_a_bucket(cfg, params):
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        Engine(cfg, params, _serve(prefill_buckets=(8, 16), prefill_chunk=24))
+    with pytest.raises(ValueError, match=">= 1"):
+        Engine(cfg, params, _serve(prefill_buckets=(8,), prefill_chunk=0))
+
+
+def test_chunked_with_prefix_cache_composes(cfg, params):
+    """Prefix hits skip, unmatched long prompts chunk, and chunk pages
+    registered by the first tenant are hittable by the second — all
+    token-identical to the dense baseline."""
+    prompts = [list(range(1, 25)), list(range(1, 25)) + [9, 9]]
+    base = dict(max_batch=2, max_seq_len=64, decode_steps=3,
+                prefill_buckets=(8, 16, 32))
+    ref_eng = Engine(cfg, params, ServeConfig(**base))
+    hr = [ref_eng.submit(list(p), max_new_tokens=5) for p in prompts]
+    ref = [ref_eng.generate()[h.uid].generated for h in hr]
+    eng = Engine(cfg, params, ServeConfig(
+        **base, kv_layout="paged", kv_page_size=8,
+        kv_prefix_cache=True, prefill_chunk=8,
+        max_prefill_per_step=1,  # serialize so the second can hit
+    ))
+    h = [eng.submit(list(p), max_new_tokens=5) for p in prompts]
+    got = [eng.generate()[x.uid].generated for x in h]
+    assert got == ref
+    tel = eng.telemetry
+    assert tel["prefix_hits"] >= 1  # the chunk-registered pages hit
+    assert tel["prefill_tokens_saved"] > 0
+    eng.executor.cache_mgr.check_invariants()
