@@ -89,7 +89,8 @@ def _stream_wave(eng: Engine, handles) -> tuple[list[float], list[float]]:
 
 def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
                policy=None, kv_layout="dense", workload="uniform",
-               api="batch", n_requests=8, max_new=16, seed=0):
+               api="batch", n_requests=8, max_new=16, seed=0,
+               cache_extend=True):
     prefix_mode = workload == "prefix"
     eng = Engine(
         cfg, params,
@@ -98,6 +99,7 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             prefill_buckets=buckets, decode_steps=decode_steps,
             policy=policy, kv_layout=kv_layout, kv_page_size=16,
             kv_prefix_cache=prefix_mode, kv_preemption=prefix_mode,
+            cache_extend=cache_extend,
         ),
     )
     # prefix-heavy workload: one fixed detector-geometry-style preamble
@@ -154,6 +156,7 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             f";prefill_tokens_saved={tel['prefill_tokens_saved']}"
             f";prefix_tokens_shared={tel['prefix_tokens_shared']}"
             f";preemptions={tel['preemptions']}"
+            f";extend_dispatches={tel['extend_dispatches']}"
         )
     return (
         f"serving_throughput,{name},b{max_batch},ds{decode_steps},"
@@ -162,7 +165,8 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
 
 
 def run(policy: str | None = None, kv_layout: str = "dense",
-        workload: str = "uniform", api: str = "batch") -> list[str]:
+        workload: str = "uniform", api: str = "batch",
+        cache_extend: bool = True) -> list[str]:
     if workload == "prefix" and kv_layout == "dense":
         kv_layout = "paged"  # sharing needs pages; dense would be inert
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
@@ -182,9 +186,53 @@ def run(policy: str | None = None, kv_layout: str = "dense",
                         max_batch=max_batch, buckets=buckets,
                         decode_steps=decode_steps, policy=arch_policy,
                         kv_layout=kv_layout, workload=workload, api=api,
+                        cache_extend=cache_extend,
                     )
                 )
     return rows
+
+
+def _rows_to_records(rows: list[str]) -> list[dict]:
+    """CSV rows -> dicts, with the packed derived column exploded."""
+    records = []
+    for row in rows[1:]:
+        head, derived = row.rsplit(",", 1)
+        bench, config, batch, steps, us_tok = head.split(",")
+        rec = {
+            "bench": bench, "config": config, "batch": batch,
+            "decode_steps": steps, "us_per_token": float(us_tok),
+        }
+        for field in derived.split(";"):
+            key, _, val = field.partition("=")
+            try:
+                rec[key] = int(val)
+            except ValueError:
+                try:
+                    rec[key] = float(val)
+                except ValueError:
+                    rec[key] = val
+        records.append(rec)
+    return records
+
+
+def record_trajectory(path: str, **run_kw) -> dict:
+    """Write a BENCH_serving.json trajectory artifact: the same sweep
+    with the cache-extending prefill program off (``before`` — the old
+    bit-exact-gated behavior) and on (``after``), so the trajectory
+    shows chunked prefill / prefix-skip / preemption savings becoming
+    real on quantized datapaths instead of storage-only dedup."""
+    import json
+
+    doc = {
+        "bench": "serving_throughput",
+        "args": {k: v for k, v in run_kw.items()},
+        "before": _rows_to_records(run(cache_extend=False, **run_kw)),
+        "after": _rows_to_records(run(cache_extend=True, **run_kw)),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
 
 
 def main():
@@ -209,12 +257,30 @@ def main():
                          "prefix-heavy (shared preamble; enables the "
                          "prefix cache + preemption and reports hit rate "
                          "/ prefill tokens saved / preemption count)")
+    ap.add_argument("--no-cache-extend", action="store_true",
+                    help="disable the cache-extending prefill program "
+                         "(pre-extend behavior: skip/chunk/preempt gated "
+                         "to bit-exact datapaths)")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="write a before/after (cache-extend off/on) "
+                         "trajectory artifact to PATH as JSON instead of "
+                         "printing one CSV sweep")
     args = ap.parse_args()
     t0 = time.time()
-    rows = run(policy=args.policy, kv_layout=args.kv_layout,
-               workload=args.workload, api=args.api)
-    for row in rows:
-        print(row)
+    if args.record:
+        doc = record_trajectory(
+            args.record, policy=args.policy, kv_layout=args.kv_layout,
+            workload=args.workload, api=args.api,
+        )
+        saved = [r.get("prefill_tokens_saved", 0) for r in doc["after"]]
+        print(f"# wrote {args.record}; "
+              f"after prefill_tokens_saved={saved}")
+    else:
+        rows = run(policy=args.policy, kv_layout=args.kv_layout,
+                   workload=args.workload, api=args.api,
+                   cache_extend=not args.no_cache_extend)
+        for row in rows:
+            print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")
 
 

@@ -261,22 +261,26 @@ class ServeConfig:
     # test-enforced.  Sampled (temperature>0) streams are equally
     # distributed but not reproducible against a dense run: skipping a
     # prefill dispatch reshuffles which PRNG key samples which token.
-    # Engines whose decode datapath is bit-exact with prefill (float
-    # GQA) additionally skip the prefill dispatch on a hit and
-    # teacher-force only the prompt tail through the decode program.
+    # A hit additionally skips the prompt-prefill dispatch (prefill-skip):
+    # bit-exact float-GQA engines teacher-force the uncovered tail through
+    # the decode program, every other datapath (MLA, int8 KV, LUT softmax)
+    # replays it through the cache-extending prefill program (see
+    # ``cache_extend`` and the README datapath-capability matrix).
     # No-op for the dense layout.
     kv_prefix_cache: bool = False
     # Page-aware preemption (paged layout only).  When the page pool cannot
     # cover the queue head's reservation, preempt the youngest resident
     # request — free its private pages and re-queue it at the queue front
     # with prompt + generated-so-far as a resumable prompt — instead of
-    # head-of-line blocking until pages drain.  Only engines whose
-    # prefill/decode datapaths are bit-exact (float GQA) actually preempt
-    # (resume re-prefills previously-decoded positions); others keep the
-    # FIFO serialization so outputs stay bit-identical to dense.  As
-    # with kv_prefix_cache, the bit-identity guarantee is on logits and
-    # greedy token streams; a resume changes the PRNG dispatch schedule
-    # for sampled decoding.
+    # head-of-line blocking until pages drain.  A resume replays the prompt
+    # part through prefill math (whole-prompt dispatch on bit-exact float
+    # GQA; the cache-extending prefill program elsewhere) and the
+    # generated part through the teacher-forced decode scan — the same
+    # math that originally wrote each position — so greedy token streams
+    # stay identical to the unpreempted run on every datapath (see the
+    # README datapath-capability matrix).  The identity guarantee is on
+    # logits and greedy token streams; a resume changes the PRNG dispatch
+    # schedule for sampled decoding.
     kv_preemption: bool = False
     # --- engine v2: bucketed prefill + scan decode ---
     # Prompt-length buckets for prefill padding.  None = auto powers of two
@@ -292,17 +296,34 @@ class ServeConfig:
     # --- chunked prefill (scheduler policy; serve/scheduler.py) ---
     # When set, a prompt longer than this admits by prefilling only its
     # first `prefill_chunk` tokens through the bucketed prefill program
-    # and teacher-forcing the remaining prompt tail through the decode
-    # scan, interleaved with resident decode steps — so admitting a long
-    # prompt stalls resident decoding by at most a chunk-sized dispatch
-    # instead of a full-prompt-sized one, within the unchanged
-    # len(prefill_buckets) + 1 compiled-program budget.  Must not exceed
-    # the largest prefill bucket (the chunk dispatch reuses a bucketed
-    # program).  Only engines whose decode datapath is bit-exact with
-    # prefill (float GQA, exact softmax, jnp reference) chunk — there,
-    # greedy token streams are bit-identical to unchunked (test-enforced);
-    # other datapaths silently keep whole-prompt prefill.  None = off.
+    # and replaying the remaining prompt tail incrementally — teacher-
+    # forced through the decode scan on bit-exact float-GQA engines,
+    # chunk-at-a-time through the cache-extending prefill program on
+    # every other datapath (MLA, int8 KV, LUT softmax; see
+    # ``cache_extend``) — interleaved with resident decode steps, so
+    # admitting a long prompt stalls resident decoding by at most a
+    # chunk-sized dispatch instead of a full-prompt-sized one.  Greedy
+    # token streams stay identical to unchunked on every datapath
+    # (test-enforced; README datapath-capability matrix).  Must not
+    # exceed the largest prefill bucket (the chunk dispatch reuses a
+    # bucketed program), and requires a bucketable (position-addressed)
+    # cache: setting it on SSM/hybrid or rolling sliding-window engines
+    # is a configuration error.  None = off.
     prefill_chunk: int | None = None
+    # Cache-extending prefill program (serve/executor.py).  One extra
+    # jitted program — fixed shape (max_batch, window) — that runs the
+    # prefill-path forward over a token window against the already-
+    # populated caches, scattering new K/V through the dense/paged
+    # write machinery.  Replayed tokens go through the same math that
+    # produced the cache, which is what lets chunked prefill,
+    # prefix-skip, and preemption-resume activate on datapaths whose
+    # decode scan is NOT bit-exact with prefill (MLA latent caches,
+    # int8 KV, LUT softmax).  Costs one compiled program on those
+    # engines (len(prefill_buckets) + 2 total, CI-enforced); engines on
+    # the Pallas kernel or without a bucketable cache fall back to the
+    # legacy bit-exact gating.  Disable to restore the pre-extend
+    # behavior (quantized datapaths silently skip the optimizations).
+    cache_extend: bool = True
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """Prefill buckets, ascending.  Auto mode: powers of two in

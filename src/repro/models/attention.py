@@ -21,7 +21,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import quant
+from repro.core import softmax as sm
 from repro.kernels.flash_attention import mha as fused_mha
+from repro.kernels.flash_attention.ref import NEG_INF
 from repro.models import layers
 from repro.models.params import ArraySpec
 from repro.serve import kv_cache as kv_cache_lib
@@ -106,7 +108,7 @@ def gqa_apply(
     x: jax.Array,  # (B, S, D)
     positions: jax.Array,  # (S,) global positions
     *,
-    mode: str = "train",  # train | prefill | decode
+    mode: str = "train",  # train | prefill | extend | decode
     cache: Cache | None = None,
     kernel: dict | None = None,
     quant=None,  # per-layer runtime hook from the precision plan
@@ -123,9 +125,15 @@ def gqa_apply(
     k = _split_heads(k, cfg.n_kv_heads, hd)
     v = _split_heads(v, cfg.n_kv_heads, hd)
     # positions: (S,) shared across batch for train/prefill, (B,) per-sequence
-    # global positions for decode (continuous batching).
+    # global positions for decode, (B, S) per-row windows for cache-extend
+    # (continuous batching).
     if cfg.use_rope:
-        rope_pos = positions[:, None, None] if mode == "decode" else positions
+        if mode == "decode":
+            rope_pos = positions[:, None, None]
+        elif mode == "extend":
+            rope_pos = positions[:, None, :]
+        else:
+            rope_pos = positions
         q = layers.apply_rope(q, rope_pos, cfg.rope_theta)
         k = layers.apply_rope(k, rope_pos, cfg.rope_theta)
 
@@ -212,13 +220,56 @@ def gqa_apply(
                 new_cache["v_scale"] = jax.lax.dynamic_update_slice(
                     cache["v_scale"], v_sc, (0, 0, 0)
                 )
+        if quantized:
+            # attend the cache's own representation (int8 roundtrip):
+            # prefill scores the exact values decode and cache-extend
+            # will read back, so replaying any of these positions later
+            # reproduces the same bits
+            k_att = k_store.astype(jnp.float32) * k_sc[..., None]
+            v_att = v_store.astype(jnp.float32) * v_sc[..., None]
+        else:
+            k_att, v_att = k, v
         out = fused_mha(
-            q, k, v,
+            q, k_att, v_att,
             causal=True,
             window=window,
             mode=kernel.get("softmax_mode", "safe"),
             use_pallas=kernel.get("use_pallas", False),
             interpret=kernel.get("interpret", True),
+        )
+    elif mode == "extend":
+        # cache-extending prefill: W window tokens per row written at
+        # per-row global positions (B, W) through the layout scatter,
+        # then attended with the prefill-path math against the full
+        # logical view (history + window) — so the window's activations
+        # and cache entries are bitwise what a whole-prompt prefill
+        # would have produced at the same positions.  Masked window
+        # entries carry an out-of-range sentinel position: dropped by
+        # the dense scatter, routed to the trash page by the paged one,
+        # and masked out of every window row's reduction.
+        if rolling:
+            raise ValueError(
+                "cache-extend requires a position-addressed cache; "
+                "rolling sliding-window buffers prefill exact-length"
+            )
+        upd = {"k": k_store, "v": v_store}
+        if quantized:
+            upd["k_scale"], upd["v_scale"] = k_sc, v_sc
+        if kv_cache_lib.is_paged(cache):
+            new_cache = kv_cache_lib.paged_window_write(cache, upd, positions)
+            view = kv_cache_lib.paged_decode_view(new_cache)
+        else:
+            new_cache = kv_cache_lib.dense_window_write(cache, upd, positions)
+            view = new_cache
+        kv_pos = jnp.arange(view["k"].shape[2])
+        mask = kv_pos[None, None, :] <= positions[:, :, None]  # (B, W, L)
+        if window is not None:
+            mask = mask & (positions[:, :, None] - kv_pos[None, None, :] < window)
+        out = _window_attend(
+            q, view["k"], view["v"], mask,
+            softmax_mode=kernel.get("softmax_mode", "safe"),
+            k_scale=view.get("k_scale"),
+            v_scale=view.get("v_scale"),
         )
     else:  # decode: s == 1, attend over cache; positions is (B,) per-seq
         pos = positions  # (B,)
@@ -285,6 +336,61 @@ def _kv_quantize(x: jax.Array):
     return codes, scale.astype(jnp.float32)
 
 
+def _window_attend(
+    q: jax.Array,  # (B, Hq, W, Dq)
+    k: jax.Array,  # (B, Hkv, L, Dk) float or int8 codes
+    v: jax.Array,  # (B, Hkv, L, Dv)
+    mask: jax.Array,  # (B, W, L) bool: window row i attends kv position j
+    *,
+    softmax_mode: str = "safe",
+    k_scale: jax.Array | None = None,  # (B, Hkv, L) when k is int8
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Window attention over a cache-backed view with *prefill-path*
+    math.
+
+    The cache-extending prefill program's attend: a window of W query
+    rows against the full logical cache (history + the just-written
+    window), under an explicit per-row mask.  Mirrors the jnp reference
+    path (``fused_mha`` with ``use_pallas=False`` ->
+    ``kernels.flash_attention.ref.attention_ref``) operation for
+    operation — KV heads repeated across query groups, one scaled
+    einsum, masked scores at NEG_INF (safe) or zero weight (lut) — so
+    window rows produce bitwise the activations a whole-prompt prefill
+    would have at the same positions.  Masked columns are a suffix of
+    the reduction axis and contribute exactly +0.0, which keeps the
+    reduction bitwise stable across cache lengths (the same property
+    the decode path already relies on).
+    """
+    b, hq, w, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None]
+    if v_scale is not None:
+        vf = vf * v_scale[..., None]
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+    qf = q.astype(jnp.float32)
+    scale = 1.0 / (d ** 0.5)
+    m = mask[:, None]  # (B, 1, W, L) broadcast over heads
+    with jax.named_scope("attnvol"):
+        s = jnp.einsum("...qd,...kd->...qk", qf, kf) * scale
+        if softmax_mode == "safe":
+            s = jnp.where(m, s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+        else:  # paper's LUT softmax, masked entries contribute zero weight
+            e = sm.lut.lut_exp(s)
+            e = jnp.where(m, e, 0.0)
+            denom = jnp.sum(e, axis=-1, keepdims=True)
+            p = e * sm.lut.lut_inv(denom)
+        out = jnp.einsum("...qk,...kd->...qd", p, vf)
+    return out.astype(q.dtype)
+
+
 def _decode_attend(
     q: jax.Array,  # (B, Hq, 1, D)
     k: jax.Array,  # (B, Hkv, L, D) float or int8 codes
@@ -347,7 +453,12 @@ def mla_apply(
     nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
     qk = nope + rope_d
 
-    rope_pos = positions[:, None, None] if mode == "decode" else positions
+    if mode == "decode":
+        rope_pos = positions[:, None, None]  # (B,) -> (B, 1, 1)
+    elif mode == "extend":
+        rope_pos = positions[:, None, :]  # (B, W) -> (B, 1, W)
+    else:
+        rope_pos = positions  # (S,)
 
     # --- query path ---
     cq = layers.dense(params["wq_a"], x, qc)
@@ -396,6 +507,16 @@ def mla_apply(
                 new_cache["latent_scale"] = jax.lax.dynamic_update_slice(
                     cache["latent_scale"], l_scale.astype(jnp.float32), (0, 0)
                 )
+        elif mode == "extend":  # window scatter at (B, W) positions
+            upd = {"latent": l_store}
+            if quantized:
+                upd["latent_scale"] = l_scale.astype(jnp.float32)
+            write = (
+                kv_cache_lib.paged_window_write
+                if kv_cache_lib.is_paged(cache)
+                else kv_cache_lib.dense_window_write
+            )
+            new_cache = write(cache, upd, positions)
         elif kv_cache_lib.is_paged(cache):  # paged decode: page scatter
             upd = {"latent": l_store[:, 0]}
             if quantized:
@@ -454,14 +575,60 @@ def mla_apply(
                 out = jnp.einsum("bhsL,bLhv->bhsv", probs, vv)
         out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vd)
         out = out.astype(x.dtype)  # decode math runs f32; restore carry dtype
-    else:
-        # train / prefill: materialize K/V (paper-faithful streaming form)
-        k_nope = layers.dense(params["wk_b"], ckv, qc).reshape(b, s, h, nope)
-        vv = layers.dense(params["wv_b"], ckv, qc).reshape(b, s, h, vd)
+    elif mode == "extend" and cache is not None:
+        # cache-extending prefill: attend the window rows with the
+        # prefill-path math against the full latent view (history + the
+        # just-written window), materializing per-head K/V from the
+        # latent exactly as the whole-prompt prefill does — so window
+        # activations and cache entries are bitwise what that prefill
+        # would have produced at the same positions.
+        view = (
+            kv_cache_lib.paged_decode_view(new_cache)
+            if kv_cache_lib.is_paged(new_cache)
+            else new_cache
+        )
+        lat = view["latent"].astype(jnp.float32)  # (b, L, r+rope_d)
+        if quantized:
+            lat = lat * view["latent_scale"][..., None]
+        ckv_all = lat[..., : m.kv_lora_rank]
+        krope_all = lat[..., m.kv_lora_rank :]
+        L = lat.shape[1]
+        k_nope = layers.dense(params["wk_b"], ckv_all, qc).reshape(
+            b, L, h, nope
+        )
+        vv = layers.dense(params["wv_b"], ckv_all, qc).reshape(b, L, h, vd)
         k_full = jnp.concatenate(
             [
                 k_nope.transpose(0, 2, 1, 3),
-                jnp.broadcast_to(k_rope[:, None], (b, h, s, rope_d)),
+                jnp.broadcast_to(krope_all[:, None], (b, h, L, rope_d)),
+            ],
+            axis=-1,
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)  # (b, h, W, qk)
+        kv_pos = jnp.arange(L)
+        mask = kv_pos[None, None, :] <= positions[:, :, None]  # (B, W, L)
+        out = _window_attend(
+            q_full, k_full, vv.transpose(0, 2, 1, 3), mask,
+            softmax_mode=kernel.get("softmax_mode", "safe"),
+        )
+        out = _merge_heads(out)
+    else:
+        # train / prefill: materialize K/V (paper-faithful streaming form)
+        if quantized and mode == "prefill":
+            # attend the cache's own representation (int8 roundtrip), so
+            # replaying these positions via decode or cache-extend reads
+            # back exactly the values prefill scored
+            lat_att = l_store.astype(jnp.float32) * l_scale[..., None]
+            ckv_att = lat_att[..., : m.kv_lora_rank]
+            krope_att = lat_att[..., m.kv_lora_rank :]
+        else:
+            ckv_att, krope_att = ckv, k_rope
+        k_nope = layers.dense(params["wk_b"], ckv_att, qc).reshape(b, s, h, nope)
+        vv = layers.dense(params["wv_b"], ckv_att, qc).reshape(b, s, h, vd)
+        k_full = jnp.concatenate(
+            [
+                k_nope.transpose(0, 2, 1, 3),
+                jnp.broadcast_to(krope_att[:, None], (b, h, s, rope_d)),
             ],
             axis=-1,
         )

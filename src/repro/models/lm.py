@@ -272,8 +272,10 @@ def forward(
         params, cfg, batch, mode, quant=plan.embed_quant()
     )
     if positions is None:
-        if mode == "decode":
-            raise ValueError("decode requires explicit per-sequence positions")
+        if mode in ("decode", "extend"):
+            raise ValueError(
+                f"{mode} requires explicit per-sequence positions"
+            )
         positions = jnp.arange(h.shape[1], dtype=jnp.int32)
     x, new_caches, aux = _run_blocks(
         params, cfg, h, positions,

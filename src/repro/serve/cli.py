@@ -50,12 +50,12 @@ def add_serving_args(
                     help="prompt-length buckets (default: powers of two; "
                          "pass with no values for exact-length v1 prefill)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="chunked prefill: admit long prompts with a "
-                         "chunk-sized bucketed dispatch and teacher-force "
-                         "the prompt tail through the decode scan, "
-                         "interleaved with resident decode (bit-exact "
-                         "datapaths only; must not exceed the largest "
-                         "bucket)")
+                    help="chunked prefill: admit long prompts one "
+                         "chunk-sized dispatch at a time, interleaved with "
+                         "resident decode; later chunks ride the "
+                         "cache-extending prefill program on every datapath "
+                         "(GQA, MLA, int8-KV, LUT softmax; must not exceed "
+                         "the largest bucket; requires a bucketable cache)")
     ap.add_argument("--decode-steps", type=int, default=4,
                     help="decode tokens per host dispatch (lax.scan)")
     ap.add_argument("--max-prefill-per-step", type=int, default=0,
@@ -76,11 +76,16 @@ def add_serving_args(
     ap.add_argument("--kv-preemption", action="store_true",
                     help="preempt the youngest resident instead of "
                          "head-of-line blocking when the page pool is "
-                         "exhausted (paged layout, bit-exact datapath)")
+                         "exhausted; resumes are token-exact on every "
+                         "datapath (paged layout)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a fixed preamble of this many tokens to "
                          "every request (prefix-cache exercise; think "
                          "repeated detector-geometry preambles)")
+    ap.add_argument("--no-cache-extend", action="store_true",
+                    help="disable the cache-extending prefill program "
+                         "(chunked prefill / prefix-skip / preemption fall "
+                         "back to bit-exact-datapath gating, as before)")
     ap.add_argument("--stream", action="store_true",
                     help="consume requests through Engine.stream "
                          "(per-token events with TTFT) instead of the "
@@ -108,4 +113,5 @@ def config_from_args(args: argparse.Namespace, model_cfg) -> ServeConfig:
         kv_pages=args.kv_pages,
         kv_prefix_cache=args.kv_prefix_cache,
         kv_preemption=args.kv_preemption,
+        cache_extend=not getattr(args, "no_cache_extend", False),
     )

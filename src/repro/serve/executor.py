@@ -13,10 +13,15 @@ retire finished slots.  Every *choice* (who is admitted where, who
 preempts, what chunks) was already made by the scheduler; the executor
 never inspects the queue and never makes a policy decision.
 
-The compiled-program discipline is unchanged from the monolithic
-engine: at most ``len(prefill_buckets)`` prefill programs (each at the
-fixed ``max_batch`` width) plus one decode program, test-enforced on
-the real jit caches.
+The compiled-program discipline: at most ``len(prefill_buckets)``
+prefill programs (each at the fixed ``max_batch`` width) plus one
+decode program plus — on datapaths that need it — one cache-extending
+prefill program, test-enforced on the real jit caches.  The extend
+program runs the prefill-path forward over a fixed-width token window
+against the already-populated caches, so prefill-skip tails, chunk
+tails, and preemption-resume prompts can be replayed with the same
+math that produced the cache even when the decode scan is not bitwise
+the prefill (MLA latent caches, int8 KV, LUT softmax).
 """
 
 from __future__ import annotations
@@ -146,15 +151,39 @@ class ModelExecutor:
             else ()
         )
 
+        # Cache-extending prefill program: ONE extra jitted program at a
+        # fixed (max_batch, extend_width) shape.  Replayed tokens go
+        # through the prefill-path forward against the populated caches,
+        # which is what lets the scheduler plan prefill-skip / chunked /
+        # preemption-resume admissions on datapaths where the decode
+        # scan is NOT bitwise the prefill.  The window attend mirrors
+        # the jnp reference path, so engines on the Pallas kernel keep
+        # the legacy bit-exact gating (their prefill math is the
+        # streaming kernel, not the reference).
+        self.extend_width = (
+            (sc.prefill_chunk or max(self.buckets)) if self.buckets else 0
+        )
+        self.cache_extend = bool(
+            sc.cache_extend
+            and self.bucketable
+            and self.extend_width > 0
+            and not self.kernel.get("use_pallas", False)
+        )
         self._decode_fn = jax.jit(self._decode_scan)
         self._prefill_fn: dict[int, Any] = {}  # jit cache per bucket length
+        self._extend_fn = (
+            jax.jit(self._extend_batch) if self.cache_extend else None
+        )
         self.tel = {
             "tokens_generated": 0,
             "prefill_compiles": 0,
             "prefill_dispatches": 0,
             "decode_compiles": 0,
+            "extend_compiles": 0,
+            "extend_dispatches": 0,
             "prefill_time_s": 0.0,
             "decode_time_s": 0.0,
+            "extend_time_s": 0.0,
             "steps": 0,
         }
 
@@ -172,6 +201,7 @@ class ModelExecutor:
             paged=self.kv_layout == "paged",
             bit_exact=self.bit_exact,
             prefix_cache=self.cache_mgr.prefix_cache,
+            cache_extend=self.cache_extend,
         )
 
     def kv_stats(self) -> dict:
@@ -228,6 +258,38 @@ class ModelExecutor:
         new_caches = self.cache_mgr.insert_prefill(
             caches, filled, slots, shared
         )
+        return last, new_caches
+
+    def _extend_batch(self, params, tokens, win_len, starts, caches):
+        """Extend resident slots' caches by one token window each in ONE
+        fixed-shape dispatch (the cache-extending prefill program).
+
+        ``tokens``: (max_batch, extend_width) int32, right-padded per
+        row.  ``win_len``: (max_batch,) valid tokens per row (0 = idle
+        row).  ``starts``: (max_batch,) each row's first write position.
+        Row i is slot i — the same full-batch convention as the decode
+        scan, so no slot gather is needed.  The forward runs in
+        ``extend`` mode: window tokens are written at global positions
+        ``starts + [0, W)`` through the dense/paged scatter and attended
+        with prefill-path math against history + window, making the new
+        cache entries and logits bitwise what a whole-prompt prefill
+        would have produced at those positions.  Masked entries carry
+        the ``max_seq_len`` sentinel position (dropped / trash-paged).
+        Returns (per-row logits at the window's last valid position,
+        updated caches).
+        """
+        cfg = self.cfg
+        nb, w = tokens.shape
+        mask = jnp.arange(w, dtype=jnp.int32)[None, :] < win_len[:, None]
+        tokens = jnp.where(mask, tokens, 0)  # canonical pad id
+        positions = starts[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+        positions = jnp.where(mask, positions, self.serve_cfg.max_seq_len)
+        logits, new_caches, _ = lm.forward(
+            params, cfg, {"tokens": tokens}, mode="extend",
+            caches=caches, positions=positions, kernel=self.kernel,
+        )
+        idx = jnp.maximum(win_len - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
         return last, new_caches
 
     def _decode_scan(self, params, tokens, positions, active, rem, eos,
@@ -293,9 +355,10 @@ class ModelExecutor:
     def execute(self, decision: ScheduleDecision) -> StepOutput:
         """Apply one :class:`ScheduleDecision`: reset preempted slots,
         activate admissions (prefix-skip slots immediately, prefill /
-        chunked slots through their bucket dispatches), then scan-decode
-        the decision's decode slots.  The scheduler already performed the
-        host-side page bookkeeping; nothing here chooses anything."""
+        chunked slots through their bucket dispatches), drain cache-
+        extend windows, then scan-decode the decision's decode slots.
+        The scheduler already performed the host-side page bookkeeping;
+        nothing here chooses anything."""
         tel = self.tel
         tel["steps"] += 1
         out = StepOutput(stats={"prefilled": 0, "decoded": 0})
@@ -308,18 +371,35 @@ class ModelExecutor:
             slot.admit_seq = adm.admit_seq
             slot.admit_gen = adm.admit_gen
             if adm.mode == MODE_SKIP:
-                # the shared pages hold every position < write_from; the
-                # remaining tail rides the decode scan teacher-forced —
-                # no prefill dispatch at all for this admission
+                # the shared pages hold every position < write_from; no
+                # prompt-prefill dispatch at all for this admission —
+                # the remaining tail replays per the admission's split
                 slot.active, slot.request = True, adm.request
                 slot.pos = adm.write_from
-                slot.last_token = adm.tokens[adm.write_from]
-                slot.pending = list(adm.tokens[adm.write_from + 1:])
+                self._activate_tail(slot, adm, adm.write_from)
                 out.stats["prefilled"] += 1
         for bucket, group in decision.prefill_groups.items():
             self._dispatch_prefill(bucket, group, out)
+        self._dispatch_extend(decision, out)
         self._run_decode(decision, out)
         return out
+
+    def _activate_tail(self, slot: Slot, adm: Admission, start: int) -> None:
+        """Split an admission's unwritten token tail per its
+        ``decode_from`` stamp: positions in [start, decode_from) replay
+        through the cache-extending prefill program, positions from
+        ``decode_from`` on teacher-force through the decode scan.  With
+        ``decode_from == start`` (the bit-exact datapaths' plan) the
+        whole tail rides the decode scan and the carry token is primed
+        immediately — the historical behavior, byte for byte."""
+        tail = list(adm.tokens[start:adm.decode_from])
+        pend = list(adm.tokens[adm.decode_from:])
+        if tail:
+            slot.prefill_tail = tail
+            slot.pending = pend
+        else:
+            slot.last_token = pend[0]
+            slot.pending = pend[1:]
 
     def release(self, idx: int) -> None:
         """Immediately free a resident slot's pages and execution state
@@ -382,20 +462,90 @@ class ModelExecutor:
                 )
                 slot.pos = len(adm.tokens)  # next write position
                 slot.last_token = nxt
-            else:  # MODE_CHUNKED: the tail teacher-forces through decode
+            else:  # MODE_CHUNKED: the tail replays per the admission split
                 slot.pos = adm.fill_len
-                slot.last_token = adm.tokens[adm.fill_len]
-                slot.pending = list(adm.tokens[adm.fill_len + 1:])
+                self._activate_tail(slot, adm, adm.fill_len)
             out.stats["prefilled"] += 1
             self._retire(adm.slot, out)
         tel["prefill_time_s"] += time.perf_counter() - t0
 
+    def _dispatch_extend(self, decision: ScheduleDecision, out: StepOutput):
+        """ONE fixed-shape dispatch draining every listed slot's prefill
+        tail by up to ``extend_width`` tokens through the cache-extending
+        prefill program.  A slot whose tail fully drains either hands off
+        to its teacher-forced pending (preemption resume: the generated
+        part replays through the decode math that originally wrote it) or
+        samples its first token from the window's last-position logits —
+        exactly the logits a whole-prompt prefill would have produced."""
+        work = [
+            i for i in decision.extend_slots
+            if self.slots[i].active and self.slots[i].prefill_tail
+        ]
+        if not work:
+            return
+        sc, tel = self.serve_cfg, self.tel
+        nb, w = sc.max_batch, self.extend_width
+        toks = np.zeros((nb, w), np.int32)
+        lens = np.zeros((nb,), np.int32)
+        starts = np.zeros((nb,), np.int32)
+        for i in work:
+            slot = self.slots[i]
+            n = min(len(slot.prefill_tail), w)
+            toks[i, :n] = slot.prefill_tail[:n]
+            lens[i] = n
+            starts[i] = slot.pos
+            # grow pages over the write range; shared pages overlapping
+            # it are copy-on-write replaced before the scatter
+            self.cache_mgr.ensure(i, slot.pos + n, write_from=slot.pos)
+        self.caches = self.cache_mgr.flush_copies(self.caches)
+        self.caches = self.cache_mgr.write_table(self.caches)
+        if tel["extend_compiles"] == 0:
+            tel["extend_compiles"] = 1  # one program, fixed shapes
+        t0 = time.perf_counter()
+        last, self.caches = self._extend_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(starts), self.caches,
+        )
+        tel["extend_dispatches"] += 1
+        self.key, sub = jax.random.split(self.key)
+        first_tokens = np.asarray(
+            sample(last, sub, temperature=sc.temperature)
+        )
+        for i in work:
+            slot = self.slots[i]
+            n = int(lens[i])
+            del slot.prefill_tail[:n]
+            slot.pos += n
+            if slot.prefill_tail:
+                continue  # another window next step
+            if slot.pending:
+                # resume handoff: the generated part teacher-forces
+                # through the decode scan from here
+                slot.last_token = slot.pending.pop(0)
+            else:
+                nxt = int(first_tokens[i])
+                slot.request.generated.append(nxt)
+                tel["tokens_generated"] += 1
+                out.tokens.append(
+                    (slot.request.uid, nxt, len(slot.request.generated) - 1)
+                )
+                slot.last_token = nxt
+            # window-written full pages hold prefill-path content — as
+            # shareable as a bucket dispatch's, on every datapath
+            self.cache_mgr.register_filled(
+                i, slot.request.resume_tokens, slot.pos
+            )
+            self._retire(i, out)
+        tel["extend_time_s"] += time.perf_counter() - t0
+
     def _run_decode(self, decision: ScheduleDecision, out: StepOutput):
         """Scan-decode the decision's decode slots (per-slot active masks;
-        slots outside the decision freeze for this dispatch)."""
+        slots outside the decision freeze for this dispatch; a slot still
+        draining a prefill tail is not ready to decode)."""
         sc, tel = self.serve_cfg, self.tel
         decode_set = {
-            i for i in decision.decode_slots if self.slots[i].active
+            i for i in decision.decode_slots
+            if self.slots[i].active and not self.slots[i].prefill_tail
         }
         if not decode_set:
             return

@@ -405,6 +405,69 @@ def paged_decode_write(
     return out
 
 
+def dense_window_write(
+    cache: dict, updates: dict[str, jax.Array], positions: jax.Array
+) -> dict:
+    """Scatter a token *window* per slot into a dense per-layer cache.
+
+    The cache-extending prefill program's write primitive: where
+    :func:`paged_decode_write` lands one token per slot,
+    this lands a contiguous window of ``W`` tokens at arbitrary
+    per-row offsets.  ``updates``: leaf name -> per-slot windows
+    (k/v: (B, Hkv, W, D); scales: (B, Hkv, W); latent: (B, W, width);
+    latent_scale: (B, W)).  ``positions``: (B, W) global write
+    positions; masked entries carry an out-of-range sentinel
+    (>= cache length) and are dropped by the scatter.
+    """
+    out = dict(cache)
+    b = positions.shape[0]
+    for name, val in updates.items():
+        buf = cache[name]
+        if name in _HEAD_MAJOR_POOLS:
+            bi = jnp.arange(b)[:, None, None]
+            hi = jnp.arange(buf.shape[1])[None, :, None]
+            out[name] = buf.at[bi, hi, positions[:, None, :]].set(
+                val.astype(buf.dtype), mode="drop"
+            )
+        else:
+            out[name] = buf.at[jnp.arange(b)[:, None], positions].set(
+                val.astype(buf.dtype), mode="drop"
+            )
+    return out
+
+
+def paged_window_write(
+    cache: dict, updates: dict[str, jax.Array], positions: jax.Array
+) -> dict:
+    """Scatter a token window per slot into physical pages.
+
+    Same update shapes and (B, W) ``positions`` contract as
+    :func:`dense_window_write`.  Each position routes through the page
+    table independently, so a window may straddle page boundaries.
+    Sentinel positions index past the table and are routed to the
+    reserved trash page (same write-sink convention as retired slots in
+    :func:`paged_decode_write`), so masked entries never alias live
+    data.
+    """
+    table = cache["page_table"]  # (B, pages_per_slot)
+    out = dict(cache)
+    for name, val in updates.items():
+        pool = cache[name]
+        ps = _pool_page_size(name, pool)
+        phys = jnp.take_along_axis(
+            table, positions // ps, axis=1,
+            mode="fill", fill_value=TRASH_PAGE,
+        )  # (B, W)
+        off = positions % ps
+        if name in _HEAD_MAJOR_POOLS:
+            # advanced-index axes lead the result: updates go (B, W, H[, D])
+            v = jnp.moveaxis(val, 2, 1)
+            out[name] = pool.at[phys, :, off].set(v.astype(pool.dtype))
+        else:
+            out[name] = pool.at[phys, off].set(val.astype(pool.dtype))
+    return out
+
+
 def paged_decode_view(cache: dict) -> dict[str, jax.Array]:
     """Gather each slot's pages into a contiguous logical view.
 

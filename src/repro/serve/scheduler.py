@@ -22,22 +22,33 @@ the client-facing one):
 
 The default :class:`FifoScheduler` reproduces the historical engine
 behavior exactly: FIFO admission grouped by prefill bucket,
-prefix-cache hit planning (prefill-skip on the bit-exact datapath,
-storage-only sharing elsewhere), youngest-first page-aware preemption —
-plus **chunked prefill**, the first policy the split unlocks
-(``ServeConfig.prefill_chunk``): a long prompt is admitted by
-prefilling only its first ``prefill_chunk`` tokens through the bucketed
-prefill program and teacher-forcing the remaining prompt tail through
-the decode scan, interleaved with resident decode steps.  Each step
-then stalls residents by at most a chunk-sized prefill instead of a
-full-prompt-sized one, and the compiled-program set stays at
-``len(prefill_buckets)`` prefill + 1 decode programs (test-enforced).
+prefix-cache hit planning (prefill-skip), youngest-first page-aware
+preemption, and **chunked prefill** (``ServeConfig.prefill_chunk``): a
+long prompt is admitted by prefilling only its first ``prefill_chunk``
+tokens through the bucketed prefill program and replaying the
+remaining prompt tail incrementally, interleaved with resident decode
+steps, so each step stalls residents by at most a chunk-sized dispatch
+instead of a full-prompt-sized one.
+
+Token replay picks whichever mechanism reproduces the cache's own
+math on the engine's datapath, stamped per admission as
+``decode_from``: positions before it ride the executor's
+cache-extending prefill program (prefill-path math), positions from it
+on teacher-force through the decode scan (decode-path math).
+Bit-exact datapaths (float GQA, exact softmax, reference kernel) plan
+``decode_from == write_from`` — the whole tail through the decode scan,
+the historical behavior; every other datapath (MLA, int8 KV, LUT
+softmax) replays prompt positions via cache-extend so skip / chunked /
+resume stay token-identical there too.  The compiled-program set stays
+at ``len(prefill_buckets)`` prefill + 1 decode programs, + 1 extend
+program on the datapaths that need it (test-enforced).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import TYPE_CHECKING, Protocol, runtime_checkable
 
 if TYPE_CHECKING:  # import-time dependency kept out of the policy layer
@@ -98,6 +109,11 @@ class Slot:
     #: scan (prefix-skip / chunked-prefill admissions); drained
     #: decode_steps at a time
     pending: list[int] = dataclasses.field(default_factory=list)
+    #: tokens still to be replayed through the cache-extending prefill
+    #: program before ``pending`` (non-bit-exact skip / chunked / resume
+    #: admissions); drained extend_width at a time, and the slot does
+    #: not decode until this is empty
+    prefill_tail: list[int] = dataclasses.field(default_factory=list)
     #: admission order stamp — preemption picks the youngest resident
     admit_seq: int = -1
     #: generated-token count at (re-)admission: a slot is only
@@ -119,8 +135,13 @@ MODE_CHUNKED = "chunked"  # first chunk through a bucket dispatch, tail forced
 class Admission:
     """One planned slot tenancy.  ``tokens`` is the effective prompt
     (original prompt + generated-so-far for a preemption resume);
-    ``fill_len`` of it rides the prefill dispatch (0 for prefix-skip),
-    positions >= ``write_from`` are written by decode steps."""
+    ``fill_len`` of it rides the prefill dispatch (0 for prefix-skip).
+    The unwritten tail splits at ``decode_from``: positions in
+    [``write_from``, ``decode_from``) replay through the cache-extending
+    prefill program, positions >= ``decode_from`` teacher-force through
+    the decode scan.  ``decode_from == write_from`` (bit-exact
+    datapaths) routes the whole tail through decode — the historical
+    plan."""
 
     slot: int
     request: Request
@@ -128,7 +149,8 @@ class Admission:
     mode: str  # MODE_PREFILL | MODE_SKIP | MODE_CHUNKED
     bucket: int  # padded dispatch length (0 for MODE_SKIP)
     fill_len: int  # prompt tokens the prefill dispatch computes
-    write_from: int  # first position filled through decode writes
+    write_from: int  # first position written after the prefill dispatch
+    decode_from: int  # first position replayed through the decode scan
     shared_pages: int  # leading prefix-cache pages mapped at admit()
     admit_seq: int
     admit_gen: int
@@ -159,8 +181,12 @@ class ScheduleDecision:
     #: ascending bucket order (MODE_SKIP admissions never appear here)
     prefill_groups: dict[int, list[Admission]] = dataclasses.field(default_factory=dict)
     #: slots that run the decode scan this step (residents surviving
-    #: preemption + this step's admissions)
+    #: preemption + this step's admissions; the executor holds back any
+    #: slot still draining a prefill tail)
     decode_slots: list[int] = dataclasses.field(default_factory=list)
+    #: slots with cache-extend replay work this step (non-empty
+    #: ``prefill_tail`` residents + admissions planning one)
+    extend_slots: list[int] = dataclasses.field(default_factory=list)
     #: register decode-completed full pages in the prefix index (only
     #: sound on the bit-exact datapath, where decode-written KV is
     #: bitwise what a prefill of the same tokens would write)
@@ -179,10 +205,15 @@ class ExecutorCaps:
     bucketable: bool  # position-addressed cache: right-padding is sound
     paged: bool  # block-table page pool (vs dense slot slabs)
     #: decode-path forward bitwise identical to prefill-path forward
-    #: (float GQA, exact softmax, jnp reference) — the predicate behind
-    #: prefill-skip, preemption-resume, and chunked prefill
+    #: (float GQA, exact softmax, reference kernel) — lets prompt
+    #: positions replay through the decode scan
     bit_exact: bool
     prefix_cache: bool  # prefix index live (paged + kv_prefix_cache)
+    #: cache-extending prefill program available — lets prompt positions
+    #: replay with prefill-path math on any datapath, so prefill-skip,
+    #: preemption-resume, and chunked prefill no longer require
+    #: ``bit_exact``
+    cache_extend: bool = False
 
 
 @runtime_checkable
@@ -220,25 +251,75 @@ class FifoScheduler:
         self.cache = cache
         self.queue: list[Request] = []
         self._admit_seq = 0
+        if serve_cfg.prefill_chunk is not None and not caps.bucketable:
+            raise ValueError(
+                "prefill_chunk requires a bucketable (position-addressed) "
+                "cache; SSM/hybrid state and rolling sliding-window "
+                "buffers admit exact-length prompts only"
+            )
+        #: requested knobs the engine cannot honor, surfaced in telemetry
+        #: (and warned once) instead of being silently swallowed
+        disabled: list[str] = []
+
+        def _disable(feature: str, reason: str) -> None:
+            disabled.append(f"{feature}: {reason}")
+            warnings.warn(
+                f"serving knob {feature} is disabled on this engine: "
+                f"{reason}",
+                RuntimeWarning,
+                stacklevel=4,
+            )
+
+        #: token replay on prompt positions must reproduce the cache's
+        #: own math: either the decode scan is bitwise the prefill
+        #: (bit_exact) or the executor offers the cache-extending
+        #: prefill program (cache_extend) — this picks the mechanism
+        self.extend_replay = caps.cache_extend and not caps.bit_exact
+        replayable = caps.bit_exact or caps.cache_extend
         #: prefix hits skip the prefill dispatch (vs storage-only sharing)
-        self.prefix_skip = caps.bit_exact and caps.prefix_cache
+        self.prefix_skip = caps.prefix_cache and replayable
+        if serve_cfg.kv_prefix_cache and not caps.prefix_cache:
+            _disable(
+                "kv_prefix_cache",
+                "prefix sharing needs the paged layout on a "
+                "position-addressed cache (kv_layout='paged')",
+            )
+        elif caps.prefix_cache and not self.prefix_skip:
+            _disable(
+                "kv_prefix_cache (prefill-skip)",
+                "hits dedup page storage only: the datapath is not "
+                "bit-exact and the cache-extending prefill program is "
+                "unavailable (Pallas kernel or cache_extend=False)",
+            )
         #: page-aware preemption instead of FIFO head-of-line blocking
         self.preempt_enabled = (
-            caps.paged and serve_cfg.kv_preemption and caps.bit_exact
+            caps.paged and serve_cfg.kv_preemption and replayable
         )
-        #: chunked prefill: replaying prompt positions through the decode
-        #: scan must be bitwise the prefill computation, and the chunk
-        #: dispatch must reuse a bucketed program
+        if serve_cfg.kv_preemption and not self.preempt_enabled:
+            _disable(
+                "kv_preemption",
+                "preemption needs the paged layout and a datapath that "
+                "can replay a resume's prompt (bit-exact decode or the "
+                "cache-extending prefill program)",
+            )
+        #: chunked prefill: the chunk dispatch must reuse a bucketed
+        #: program, and the prompt tail must be replayable
         self.chunk_len = (
             serve_cfg.prefill_chunk
             if (
                 serve_cfg.prefill_chunk is not None
-                and caps.bit_exact
-                and caps.bucketable
+                and replayable
                 and caps.buckets
             )
             else None
         )
+        if serve_cfg.prefill_chunk is not None and self.chunk_len is None:
+            _disable(
+                "prefill_chunk",
+                "chunk-tail replay needs prefill buckets and a datapath "
+                "that can replay prompt positions (bit-exact decode or "
+                "the cache-extending prefill program)",
+            )
         if self.chunk_len is not None:
             if self.chunk_len < 1:
                 raise ValueError(
@@ -260,6 +341,8 @@ class FifoScheduler:
             # prompt tokens whose pages were deduped by a prefix hit on
             # the storage-only path (recomputed, but no pages written)
             "prefix_tokens_shared": 0,
+            # requested-but-unhonorable knobs ("feature: reason")
+            "disabled_features": disabled,
         }
 
     # ------------------------------------------------------------ queue --
@@ -342,13 +425,24 @@ class FifoScheduler:
         the bit-exact datapath) or block the head until finished slots
         return pages (no reordering, no starvation either way)."""
         sc = self.serve_cfg
-        decision = ScheduleDecision(register_decoded=self.prefix_skip)
+        # decode-written pages are only registerable in the prefix index
+        # on the bit-exact datapath (elsewhere their content is decode
+        # math, not what a prefill of the same tokens would write)
+        decision = ScheduleDecision(
+            register_decoded=self.prefix_skip and self.caps.bit_exact
+        )
         cap = sc.max_prefill_per_step or sc.max_batch
         free = [i for i, s in enumerate(slots) if not s.active]
         n_admitted = 0
         while self.queue and free and n_admitted < cap:
             head = self.queue[0]
             seq = head.resume_tokens
+            resume = bool(head.generated)
+            # a preemption resume on the cache-extend path splits: the
+            # prompt part replays with prefill math, the generated part
+            # must replay through the decode scan (the math that wrote
+            # those positions in the baseline stream)
+            split = self.extend_replay and resume
             # reserve worst-case pages (prompt + generation budget) so
             # decode growth can never exhaust the pool mid-run; pages
             # still allocate lazily as the sequence actually grows.  A
@@ -356,19 +450,34 @@ class FifoScheduler:
             # when the first write lands inside a shared page).
             reserve_len = self._reserve_len(head)
             match = self.cache.match_prefix(seq)
+            if match and split:
+                # index pages hold prefill-path content; a split resume
+                # may only share pages fully inside its original prompt
+                keep = len(head.prompt) // self.cache.page_size
+                if len(match.pages) > keep:
+                    match = type(match)(
+                        match.pages[:keep], match.keys[:keep],
+                        keep * self.cache.page_size,
+                    )
             skip = bool(match) and self.prefix_skip and len(seq) > 1
             # chunked prefill only applies where no prefix pages cover the
-            # prompt (a hit on this datapath always skips instead)
+            # prompt (a hit always skips instead); a split resume without
+            # a hit also admits chunked — its prefill dispatch may cover
+            # at most the original prompt
             chunked = (
                 not skip
                 and not match
-                and self.chunk_len is not None
-                and len(seq) > self.chunk_len
+                and (
+                    (self.chunk_len is not None and len(seq) > self.chunk_len)
+                    or split
+                )
             )
             if skip:
                 write_from = min(match.tokens, len(seq) - 1)
             elif chunked:
-                write_from = self.chunk_len
+                write_from = len(head.prompt) if split else self.chunk_len
+                if self.chunk_len is not None:
+                    write_from = min(write_from, self.chunk_len)
             else:
                 write_from = len(seq)
             need = self.cache.admission_need(match, reserve_len, write_from)
@@ -391,25 +500,37 @@ class FifoScheduler:
                 idx, seq, reserve_len,
                 match=match, lazy_tail=skip or chunked,
                 write_from=write_from,
-                fill_len=self.chunk_len if chunked else None,
+                fill_len=write_from if chunked else None,
             )
             if skip:
                 mode, bucket, fill_len = MODE_SKIP, 0, 0
                 self.stats["prefill_tokens_saved"] += write_from
             elif chunked:
                 mode = MODE_CHUNKED
-                fill_len = self.chunk_len
+                fill_len = write_from
                 bucket = self.bucket_for(fill_len)
             else:
                 mode = MODE_PREFILL
                 fill_len = len(seq)
                 bucket = self.bucket_for(fill_len)
                 self.stats["prefix_tokens_shared"] += match.tokens if match else 0
+            # where the unwritten tail switches from cache-extend replay
+            # to decode-scan replay: everywhere on the legacy (bit-exact)
+            # plan; past the original prompt for a split resume; past the
+            # whole sequence for a fresh extend-path admission (the last
+            # window's logits sample the first token, exactly as a
+            # whole-prompt prefill dispatch would)
+            if mode == MODE_PREFILL or not self.extend_replay:
+                decode_from = write_from if mode != MODE_PREFILL else len(seq)
+            elif resume:
+                decode_from = max(write_from, len(head.prompt))
+            else:
+                decode_from = len(seq)
             adm = Admission(
                 slot=idx, request=req, tokens=tuple(seq), mode=mode,
                 bucket=bucket, fill_len=fill_len, write_from=write_from,
-                shared_pages=shared, admit_seq=self._admit_seq,
-                admit_gen=len(req.generated),
+                decode_from=decode_from, shared_pages=shared,
+                admit_seq=self._admit_seq, admit_gen=len(req.generated),
             )
             decision.admissions.append(adm)
             if mode != MODE_SKIP:
@@ -419,5 +540,17 @@ class FifoScheduler:
         decision.decode_slots = sorted(
             {i for i, s in enumerate(slots) if s.active and i not in preempted}
             | {a.slot for a in decision.admissions}
+        )
+        decision.extend_slots = sorted(
+            {
+                i for i, s in enumerate(slots)
+                if s.active and s.prefill_tail and i not in preempted
+            }
+            | {
+                a.slot for a in decision.admissions
+                if a.decode_from > (
+                    a.write_from if a.mode == MODE_SKIP else a.fill_len
+                )
+            }
         )
         return decision

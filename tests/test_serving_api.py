@@ -409,22 +409,29 @@ def test_chunked_prefill_jit_budget(cfg, params):
     assert eng.telemetry["decode_compiles"] == 1
 
 
-def test_chunked_gated_off_on_non_bit_exact_datapaths():
-    """MLA's decode path is ~1ulp off prefill: chunking must silently
-    stay off there (whole-prompt prefill, tokens unchanged)."""
+def test_chunked_live_on_non_bit_exact_datapaths():
+    """MLA's decode path is ~1ulp off prefill, so chunking used to be
+    silently gated off there.  The cache-extending prefill program runs
+    later chunks through prefill math against the populated cache, so
+    chunking now activates for real — and the tokens stay identical to
+    the whole-prompt engine."""
     acfg = configs.get_config("minicpm3-4b", reduced=True)
     aparams = lm.init_params(acfg, KEY)
     base = dict(max_batch=2, max_seq_len=64, decode_steps=3,
                 prefill_buckets=(8, 32))
     eng = Engine(acfg, aparams, ServeConfig(**base, prefill_chunk=8))
-    assert eng.scheduler.chunk_len is None
+    assert eng.scheduler.chunk_len == 8
     h = eng.submit(list(range(1, 20)), max_new_tokens=5)
     got = eng.generate()[h.uid].generated
     ref_eng = Engine(acfg, aparams, ServeConfig(**base))
     hr = ref_eng.submit(list(range(1, 20)), max_new_tokens=5)
     assert ref_eng.generate()[hr.uid].generated == got
-    # the full prompt length's bucket compiled (no chunking happened)
-    assert 32 in eng.executor._prefill_fn
+    # later chunks rode the extend program, not a whole-prompt bucket
+    assert eng.telemetry["extend_dispatches"] >= 1
+    assert 32 not in eng.executor._prefill_fn
+    assert "prefill_chunk" not in " ".join(
+        eng.telemetry["disabled_features"]
+    )
 
 
 def test_chunk_must_fit_a_bucket(cfg, params):
