@@ -6,6 +6,7 @@
     kernel_micro        <-> per-kernel validation
     roofline_table      <-> EXPERIMENTS.md §Roofline (from the dry-run cache)
     serving_throughput  <-> engine v2 tokens/s (batch x bucket x decode_steps)
+    matrix              <-> configs x policies x layouts x ablations grid
 
 Prints ``name,us_per_call,derived`` style CSV blocks per benchmark.
 """
@@ -21,6 +22,7 @@ def main() -> None:
         auc_vs_bits,
         kernel_micro,
         latency_tables,
+        matrix,
         resources,
         roofline_table,
         serving_throughput,
@@ -33,6 +35,7 @@ def main() -> None:
         ("auc_vs_bits", auc_vs_bits.run),
         ("roofline_table", roofline_table.run),
         ("serving_throughput", serving_throughput.run),
+        ("matrix", matrix.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failures = 0

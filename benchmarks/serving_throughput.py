@@ -24,6 +24,19 @@ enabled, and the derived column gains
 ``prefix_hit_rate=<hits/queries>;prefill_tokens_saved=<tokens never
 recomputed>;preemptions=<count>``.
 
+``--workload poisson`` replaces the submit-everything closed loop with a
+seeded open-loop arrival process (serve/workloads.py): requests arrive
+on a virtual engine clock paced by measured step wall time, optionally
+carrying deadlines (``--deadline-ms``), and the derived column gains
+``miss_rate``/``deadline_dropped``.  With ``--scheduler edf`` the sweep
+measures the SLO policy instead of FIFO.
+
+``--trace-phases`` turns on the per-step phase tracer
+(serve/phases.py); the derived column gains ``ph_<phase>_p50``/``_p95``
+millisecond columns for schedule / host_prep / dispatch / device /
+sample.  Fencing serializes dispatch, so tok/s measured with tracing on
+is an instrumented number — compare like with like.
+
 CSV rows: ``name,us_per_call,derived`` where ``us_per_call`` is mean
 microseconds per generated token and ``derived`` packs
 ``tok_s=<tokens/s>;prefill_compiles=<n>;decode_compiles=<n>;``
@@ -39,7 +52,7 @@ import numpy as np
 from repro import configs
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import lm
-from repro.serve import Engine
+from repro.serve import Engine, workloads
 
 
 def physics_scale_lm() -> ModelConfig:
@@ -90,8 +103,11 @@ def _stream_wave(eng: Engine, handles) -> tuple[list[float], list[float]]:
 def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
                policy=None, kv_layout="dense", workload="uniform",
                api="batch", n_requests=8, max_new=16, seed=0,
-               cache_extend=True):
+               cache_extend=True, scheduler="fifo", deadline_ms=None,
+               trace_phases=False):
     prefix_mode = workload == "prefix"
+    poisson_mode = workload == "poisson"
+    clock = workloads.StepClock() if poisson_mode else None
     eng = Engine(
         cfg, params,
         ServeConfig(
@@ -99,8 +115,10 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             prefill_buckets=buckets, decode_steps=decode_steps,
             policy=policy, kv_layout=kv_layout, kv_page_size=16,
             kv_prefix_cache=prefix_mode, kv_preemption=prefix_mode,
-            cache_extend=cache_extend,
+            cache_extend=cache_extend, scheduler=scheduler,
+            deadline_ms=deadline_ms, trace_phases=trace_phases,
         ),
+        clock=clock,
     )
     # prefix-heavy workload: one fixed detector-geometry-style preamble
     # (a whole page of it) shared by every request in every wave
@@ -110,6 +128,17 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
 
     def wave(wave_seed):
         import time
+        if poisson_mode:
+            events = workloads.poisson(
+                rate=200.0, n=n_requests, vocab_size=cfg.vocab_size,
+                seed=wave_seed, prompt_len=(3, 13),
+                max_new_tokens=max_new,
+                deadline_s=(
+                    None if deadline_ms is None else deadline_ms / 1e3
+                ),
+            )
+            rep = workloads.replay(eng, events)
+            return rep.host_wall_s, [], [], rep
         rng = np.random.default_rng(wave_seed)
         handles = []
         for _ in range(n_requests):
@@ -124,13 +153,13 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
         else:
             eng.generate()
             ttfts, gaps = [], []
-        return time.perf_counter() - t0, ttfts, gaps
+        return time.perf_counter() - t0, ttfts, gaps, None
 
     # warmup wave: same length distribution, so it compiles the full
     # bucket/decode program set — the measured wave is steady-state
     wave(seed)
     tokens_before = eng.telemetry["tokens_generated"]
-    wall_s, ttfts, gaps = wave(seed + 1)
+    wall_s, ttfts, gaps, rep = wave(seed + 1)
     tel = eng.telemetry
     toks = tel["tokens_generated"] - tokens_before
     us_per_tok = wall_s / max(toks, 1) * 1e6
@@ -158,6 +187,19 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             f";preemptions={tel['preemptions']}"
             f";extend_dispatches={tel['extend_dispatches']}"
         )
+    if rep is not None:
+        derived += (
+            f";completed={rep.completed}"
+            f";deadline_dropped={rep.dropped}"
+            f";miss_rate={rep.miss_rate:.2f}"
+        )
+    if trace_phases:
+        for ph, s in tel["phases"].items():
+            if isinstance(s, dict):
+                derived += (
+                    f";ph_{ph}_p50={s['p50_ms']:.2f}"
+                    f";ph_{ph}_p95={s['p95_ms']:.2f}"
+                )
     return (
         f"serving_throughput,{name},b{max_batch},ds{decode_steps},"
         f"{us_per_tok:.1f},{derived}"
@@ -166,7 +208,9 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
 
 def run(policy: str | None = None, kv_layout: str = "dense",
         workload: str = "uniform", api: str = "batch",
-        cache_extend: bool = True) -> list[str]:
+        cache_extend: bool = True, scheduler: str = "fifo",
+        deadline_ms: float | None = None,
+        trace_phases: bool = False) -> list[str]:
     if workload == "prefix" and kv_layout == "dense":
         kv_layout = "paged"  # sharing needs pages; dense would be inert
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
@@ -186,7 +230,9 @@ def run(policy: str | None = None, kv_layout: str = "dense",
                         max_batch=max_batch, buckets=buckets,
                         decode_steps=decode_steps, policy=arch_policy,
                         kv_layout=kv_layout, workload=workload, api=api,
-                        cache_extend=cache_extend,
+                        cache_extend=cache_extend, scheduler=scheduler,
+                        deadline_ms=deadline_ms,
+                        trace_phases=trace_phases,
                     )
                 )
     return rows
@@ -215,24 +261,64 @@ def _rows_to_records(rows: list[str]) -> list[dict]:
     return records
 
 
+def _git_rev() -> str:
+    """Short hash of the checkout a record was taken at (best effort —
+    a trajectory entry must stay writable outside a git checkout)."""
+    import os
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def load_trajectory(path: str) -> list[dict]:
+    """Read a BENCH_serving.json trajectory: a list of run entries,
+    oldest first.  A legacy single-dict artifact (the pre-trajectory
+    before/after schema) is wrapped as the list's first entry so old
+    baselines keep their place in the history."""
+    import json
+    import os
+
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    return [doc] if isinstance(doc, dict) else list(doc)
+
+
 def record_trajectory(path: str, **run_kw) -> dict:
-    """Write a BENCH_serving.json trajectory artifact: the same sweep
-    with the cache-extending prefill program off (``before`` — the old
-    bit-exact-gated behavior) and on (``after``), so the trajectory
-    shows chunked prefill / prefix-skip / preemption savings becoming
-    real on quantized datapaths instead of storage-only dedup."""
+    """Append one timestamped run entry to the BENCH_serving.json
+    trajectory (never overwrites: the file is a list of runs, each
+    stamped with git rev + UTC date + the sweep args, so the perf
+    history accumulates across PRs).  Each entry still carries the
+    cache-extend off/on sweep as ``before``/``after`` — the
+    within-entry ablation the trajectory was built around."""
+    import datetime
     import json
 
-    doc = {
+    entry = {
         "bench": "serving_throughput",
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "git_rev": _git_rev(),
         "args": {k: v for k, v in run_kw.items()},
         "before": _rows_to_records(run(cache_extend=False, **run_kw)),
         "after": _rows_to_records(run(cache_extend=True, **run_kw)),
     }
+    history = load_trajectory(path)
+    history.append(entry)
     with open(path, "w") as f:
-        json.dump(doc, f, indent=2)
+        json.dump(history, f, indent=2)
         f.write("\n")
-    return doc
+    return entry
 
 
 def main():
@@ -252,33 +338,52 @@ def main():
                          "(batch) or Engine.stream (per-token events; adds "
                          "ttft/itl p50/p95 columns)")
     ap.add_argument("--workload", default="uniform",
-                    choices=("uniform", "prefix"),
-                    help="request stream: uniform random prompts, or "
+                    choices=("uniform", "prefix", "poisson"),
+                    help="request stream: uniform random prompts, "
                          "prefix-heavy (shared preamble; enables the "
                          "prefix cache + preemption and reports hit rate "
-                         "/ prefill tokens saved / preemption count)")
+                         "/ prefill tokens saved / preemption count), or "
+                         "poisson (seeded open-loop arrivals on a virtual "
+                         "engine clock via serve/workloads.py; --api is "
+                         "ignored, the replay driver consumes results)")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=("fifo", "edf"),
+                    help="admission policy for the swept engines")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request completion budget; with "
+                         "--workload poisson the derived column gains "
+                         "miss_rate / deadline_dropped")
+    ap.add_argument("--trace-phases", action="store_true",
+                    help="per-step phase tracing; derived gains "
+                         "ph_<phase>_p50/_p95 ms columns (fenced — an "
+                         "instrumented number, compare like with like)")
     ap.add_argument("--no-cache-extend", action="store_true",
                     help="disable the cache-extending prefill program "
                          "(pre-extend behavior: skip/chunk/preempt gated "
                          "to bit-exact datapaths)")
     ap.add_argument("--record", default=None, metavar="PATH",
-                    help="write a before/after (cache-extend off/on) "
-                         "trajectory artifact to PATH as JSON instead of "
-                         "printing one CSV sweep")
+                    help="append a timestamped before/after (cache-extend "
+                         "off/on) run entry to the JSON trajectory at "
+                         "PATH instead of printing one CSV sweep")
     args = ap.parse_args()
     t0 = time.time()
     if args.record:
-        doc = record_trajectory(
+        entry = record_trajectory(
             args.record, policy=args.policy, kv_layout=args.kv_layout,
             workload=args.workload, api=args.api,
+            scheduler=args.scheduler, deadline_ms=args.deadline_ms,
         )
-        saved = [r.get("prefill_tokens_saved", 0) for r in doc["after"]]
-        print(f"# wrote {args.record}; "
+        saved = [r.get("prefill_tokens_saved", 0) for r in entry["after"]]
+        n = len(load_trajectory(args.record))
+        print(f"# appended run {entry['git_rev']}@{entry['date']} to "
+              f"{args.record} ({n} entries); "
               f"after prefill_tokens_saved={saved}")
     else:
         rows = run(policy=args.policy, kv_layout=args.kv_layout,
                    workload=args.workload, api=args.api,
-                   cache_extend=not args.no_cache_extend)
+                   cache_extend=not args.no_cache_extend,
+                   scheduler=args.scheduler, deadline_ms=args.deadline_ms,
+                   trace_phases=args.trace_phases)
         for row in rows:
             print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")

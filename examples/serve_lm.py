@@ -112,6 +112,19 @@ def main():
               f"(+{tel['prefix_tokens_shared']} shared-storage) | "
               f"{tel['cow_copies']} CoW copies | "
               f"{tel['preemptions']} preemptions")
+    if args.scheduler == "edf" or args.deadline_ms is not None:
+        print(f"slo: scheduler={args.scheduler} | "
+              f"{tel['deadline_requests']} deadlined requests, "
+              f"{tel['deadline_missed']} missed "
+              f"({tel['deadline_dropped']} dropped)")
+    if tel["phases"]:
+        print("phases (ms):")
+        for name, s in tel["phases"].items():
+            if not isinstance(s, dict):
+                continue
+            print(f"  {name:>10}: p50 {s['p50_ms']:7.2f} | "
+                  f"p95 {s['p95_ms']:7.2f} | p99 {s['p99_ms']:7.2f} | "
+                  f"total {s['total_s']:.2f}s over {s['n']} steps")
     if not args.stream:
         for h in handles[:3]:
             r = results[h.uid]

@@ -324,6 +324,40 @@ class ServeConfig:
     # legacy bit-exact gating.  Disable to restore the pre-extend
     # behavior (quantized datapaths silently skip the optimizations).
     cache_extend: bool = True
+    # --- SLO-aware scheduling (serve/slo.py DeadlineScheduler) ---
+    # Scheduling policy the engine builds when no explicit
+    # ``scheduler_factory`` is passed.  "fifo": the historical
+    # FifoScheduler.  "edf": earliest-deadline-first — the queue is
+    # kept sorted by each request's absolute deadline (deadline-less
+    # requests run FIFO behind every deadlined one), preemption picks
+    # the least-urgent resident, and ``overdue_policy`` decides what
+    # happens to a request whose deadline passes while it is still
+    # queued.  True to the paper's hard-real-time physics-trigger
+    # context, where past-deadline work is worthless.
+    scheduler: Literal["fifo", "edf"] = "fifo"
+    # Default per-request deadline in milliseconds, measured from
+    # submit time; a request submitted without an explicit
+    # ``deadline_s`` inherits it.  None = requests carry no deadline
+    # unless they ask for one.
+    deadline_ms: float | None = None
+    # What the EDF scheduler does with a *queued* request whose deadline
+    # already passed: "drop" removes it (the client streams a terminal
+    # event with finish_reason="deadline" and its capacity is spent on
+    # feasible work), "demote" moves it behind every still-feasible
+    # request, "ignore" leaves pure EDF order.  Residents past deadline
+    # always run to completion (counted as misses, never corrupted).
+    overdue_policy: Literal["drop", "demote", "ignore"] = "drop"
+    # --- step-phase tracing (serve/phases.py PhaseTracer) ---
+    # Break each engine step into schedule / host_prep / dispatch /
+    # device / sample timings (device time isolated by fencing every
+    # dispatch with block_until_ready).  Off by default: the fenced
+    # path serializes host and device work, so production throughput
+    # measurements must opt in deliberately.  Per-step records land in
+    # a ring buffer; p50/p95/p99 summaries under
+    # ``Engine.telemetry["phases"]``.
+    trace_phases: bool = False
+    # Per-step records retained by the tracer's ring buffer.
+    phase_ring: int = 512
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """Prefill buckets, ascending.  Auto mode: powers of two in

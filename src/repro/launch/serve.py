@@ -96,6 +96,16 @@ def main():
               f"{tel['cow_copies']} CoW copies, "
               f"{tel['page_evictions']} evictions | "
               f"{tel['preemptions']} preemptions")
+    if args.scheduler == "edf" or args.deadline_ms is not None:
+        print(f"slo: scheduler={args.scheduler} | "
+              f"{tel['deadline_requests']} deadlined requests, "
+              f"{tel['deadline_missed']} missed "
+              f"({tel['deadline_dropped']} dropped)")
+    if tel["phases"]:
+        print("phases (ms): " + " | ".join(
+            f"{name} p50 {s['p50_ms']:.2f} / p95 {s['p95_ms']:.2f}"
+            for name, s in tel["phases"].items() if isinstance(s, dict)
+        ))
 
 
 if __name__ == "__main__":

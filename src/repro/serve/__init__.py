@@ -11,7 +11,24 @@ from repro.serve.scheduler import (  # noqa: F401
     Scheduler,
     Slot,
 )
+from repro.serve.slo import DeadlineScheduler  # noqa: F401
 from repro.serve.executor import ModelExecutor, StepOutput  # noqa: F401
 from repro.serve.api import Engine, RequestHandle, TokenEvent  # noqa: F401
 from repro.serve.engine import ServingEngine  # noqa: F401  (deprecated shim)
 from repro.serve.sampling import SamplingParams, sample  # noqa: F401
+from repro.serve.phases import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    PhaseTracer,
+    make_tracer,
+)
+from repro.serve.workloads import (  # noqa: F401
+    ArrivalEvent,
+    ReplayReport,
+    StepClock,
+    load_trace,
+    poisson,
+    replay,
+    save_trace,
+    synchronous,
+)

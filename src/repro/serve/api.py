@@ -34,10 +34,14 @@ import time
 from collections.abc import Iterator
 from typing import Any, Callable
 
+import inspect
+
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.serve.executor import ModelExecutor
+from repro.serve.phases import make_tracer
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import FifoScheduler, Request, Scheduler
+from repro.serve.slo import DeadlineScheduler
 
 PyTree = Any
 
@@ -45,6 +49,29 @@ PyTree = Any
 FINISH_EOS = "eos"
 FINISH_LENGTH = "length"
 FINISH_CANCELLED = "cancelled"
+#: dropped past-deadline by the SLO scheduler (serve/slo.py); the
+#: terminal event carries no token (token == NO_TOKEN)
+FINISH_DEADLINE = "deadline"
+
+#: sentinel ``TokenEvent.token`` for a tokenless terminal event (a
+#: deadline drop is an answer — "this request will not be served" — not
+#: a generated token)
+NO_TOKEN = -1
+
+#: ServeConfig.scheduler name -> default policy class
+SCHEDULERS = {"fifo": FifoScheduler, "edf": DeadlineScheduler}
+
+
+def _accepts_clock(factory: Callable) -> bool:
+    """Whether a scheduler factory takes a ``clock`` keyword (built-ins
+    do; pre-existing custom factories keep the 3-argument contract)."""
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        return False
+    return "clock" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,8 +103,17 @@ class Engine:
     :class:`~repro.serve.executor.ModelExecutor`.
 
     ``scheduler_factory`` swaps the policy: it is called with
-    ``(serve_cfg, executor.caps, executor.cache_mgr)`` and must return a
-    :class:`~repro.serve.scheduler.Scheduler`.
+    ``(serve_cfg, executor.caps, executor.cache_mgr)`` — plus
+    ``clock=`` when its signature accepts one — and must return a
+    :class:`~repro.serve.scheduler.Scheduler`.  Without a factory,
+    ``ServeConfig.scheduler`` picks the policy ("fifo" or "edf").
+
+    ``clock`` is the engine's time source for every wait / deadline /
+    TokenEvent stamp (default ``time.perf_counter``).  Pass a
+    :class:`~repro.serve.workloads.StepClock` to run queueing and SLO
+    dynamics in deterministic simulation time; phase tracing
+    (``ServeConfig.trace_phases``) always measures real host/device
+    seconds regardless.
     """
 
     def __init__(
@@ -88,21 +124,47 @@ class Engine:
         kernel: dict | None = None,
         seed: int = 0,
         scheduler_factory: Callable[..., Scheduler] | None = None,
+        clock: Callable[[], float] | None = None,
     ):
         self.executor = ModelExecutor(
             cfg, params, serve_cfg, kernel=kernel, seed=seed
         )
         self.serve_cfg = self.executor.serve_cfg
-        factory = scheduler_factory or FifoScheduler
-        self.scheduler: Scheduler = factory(
-            self.serve_cfg, self.executor.caps, self.executor.cache_mgr
+        self.clock = clock if clock is not None else time.perf_counter
+        self._tracer = make_tracer(
+            self.serve_cfg.trace_phases, self.serve_cfg.phase_ring
         )
+        self.executor.tracer = self._tracer
+        if scheduler_factory is None:
+            try:
+                factory = SCHEDULERS[self.serve_cfg.scheduler]
+            except KeyError:
+                raise ValueError(
+                    f"unknown ServeConfig.scheduler "
+                    f"{self.serve_cfg.scheduler!r}; "
+                    f"expected one of {sorted(SCHEDULERS)}"
+                ) from None
+        else:
+            factory = scheduler_factory
+        args = (self.serve_cfg, self.executor.caps, self.executor.cache_mgr)
+        if _accepts_clock(factory):
+            self.scheduler: Scheduler = factory(*args, clock=self.clock)
+        else:  # older custom factories keep the 3-arg contract
+            self.scheduler = factory(*args)
         self._uid = 0
         self._requests: dict[int, Request] = {}
         self._finished: dict[int, Request] = {}
         self._finish_reason: dict[int, str] = {}
         self._events: dict[int, collections.deque[TokenEvent]] = {}
         self._run_tel: dict[str, float] = {}
+        #: SLO accounting over requests that carried a deadline —
+        #: engine-level so FIFO engines report misses too (the
+        #: EDF-vs-FIFO comparison needs both sides measured)
+        self._slo = {
+            "deadline_requests": 0,
+            "deadline_missed": 0,
+            "deadline_dropped": 0,
+        }
 
     # --------------------------------------------------------- lifecycle --
     def submit(
@@ -112,11 +174,18 @@ class Engine:
         *,
         max_new_tokens: int | None = None,
         eos_id: int | None = None,
+        deadline_s: float | None = None,
     ) -> RequestHandle:
         """Enqueue a prompt.  Per-request knobs ride a
         :class:`~repro.serve.sampling.SamplingParams` (or the keyword
         shortcuts); returns a handle for :meth:`stream` / :meth:`cancel`
-        / :meth:`result`."""
+        / :meth:`result`.
+
+        ``deadline_s`` is the request's completion budget in seconds
+        from now (engine clock); None inherits
+        ``ServeConfig.deadline_ms`` when set.  Deadlines are advisory
+        under FIFO (misses are counted in telemetry) and enforced by the
+        EDF policy (``ServeConfig.scheduler="edf"``)."""
         if params is None:
             params = SamplingParams(
                 max_new_tokens=16 if max_new_tokens is None else max_new_tokens,
@@ -133,10 +202,15 @@ class Engine:
                 f"prompt length {len(prompt)} >= max_seq_len "
                 f"{self.serve_cfg.max_seq_len}"
             )
-        now = time.perf_counter()
+        if deadline_s is None and self.serve_cfg.deadline_ms is not None:
+            deadline_s = self.serve_cfg.deadline_ms / 1e3
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        now = self.clock()
         req = Request(
             self._uid + 1, list(prompt), params.max_new_tokens, params.eos_id,
             created_at=now, submitted_at=now,
+            deadline_at=None if deadline_s is None else now + deadline_s,
         )
         cache = self.executor.cache_mgr
         need = cache.pages_for(
@@ -202,10 +276,14 @@ class Engine:
     def step(self) -> dict:
         """One engine iteration: ``scheduler.schedule`` then
         ``executor.execute``; route the step's emissions into per-request
-        event queues."""
-        decision = self.scheduler.schedule(self.executor.slots)
+        event queues, finish any past-deadline drops the policy reported,
+        and stamp SLO accounting."""
+        tr = self._tracer
+        tr.begin_step()
+        with tr.phase("schedule"):
+            decision = self.scheduler.schedule(self.executor.slots)
         out = self.executor.execute(decision)
-        now = time.perf_counter()
+        now = self.clock()
         finished_uids = {req.uid for req in out.finished}
         reasons = {
             req.uid: (
@@ -228,13 +306,37 @@ class Engine:
                 finish_reason=reasons[uid] if final else None,
             ))
         for req in out.finished:
+            req.finished_at = now
             self._finished[req.uid] = req
             self._finish_reason[req.uid] = reasons[req.uid]
+        # past-deadline drops: the scheduler removed them from its queue;
+        # they finish here with a tokenless terminal event so every
+        # consumer (stream / generate / result) sees an answered request
+        for req in decision.dropped:
+            req.finished_at = now
+            self._finished[req.uid] = req
+            self._finish_reason[req.uid] = FINISH_DEADLINE
+            self._events.setdefault(req.uid, collections.deque()).append(
+                TokenEvent(
+                    uid=req.uid, token=NO_TOKEN, index=len(req.generated),
+                    ts=now, finished=True, finish_reason=FINISH_DEADLINE,
+                )
+            )
+        for req in out.finished + decision.dropped:
+            if req.deadline_at is None:
+                continue
+            self._slo["deadline_requests"] += 1
+            dropped = self._finish_reason.get(req.uid) == FINISH_DEADLINE
+            self._slo["deadline_dropped"] += dropped
+            self._slo["deadline_missed"] += (
+                dropped or req.finished_at > req.deadline_at
+            )
         stats = out.stats
         stats.update(
             prefill_compiles=self.executor.tel["prefill_compiles"],
             decode_compiles=self.executor.tel["decode_compiles"],
         )
+        tr.end_step()
         return stats
 
     def stream(self, handle: RequestHandle | int) -> Iterator[TokenEvent]:
@@ -296,6 +398,9 @@ class Engine:
         self._run_tel["queue_wait_s_mean"] = (
             self.scheduler.stats["queue_wait_s_total"] / admitted
         )
+        self._run_tel["queue_wait_created_s_mean"] = (
+            self.scheduler.stats["queue_wait_created_s_total"] / admitted
+        )
         # finished requests emit no further events; dropping their
         # buffers keeps a wave-after-wave batch engine O(resident), not
         # O(tokens ever generated).  Open streams hold their own deque
@@ -313,6 +418,9 @@ class Engine:
         tel.update(self.scheduler.stats)
         tel.update(self.executor.cache_mgr.stats().as_dict())
         tel.update(self._run_tel)
+        tel.update(self._slo)
+        #: per-phase latency summary ({} unless ServeConfig.trace_phases)
+        tel["phases"] = self._tracer.summary()
         return tel
 
     def kv_stats(self) -> dict:

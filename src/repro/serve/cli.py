@@ -90,6 +90,24 @@ def add_serving_args(
                     help="consume requests through Engine.stream "
                          "(per-token events with TTFT) instead of the "
                          "batch Engine.generate wrapper")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=("fifo", "edf"),
+                    help="admission policy: fifo (arrival order) or edf "
+                         "(earliest-deadline-first, serve/slo.py)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default per-request completion budget in ms "
+                         "(engine clock); advisory under fifo (misses "
+                         "are counted), enforced under edf")
+    ap.add_argument("--overdue", default="drop",
+                    choices=("drop", "demote", "ignore"),
+                    help="edf policy for a queued request whose deadline "
+                         "passed: drop (finish_reason='deadline'), demote "
+                         "(run behind feasible work), or ignore")
+    ap.add_argument("--trace-phases", action="store_true",
+                    help="per-step phase tracing (schedule/host_prep/"
+                         "dispatch/device/sample) with device fencing; "
+                         "p50/p95/p99 land in Engine.telemetry['phases']. "
+                         "Off by default: fencing serializes dispatch")
     return ap
 
 
@@ -114,4 +132,8 @@ def config_from_args(args: argparse.Namespace, model_cfg) -> ServeConfig:
         kv_prefix_cache=args.kv_prefix_cache,
         kv_preemption=args.kv_preemption,
         cache_extend=not getattr(args, "no_cache_extend", False),
+        scheduler=getattr(args, "scheduler", "fifo"),
+        deadline_ms=getattr(args, "deadline_ms", None),
+        overdue_policy=getattr(args, "overdue", "drop"),
+        trace_phases=getattr(args, "trace_phases", False),
     )

@@ -38,6 +38,7 @@ from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import precision as precision_lib
 from repro.models import lm
 from repro.serve import kv_cache
+from repro.serve.phases import NULL_TRACER
 from repro.serve.sampling import sample
 from repro.serve.scheduler import (
     MODE_SKIP,
@@ -174,6 +175,11 @@ class ModelExecutor:
         self._extend_fn = (
             jax.jit(self._extend_batch) if self.cache_extend else None
         )
+        # Step-phase tracer (serve/phases.py), assigned by the Engine when
+        # ServeConfig.trace_phases is on.  The default NULL_TRACER is a
+        # shared no-op whose fence() never touches the device, so the
+        # untraced hot loop is byte-for-byte the historical one.
+        self.tracer = NULL_TRACER
         self.tel = {
             "tokens_generated": 0,
             "prefill_compiles": 0,
@@ -421,52 +427,57 @@ class ModelExecutor:
         first token from the dispatch's last-position logits; a chunk's
         logits predict a prompt token the request already has, so chunked
         rows activate with their teacher-forced tail instead."""
-        sc, tel = self.serve_cfg, self.tel
+        sc, tel, tr = self.serve_cfg, self.tel, self.tracer
         nb = sc.max_batch
-        toks = np.zeros((nb, bucket), np.int32)
-        lengths = np.zeros((nb,), np.int32)
-        slots_arr = np.full((nb,), nb, np.int32)
-        shared_arr = np.zeros((nb,), np.int32)
-        for row, adm in enumerate(group):
-            n = adm.fill_len
-            toks[row, :n] = adm.tokens[:n]
-            lengths[row] = n
-            slots_arr[row] = adm.slot
-            shared_arr[row] = adm.shared_pages
-        self.caches = self.cache_mgr.write_table(self.caches)
+        with tr.phase("host_prep"):
+            toks = np.zeros((nb, bucket), np.int32)
+            lengths = np.zeros((nb,), np.int32)
+            slots_arr = np.full((nb,), nb, np.int32)
+            shared_arr = np.zeros((nb,), np.int32)
+            for row, adm in enumerate(group):
+                n = adm.fill_len
+                toks[row, :n] = adm.tokens[:n]
+                lengths[row] = n
+                slots_arr[row] = adm.slot
+                shared_arr[row] = adm.shared_pages
+            self.caches = self.cache_mgr.write_table(self.caches)
         fn = self._prefill_fn.get(bucket)
         if fn is None:
             fn = jax.jit(self._prefill_batch)
             self._prefill_fn[bucket] = fn
             tel["prefill_compiles"] += 1
         t0 = time.perf_counter()
-        last, self.caches = fn(
-            self.params, jnp.asarray(toks), jnp.asarray(lengths),
-            self.caches, jnp.asarray(slots_arr), jnp.asarray(shared_arr),
-        )
+        with tr.phase("dispatch"):
+            last, self.caches = fn(
+                self.params, jnp.asarray(toks), jnp.asarray(lengths),
+                self.caches, jnp.asarray(slots_arr), jnp.asarray(shared_arr),
+            )
+        with tr.phase("device"):
+            tr.fence((last, self.caches))
         tel["prefill_dispatches"] += 1
         # one vectorized sample + one device->host transfer for the group
         self.key, sub = jax.random.split(self.key)
-        first_tokens = np.asarray(
-            sample(last[:len(group)], sub, temperature=sc.temperature)
-        )
-        for row, adm in enumerate(group):
-            slot = self.slots[adm.slot]
-            slot.active, slot.request = True, adm.request
-            if adm.emits_first_token:
-                nxt = int(first_tokens[row])
-                adm.request.generated.append(nxt)
-                tel["tokens_generated"] += 1
-                out.tokens.append(
-                    (adm.request.uid, nxt, len(adm.request.generated) - 1)
-                )
-                slot.pos = len(adm.tokens)  # next write position
-                slot.last_token = nxt
-            else:  # MODE_CHUNKED: the tail replays per the admission split
-                slot.pos = adm.fill_len
-                self._activate_tail(slot, adm, adm.fill_len)
-            out.stats["prefilled"] += 1
-            self._retire(adm.slot, out)
+        with tr.phase("sample"):
+            first_tokens = np.asarray(
+                sample(last[:len(group)], sub, temperature=sc.temperature)
+            )
+            for row, adm in enumerate(group):
+                slot = self.slots[adm.slot]
+                slot.active, slot.request = True, adm.request
+                if adm.emits_first_token:
+                    nxt = int(first_tokens[row])
+                    adm.request.generated.append(nxt)
+                    tel["tokens_generated"] += 1
+                    out.tokens.append(
+                        (adm.request.uid, nxt, len(adm.request.generated) - 1)
+                    )
+                    slot.pos = len(adm.tokens)  # next write position
+                    slot.last_token = nxt
+                else:  # MODE_CHUNKED: tail replays per the admission split
+                    slot.pos = adm.fill_len
+                    self._activate_tail(slot, adm, adm.fill_len)
+                out.stats["prefilled"] += 1
+                self._retire(adm.slot, out)
         tel["prefill_time_s"] += time.perf_counter() - t0
 
     def _dispatch_extend(self, decision: ScheduleDecision, out: StepOutput):
@@ -483,66 +494,72 @@ class ModelExecutor:
         ]
         if not work:
             return
-        sc, tel = self.serve_cfg, self.tel
+        sc, tel, tr = self.serve_cfg, self.tel, self.tracer
         nb, w = sc.max_batch, self.extend_width
-        toks = np.zeros((nb, w), np.int32)
-        lens = np.zeros((nb,), np.int32)
-        starts = np.zeros((nb,), np.int32)
-        for i in work:
-            slot = self.slots[i]
-            n = min(len(slot.prefill_tail), w)
-            toks[i, :n] = slot.prefill_tail[:n]
-            lens[i] = n
-            starts[i] = slot.pos
-            # grow pages over the write range; shared pages overlapping
-            # it are copy-on-write replaced before the scatter
-            self.cache_mgr.ensure(i, slot.pos + n, write_from=slot.pos)
-        self.caches = self.cache_mgr.flush_copies(self.caches)
-        self.caches = self.cache_mgr.write_table(self.caches)
+        with tr.phase("host_prep"):
+            toks = np.zeros((nb, w), np.int32)
+            lens = np.zeros((nb,), np.int32)
+            starts = np.zeros((nb,), np.int32)
+            for i in work:
+                slot = self.slots[i]
+                n = min(len(slot.prefill_tail), w)
+                toks[i, :n] = slot.prefill_tail[:n]
+                lens[i] = n
+                starts[i] = slot.pos
+                # grow pages over the write range; shared pages
+                # overlapping it are copy-on-write replaced pre-scatter
+                self.cache_mgr.ensure(i, slot.pos + n, write_from=slot.pos)
+            self.caches = self.cache_mgr.flush_copies(self.caches)
+            self.caches = self.cache_mgr.write_table(self.caches)
         if tel["extend_compiles"] == 0:
             tel["extend_compiles"] = 1  # one program, fixed shapes
         t0 = time.perf_counter()
-        last, self.caches = self._extend_fn(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(starts), self.caches,
-        )
+        with tr.phase("dispatch"):
+            last, self.caches = self._extend_fn(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(starts), self.caches,
+            )
+        with tr.phase("device"):
+            tr.fence((last, self.caches))
         tel["extend_dispatches"] += 1
         self.key, sub = jax.random.split(self.key)
-        first_tokens = np.asarray(
-            sample(last, sub, temperature=sc.temperature)
-        )
-        for i in work:
-            slot = self.slots[i]
-            n = int(lens[i])
-            del slot.prefill_tail[:n]
-            slot.pos += n
-            if slot.prefill_tail:
-                continue  # another window next step
-            if slot.pending:
-                # resume handoff: the generated part teacher-forces
-                # through the decode scan from here
-                slot.last_token = slot.pending.pop(0)
-            else:
-                nxt = int(first_tokens[i])
-                slot.request.generated.append(nxt)
-                tel["tokens_generated"] += 1
-                out.tokens.append(
-                    (slot.request.uid, nxt, len(slot.request.generated) - 1)
-                )
-                slot.last_token = nxt
-            # window-written full pages hold prefill-path content — as
-            # shareable as a bucket dispatch's, on every datapath
-            self.cache_mgr.register_filled(
-                i, slot.request.resume_tokens, slot.pos
+        with tr.phase("sample"):
+            first_tokens = np.asarray(
+                sample(last, sub, temperature=sc.temperature)
             )
-            self._retire(i, out)
+            for i in work:
+                slot = self.slots[i]
+                n = int(lens[i])
+                del slot.prefill_tail[:n]
+                slot.pos += n
+                if slot.prefill_tail:
+                    continue  # another window next step
+                if slot.pending:
+                    # resume handoff: the generated part teacher-forces
+                    # through the decode scan from here
+                    slot.last_token = slot.pending.pop(0)
+                else:
+                    nxt = int(first_tokens[i])
+                    slot.request.generated.append(nxt)
+                    tel["tokens_generated"] += 1
+                    out.tokens.append(
+                        (slot.request.uid, nxt,
+                         len(slot.request.generated) - 1)
+                    )
+                    slot.last_token = nxt
+                # window-written full pages hold prefill-path content —
+                # as shareable as a bucket dispatch's, on every datapath
+                self.cache_mgr.register_filled(
+                    i, slot.request.resume_tokens, slot.pos
+                )
+                self._retire(i, out)
         tel["extend_time_s"] += time.perf_counter() - t0
 
     def _run_decode(self, decision: ScheduleDecision, out: StepOutput):
         """Scan-decode the decision's decode slots (per-slot active masks;
         slots outside the decision freeze for this dispatch; a slot still
         draining a prefill tail is not ready to decode)."""
-        sc, tel = self.serve_cfg, self.tel
+        sc, tel, tr = self.serve_cfg, self.tel, self.tracer
         decode_set = {
             i for i in decision.decode_slots
             if self.slots[i].active and not self.slots[i].prefill_tail
@@ -550,100 +567,111 @@ class ModelExecutor:
         if not decode_set:
             return
         nb = sc.max_batch
-        forced = np.zeros((sc.decode_steps, nb), np.int32)
-        n_forced = np.zeros((nb,), np.int32)
-        for idx in sorted(decode_set):
-            slot = self.slots[idx]
-            nf = min(len(slot.pending), sc.decode_steps)
-            if nf:
-                forced[:nf, idx] = slot.pending[:nf]
-                n_forced[idx] = nf
-            # the scan advances at most min(decode_steps, forced
-            # tail + remaining budget) positions, so this never
-            # outgrows the pages reserved at admission; passing
-            # the write range lets the manager copy-on-write any
-            # shared page before the dispatch scatters into it
-            rem_i = max(
-                slot.request.max_new_tokens - len(slot.request.generated),
-                1,
+        with tr.phase("host_prep"):
+            forced = np.zeros((sc.decode_steps, nb), np.int32)
+            n_forced = np.zeros((nb,), np.int32)
+            for idx in sorted(decode_set):
+                slot = self.slots[idx]
+                nf = min(len(slot.pending), sc.decode_steps)
+                if nf:
+                    forced[:nf, idx] = slot.pending[:nf]
+                    n_forced[idx] = nf
+                # the scan advances at most min(decode_steps, forced
+                # tail + remaining budget) positions, so this never
+                # outgrows the pages reserved at admission; passing
+                # the write range lets the manager copy-on-write any
+                # shared page before the dispatch scatters into it
+                rem_i = max(
+                    slot.request.max_new_tokens - len(slot.request.generated),
+                    1,
+                )
+                self.cache_mgr.ensure(
+                    idx,
+                    min(slot.pos + min(sc.decode_steps, nf + rem_i),
+                        sc.max_seq_len),
+                    write_from=slot.pos,
+                )
+            self.caches = self.cache_mgr.flush_copies(self.caches)
+            self.caches = self.cache_mgr.write_table(self.caches)
+            tokens = np.asarray([s.last_token for s in self.slots], np.int32)
+            positions = np.asarray(
+                [s.pos if s.active else 0 for s in self.slots], np.int32
             )
-            self.cache_mgr.ensure(
-                idx,
-                min(slot.pos + min(sc.decode_steps, nf + rem_i),
-                    sc.max_seq_len),
-                write_from=slot.pos,
+            active = np.asarray(
+                [
+                    s.active and i in decode_set
+                    for i, s in enumerate(self.slots)
+                ],
+                bool,
             )
-        self.caches = self.cache_mgr.flush_copies(self.caches)
-        self.caches = self.cache_mgr.write_table(self.caches)
-        tokens = np.asarray([s.last_token for s in self.slots], np.int32)
-        positions = np.asarray(
-            [s.pos if s.active else 0 for s in self.slots], np.int32
-        )
-        active = np.asarray(
-            [s.active and i in decode_set for i, s in enumerate(self.slots)],
-            bool,
-        )
-        rem = np.asarray(
-            [
-                max(s.request.max_new_tokens - len(s.request.generated), 0)
-                if s.active and i in decode_set
-                else 0
-                for i, s in enumerate(self.slots)
-            ],
-            np.int32,
-        )
-        eos = np.asarray(
-            [
-                s.request.eos_id
-                if s.active and s.request.eos_id is not None
-                else -1
-                for s in self.slots
-            ],
-            np.int32,
-        )
+            rem = np.asarray(
+                [
+                    max(s.request.max_new_tokens - len(s.request.generated), 0)
+                    if s.active and i in decode_set
+                    else 0
+                    for i, s in enumerate(self.slots)
+                ],
+                np.int32,
+            )
+            eos = np.asarray(
+                [
+                    s.request.eos_id
+                    if s.active and s.request.eos_id is not None
+                    else -1
+                    for s in self.slots
+                ],
+                np.int32,
+            )
         self.key, sub = jax.random.split(self.key)
         if tel["decode_compiles"] == 0:
             tel["decode_compiles"] = 1  # one program, fixed shapes
         t0 = time.perf_counter()
-        toks_t, emit_t, tok_f, pos_f, act_f, self.caches = self._decode_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(active), jnp.asarray(rem), jnp.asarray(eos),
-            jnp.asarray(forced), jnp.asarray(n_forced),
-            self.caches, sub,
-        )
-        toks_t, emit_t = np.asarray(toks_t), np.asarray(emit_t)
-        tok_f = np.asarray(tok_f)
-        pos_f, act_f = np.asarray(pos_f), np.asarray(act_f)
-        tel["decode_time_s"] += time.perf_counter() - t0
-        for idx in sorted(decode_set):
-            slot = self.slots[idx]
-            if slot.pending:
-                del slot.pending[:int(n_forced[idx])]
-            for t in range(toks_t.shape[0]):
-                if not emit_t[t, idx]:
-                    continue
-                slot.request.generated.append(int(toks_t[t, idx]))
-                out.stats["decoded"] += 1
-                tel["tokens_generated"] += 1
-                out.tokens.append((
-                    slot.request.uid, int(toks_t[t, idx]),
-                    len(slot.request.generated) - 1,
-                ))
-            slot.pos = int(pos_f[idx])
-            slot.last_token = int(tok_f[idx])
-            if decision.register_decoded:
-                # decode-completed full pages become shareable too:
-                # their content is bit-exact with a prefill of the
-                # same tokens on this datapath
-                self.cache_mgr.register_filled(
-                    idx, slot.request.resume_tokens, slot.pos
+        with tr.phase("dispatch"):
+            toks_t, emit_t, tok_f, pos_f, act_f, self.caches = (
+                self._decode_fn(
+                    self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(active), jnp.asarray(rem), jnp.asarray(eos),
+                    jnp.asarray(forced), jnp.asarray(n_forced),
+                    self.caches, sub,
                 )
-            if not act_f[idx]:
-                out.finished.append(slot.request)
-                self.slots[idx] = Slot()
-                self.cache_mgr.free(idx)
-            else:
-                self._retire(idx, out)
+            )
+        with tr.phase("device"):
+            tr.fence((toks_t, emit_t, tok_f, pos_f, act_f, self.caches))
+        with tr.phase("sample"):
+            toks_t, emit_t = np.asarray(toks_t), np.asarray(emit_t)
+            tok_f = np.asarray(tok_f)
+            pos_f, act_f = np.asarray(pos_f), np.asarray(act_f)
+        tel["decode_time_s"] += time.perf_counter() - t0
+        with tr.phase("sample"):
+            for idx in sorted(decode_set):
+                slot = self.slots[idx]
+                if slot.pending:
+                    del slot.pending[:int(n_forced[idx])]
+                for t in range(toks_t.shape[0]):
+                    if not emit_t[t, idx]:
+                        continue
+                    slot.request.generated.append(int(toks_t[t, idx]))
+                    out.stats["decoded"] += 1
+                    tel["tokens_generated"] += 1
+                    out.tokens.append((
+                        slot.request.uid, int(toks_t[t, idx]),
+                        len(slot.request.generated) - 1,
+                    ))
+                slot.pos = int(pos_f[idx])
+                slot.last_token = int(tok_f[idx])
+                if decision.register_decoded:
+                    # decode-completed full pages become shareable too:
+                    # their content is bit-exact with a prefill of the
+                    # same tokens on this datapath
+                    self.cache_mgr.register_filled(
+                        idx, slot.request.resume_tokens, slot.pos
+                    )
+                if not act_f[idx]:
+                    out.finished.append(slot.request)
+                    self.slots[idx] = Slot()
+                    self.cache_mgr.free(idx)
+                else:
+                    self._retire(idx, out)
 
     def _retire(self, idx: int, out: StepOutput):
         slot = self.slots[idx]

@@ -1,0 +1,218 @@
+"""Per-engine-step phase tracing: where does a step's time actually go?
+
+The paper's discipline is *accountable* latency — a 64-cycle MLP is only
+meaningful inside its ~140k-cycle shell if you can say where the other
+cycles went.  The serving counterpart: each engine step decomposes into
+
+    schedule   policy: FifoScheduler/DeadlineScheduler.schedule()
+    host_prep  numpy batch assembly + page-table bookkeeping
+               (ensure / flush_copies / write_table) before a dispatch
+    dispatch   handing the jitted program to the runtime (returns as
+               soon as the computation is enqueued; first-call
+               compilation also lands here)
+    device     waiting for the dispatched arrays (block_until_ready)
+    sample     host-side post-processing: device->host transfers,
+               token sampling/routing, slot bookkeeping
+
+:class:`PhaseTracer` accumulates per-phase seconds for the current step,
+pushes the finished record into a bounded ring buffer, and summarizes
+p50/p95/p99 on demand.  Isolating ``device`` requires *fencing* every
+dispatch (``jax.block_until_ready``), which serializes host and device
+work — so tracing is **off by default** (``ServeConfig.trace_phases``)
+and the off path is :data:`NULL_TRACER`, whose methods are no-ops and
+which never fences: an untraced engine runs the exact code it ran
+before, test-enforced to cost no measurable throughput.
+
+The tracer always stamps with ``time.perf_counter`` — real host/device
+seconds — even when the engine itself runs on a virtual clock
+(:class:`~repro.serve.workloads.StepClock`): phase timings are physical
+measurements, arrival/deadline bookkeeping is simulation time.
+
+This module stays importable without jax (the single
+``block_until_ready`` call imports lazily), so host-side tooling can
+consume recorded phase data anywhere the scheduler runs.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+
+#: phase names in within-step order (``wall`` is the whole step)
+PHASES = ("schedule", "host_prep", "dispatch", "device", "sample")
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile of a sorted list (numpy-free: the policy
+    layer must not grow device deps for a summary)."""
+    if not xs:
+        return 0.0
+    idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx]
+
+
+class _NullCtx:
+    """Reusable no-op context manager (one shared instance, no allocation
+    per phase on the untraced path)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+class NullTracer:
+    """The off switch: every hook is a no-op and :meth:`fence` never
+    touches the device, so an untraced engine's hot loop is unchanged."""
+
+    enabled = False
+    _ctx = _NullCtx()
+
+    def begin_step(self) -> None:
+        pass
+
+    def end_step(self) -> None:
+        pass
+
+    def phase(self, name: str) -> _NullCtx:
+        return self._ctx
+
+    def fence(self, value):
+        return value
+
+    def records(self) -> list[dict]:
+        return []
+
+    def summary(self) -> dict:
+        return {}
+
+
+#: the shared untraced instance every executor starts with
+NULL_TRACER = NullTracer()
+
+
+class _PhaseCtx:
+    """Context manager accumulating elapsed seconds into the tracer's
+    current step record under ``name`` (re-entrant per step: repeated
+    phases — one per dispatch — sum)."""
+
+    __slots__ = ("tracer", "name", "t0")
+
+    def __init__(self, tracer: PhaseTracer, name: str):
+        self.tracer = tracer
+        self.name = name
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        cur = self.tracer._cur
+        if cur is not None:
+            cur[self.name] = (
+                cur.get(self.name, 0.0) + time.perf_counter() - self.t0
+            )
+        return False
+
+
+class PhaseTracer:
+    """Accumulate per-step phase timings into a bounded ring buffer.
+
+    Usage (the engine/executor wiring)::
+
+        tracer.begin_step()
+        with tracer.phase("schedule"):
+            decision = scheduler.schedule(slots)
+        with tracer.phase("dispatch"):
+            out = jitted(...)            # returns once enqueued
+        with tracer.phase("device"):
+            tracer.fence(out)            # block_until_ready
+        tracer.end_step()
+
+    ``fence`` is the only device-touching call and exists so the *same*
+    executor source runs fenced and unfenced: under :data:`NULL_TRACER`
+    it is a pass-through.
+    """
+
+    enabled = True
+
+    def __init__(self, ring: int = 512):
+        if ring < 1:
+            raise ValueError(f"phase ring must hold >= 1 record, got {ring}")
+        self._ring: collections.deque[dict] = collections.deque(maxlen=ring)
+        self._cur: dict | None = None
+        self._t0 = 0.0
+        #: dispatches fenced so far (the off-costs-nothing guard test
+        #: asserts an untraced engine performs zero fences)
+        self.fences = 0
+
+    # ------------------------------------------------------------ hooks --
+    def begin_step(self) -> None:
+        self._cur = {}
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> None:
+        if self._cur is None:
+            return
+        self._cur["wall"] = time.perf_counter() - self._t0
+        self._ring.append(self._cur)
+        self._cur = None
+
+    def phase(self, name: str) -> _PhaseCtx:
+        return _PhaseCtx(self, name)
+
+    def fence(self, value):
+        """Wait for every array in ``value`` (pytree) to be ready on
+        device.  Call inside a ``phase("device")`` block, right after the
+        dispatch returned, to split launch time from device time."""
+        import jax  # lazy: keep the module importable host-side
+
+        self.fences += 1
+        return jax.block_until_ready(value)
+
+    # ---------------------------------------------------------- reading --
+    def records(self) -> list[dict]:
+        """Completed per-step records, oldest first (bounded by the ring)."""
+        return list(self._ring)
+
+    def summary(self) -> dict:
+        """Per-phase p50/p95/p99/mean in milliseconds plus totals, over
+        the retained ring.  A phase absent from a step (e.g. no prefill
+        that step) does not drag its percentiles toward zero: each
+        phase summarizes only the steps it appeared in."""
+        recs = self.records()
+        out: dict = {"steps": len(recs), "ring": self._ring.maxlen}
+        for name in PHASES + ("wall",):
+            xs = sorted(r[name] for r in recs if name in r)
+            if not xs:
+                continue
+            total = sum(xs)
+            out[name] = {
+                "n": len(xs),
+                "p50_ms": _percentile(xs, 50) * 1e3,
+                "p95_ms": _percentile(xs, 95) * 1e3,
+                "p99_ms": _percentile(xs, 99) * 1e3,
+                "mean_ms": total / len(xs) * 1e3,
+                "total_s": total,
+            }
+        if recs:
+            # time the phase model did not attribute (python routing in
+            # the engine loop, telemetry merges): honest accounting
+            # means the residual is reported, not hidden
+            walls = sum(r.get("wall", 0.0) for r in recs)
+            attributed = sum(
+                v for r in recs
+                for k, v in r.items()
+                if k != "wall"
+            )
+            out["unattributed_s"] = max(0.0, walls - attributed)
+        return out
+
+
+def make_tracer(trace: bool, ring: int = 512) -> PhaseTracer | NullTracer:
+    """The ServeConfig -> tracer factory: a live tracer when tracing is
+    requested, the shared no-op otherwise."""
+    return PhaseTracer(ring=ring) if trace else NULL_TRACER

@@ -71,6 +71,14 @@ class Request:
     #: admission's wait measures time-to-resume, not time-since-submit
     submitted_at: float = 0.0
     admitted_at: float = 0.0
+    #: absolute completion deadline on the engine clock (None = no SLO);
+    #: the EDF policy (serve/slo.py) orders the queue by it and may drop
+    #: a queued request once it passes (finish_reason="deadline")
+    deadline_at: float | None = None
+    #: engine-clock time the request left the system (final token
+    #: emitted, or dropped past-deadline); 0.0 while live.  Deadline
+    #: met iff ``finished_at <= deadline_at``.
+    finished_at: float = 0.0
     #: times this request was preempted (pages freed, re-queued to resume
     #: from prompt + generated-so-far); telemetry for the scheduler tests
     preemptions: int = 0
@@ -191,6 +199,11 @@ class ScheduleDecision:
     #: sound on the bit-exact datapath, where decode-written KV is
     #: bitwise what a prefill of the same tokens would write)
     register_decoded: bool = False
+    #: queued requests the policy removed past their deadline (never
+    #: admitted this residency, so no pages to free); the API layer
+    #: finishes them with ``finish_reason="deadline"`` and streams a
+    #: terminal event — a drop is an answered request, never a silent one
+    dropped: list[Request] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,11 +257,19 @@ class FifoScheduler:
     chunked prefill for long prompts (``ServeConfig.prefill_chunk``)."""
 
     def __init__(
-        self, serve_cfg: ServeConfig, caps: ExecutorCaps, cache: CacheManager
+        self,
+        serve_cfg: ServeConfig,
+        caps: ExecutorCaps,
+        cache: CacheManager,
+        clock=None,
     ):
         self.serve_cfg = serve_cfg
         self.caps = caps
         self.cache = cache
+        #: the engine clock: wall time by default, a virtual clock under
+        #: deterministic workload replay (serve/workloads.py StepClock) —
+        #: every wait/deadline stamp in this layer reads it
+        self.clock = clock if clock is not None else time.perf_counter
         self.queue: list[Request] = []
         self._admit_seq = 0
         if serve_cfg.prefill_chunk is not None and not caps.bucketable:
@@ -334,6 +355,12 @@ class FifoScheduler:
         self.stats = {
             "prompts_admitted": 0,
             "queue_wait_s_total": 0.0,
+            # created_at-anchored wait: admission minus ORIGINAL submit
+            # time, summed over admissions.  Equal to queue_wait_s_total
+            # until a preemption restamps submitted_at — from then on
+            # this is the honest time-in-system-before-(re)admission the
+            # restamped clock undercounts (includes prior residencies).
+            "queue_wait_created_s_total": 0.0,
             "preemptions": 0,
             # prompt tokens never recomputed thanks to a prefix hit
             # (prefill-skip admissions only — real FLOP savings)
@@ -397,19 +424,28 @@ class FifoScheduler:
         ]
         if not victims:
             return False
-        idx = max(victims, key=lambda i: slots[i].admit_seq)
+        idx = self._pick_victim(victims, slots)
         req = slots[idx].request
         req.preemptions += 1
         # the wait clock restarts at requeue: the next admission's queue
         # wait measures time spent waiting to resume, not time since the
-        # original submission (which would double-count the residency)
-        req.submitted_at = time.perf_counter()
+        # original submission (which would double-count the residency).
+        # created_at never restamps — queue_wait_created_s_total keeps
+        # the full time-in-system view.
+        req.submitted_at = self.clock()
         self.stats["preemptions"] += 1
         self.cache.free(idx)
         decision.preempted.append((idx, req))
         free.append(idx)
         self.queue.insert(1, req)
         return True
+
+    def _pick_victim(self, victims: list[int], slots: list[Slot]) -> int:
+        """Choose which preemptable resident to evict.  FIFO preempts
+        the youngest (largest admit_seq) so the head-of-line request
+        displaces the least-progressed work; deadline-aware policies
+        override this to protect urgent residents."""
+        return max(victims, key=lambda i: slots[i].admit_seq)
 
     # -------------------------------------------------------- admission --
     def _reserve_len(self, req: Request) -> int:
@@ -491,8 +527,14 @@ class FifoScheduler:
             # adds its re-wait to the total but the prompt counts once.
             if req.admitted_at == 0.0:
                 self.stats["prompts_admitted"] += 1
-            req.admitted_at = time.perf_counter()
+            req.admitted_at = self.clock()
             self.stats["queue_wait_s_total"] += req.queue_wait_s
+            # the created_at-anchored companion key: for a preemption
+            # resume this spans prior residencies too, so preempted
+            # requests' time-in-system is never silently undercounted
+            self.stats["queue_wait_created_s_total"] += max(
+                0.0, req.admitted_at - req.created_at
+            )
             n_admitted += 1
             idx = free.pop(0)
             self._admit_seq += 1
