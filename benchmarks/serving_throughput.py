@@ -35,7 +35,12 @@ measures the SLO policy instead of FIFO.
 (serve/phases.py); the derived column gains ``ph_<phase>_p50``/``_p95``
 millisecond columns for schedule / host_prep / dispatch / device /
 sample.  Fencing serializes dispatch, so tok/s measured with tracing on
-is an instrumented number — compare like with like.
+is an instrumented number — compare like with like.  With
+``--phase-mode overlap`` the tracer never fences and the derived column
+instead gains ``device_overlap_s`` / ``host_bubble_s`` /
+``overlap_efficiency`` — how much of the host loop the device hid,
+which is the number ``--async-loop`` exists to raise (and the matrix
+``--check`` gate can guard).
 
 CSV rows: ``name,us_per_call,derived`` where ``us_per_call`` is mean
 microseconds per generated token and ``derived`` packs
@@ -104,7 +109,8 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
                policy=None, kv_layout="dense", workload="uniform",
                api="batch", n_requests=8, max_new=16, seed=0,
                cache_extend=True, scheduler="fifo", deadline_ms=None,
-               trace_phases=False):
+               trace_phases=False, async_loop=False, phase_mode="fenced",
+               repeats=1):
     prefix_mode = workload == "prefix"
     poisson_mode = workload == "poisson"
     clock = workloads.StepClock() if poisson_mode else None
@@ -117,6 +123,7 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             kv_prefix_cache=prefix_mode, kv_preemption=prefix_mode,
             cache_extend=cache_extend, scheduler=scheduler,
             deadline_ms=deadline_ms, trace_phases=trace_phases,
+            async_loop=async_loop, phase_mode=phase_mode,
         ),
         clock=clock,
     )
@@ -156,12 +163,20 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
         return time.perf_counter() - t0, ttfts, gaps, None
 
     # warmup wave: same length distribution, so it compiles the full
-    # bucket/decode program set — the measured wave is steady-state
+    # bucket/decode program set — the measured waves are steady-state.
+    # With repeats > 1 the median-wall wave's measurements are reported
+    # (one noisy wave on a shared runner would otherwise dominate a
+    # recorded before/after comparison)
     wave(seed)
-    tokens_before = eng.telemetry["tokens_generated"]
-    wall_s, ttfts, gaps, rep = wave(seed + 1)
+    measured = []
+    for r in range(repeats):
+        tokens_before = eng.telemetry["tokens_generated"]
+        wall_s, ttfts, gaps, rep = wave(seed + 1 + r)
+        toks = eng.telemetry["tokens_generated"] - tokens_before
+        measured.append((wall_s, toks, ttfts, gaps, rep))
+    measured.sort(key=lambda m: m[0] / max(m[1], 1))
+    wall_s, toks, ttfts, gaps, rep = measured[len(measured) // 2]
     tel = eng.telemetry
-    toks = tel["tokens_generated"] - tokens_before
     us_per_tok = wall_s / max(toks, 1) * 1e6
     tok_s = toks / max(wall_s, 1e-9)
     derived = (
@@ -200,6 +215,16 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
                     f";ph_{ph}_p50={s['p50_ms']:.2f}"
                     f";ph_{ph}_p95={s['p95_ms']:.2f}"
                 )
+        if "overlap_efficiency" in tel["phases"]:
+            # overlap-mode tracer: how much host time the device hid
+            # (matrix --check can gate on overlap_efficiency regressions)
+            derived += (
+                f";device_overlap_s={tel['phases']['device_overlap_s']:.4f}"
+                f";host_bubble_s={tel['phases']['host_bubble_s']:.4f}"
+                f";overlap_efficiency="
+                f"{tel['phases']['overlap_efficiency']:.3f}"
+            )
+    derived += f";async_loop={int(async_loop)}"
     return (
         f"serving_throughput,{name},b{max_batch},ds{decode_steps},"
         f"{us_per_tok:.1f},{derived}"
@@ -210,7 +235,8 @@ def run(policy: str | None = None, kv_layout: str = "dense",
         workload: str = "uniform", api: str = "batch",
         cache_extend: bool = True, scheduler: str = "fifo",
         deadline_ms: float | None = None,
-        trace_phases: bool = False) -> list[str]:
+        trace_phases: bool = False, async_loop: bool = False,
+        phase_mode: str = "fenced", repeats: int = 1) -> list[str]:
     if workload == "prefix" and kv_layout == "dense":
         kv_layout = "paged"  # sharing needs pages; dense would be inert
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
@@ -232,7 +258,8 @@ def run(policy: str | None = None, kv_layout: str = "dense",
                         kv_layout=kv_layout, workload=workload, api=api,
                         cache_extend=cache_extend, scheduler=scheduler,
                         deadline_ms=deadline_ms,
-                        trace_phases=trace_phases,
+                        trace_phases=trace_phases, async_loop=async_loop,
+                        phase_mode=phase_mode, repeats=repeats,
                     )
                 )
     return rows
@@ -293,25 +320,43 @@ def load_trajectory(path: str) -> list[dict]:
     return [doc] if isinstance(doc, dict) else list(doc)
 
 
-def record_trajectory(path: str, **run_kw) -> dict:
+def record_trajectory(path: str, ablation: str = "cache_extend",
+                      **run_kw) -> dict:
     """Append one timestamped run entry to the BENCH_serving.json
     trajectory (never overwrites: the file is a list of runs, each
     stamped with git rev + UTC date + the sweep args, so the perf
-    history accumulates across PRs).  Each entry still carries the
-    cache-extend off/on sweep as ``before``/``after`` — the
-    within-entry ablation the trajectory was built around."""
+    history accumulates across PRs).  ``ablation`` picks the
+    within-entry before/after axis:
+
+    * ``"cache_extend"`` — off vs on (the historical entry schema).
+    * ``"async_loop"`` — synchronous vs pipelined engine loop, same
+      seeded workload; with ``api="stream"`` the before/after records
+      carry ``itl_ms_p95``, the overlap loop's acceptance metric.
+    """
     import datetime
     import json
 
+    if ablation == "cache_extend":
+        before = run(cache_extend=False, **run_kw)
+        after = run(cache_extend=True, **run_kw)
+    elif ablation == "async_loop":
+        before = run(async_loop=False, **run_kw)
+        after = run(async_loop=True, **run_kw)
+    else:
+        raise ValueError(
+            f"ablation must be 'cache_extend' or 'async_loop', "
+            f"got {ablation!r}"
+        )
     entry = {
         "bench": "serving_throughput",
         "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds"
         ),
         "git_rev": _git_rev(),
+        "ablation": ablation,
         "args": {k: v for k, v in run_kw.items()},
-        "before": _rows_to_records(run(cache_extend=False, **run_kw)),
-        "after": _rows_to_records(run(cache_extend=True, **run_kw)),
+        "before": _rows_to_records(before),
+        "after": _rows_to_records(after),
     }
     history = load_trajectory(path)
     history.append(entry)
@@ -357,10 +402,27 @@ def main():
                     help="per-step phase tracing; derived gains "
                          "ph_<phase>_p50/_p95 ms columns (fenced — an "
                          "instrumented number, compare like with like)")
+    ap.add_argument("--phase-mode", default="fenced",
+                    choices=("fenced", "overlap"),
+                    help="tracer mode under --trace-phases: overlap never "
+                         "fences and adds device_overlap_s / host_bubble_s "
+                         "/ overlap_efficiency derived columns")
+    ap.add_argument("--async-loop", action="store_true",
+                    help="pipelined engine loop (ServeConfig.async_loop) "
+                         "for every sweep point")
+    ap.add_argument("--ablation", default="cache_extend",
+                    choices=("cache_extend", "async_loop"),
+                    help="--record before/after axis: cache-extend off/on "
+                         "(historical) or sync/async engine loop (with "
+                         "--api stream the records carry itl_ms_p95)")
     ap.add_argument("--no-cache-extend", action="store_true",
                     help="disable the cache-extending prefill program "
                          "(pre-extend behavior: skip/chunk/preempt gated "
                          "to bit-exact datapaths)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="measured waves per sweep point; the median-wall "
+                         "wave is reported (use >1 when recording a "
+                         "before/after entry on a noisy shared runner)")
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="append a timestamped before/after (cache-extend "
                          "off/on) run entry to the JSON trajectory at "
@@ -368,22 +430,41 @@ def main():
     args = ap.parse_args()
     t0 = time.time()
     if args.record:
-        entry = record_trajectory(
-            args.record, policy=args.policy, kv_layout=args.kv_layout,
+        record_kw = dict(
+            policy=args.policy, kv_layout=args.kv_layout,
             workload=args.workload, api=args.api,
             scheduler=args.scheduler, deadline_ms=args.deadline_ms,
+            repeats=args.repeats,
         )
-        saved = [r.get("prefill_tokens_saved", 0) for r in entry["after"]]
+        if args.ablation == "cache_extend" and args.async_loop:
+            record_kw["async_loop"] = True
+        entry = record_trajectory(
+            args.record, ablation=args.ablation, **record_kw
+        )
         n = len(load_trajectory(args.record))
-        print(f"# appended run {entry['git_rev']}@{entry['date']} to "
-              f"{args.record} ({n} entries); "
-              f"after prefill_tokens_saved={saved}")
+        if args.ablation == "async_loop" and args.api == "stream":
+            itl = [
+                (b.get("itl_ms_p95"), a.get("itl_ms_p95"))
+                for b, a in zip(entry["before"], entry["after"])
+            ]
+            print(f"# appended run {entry['git_rev']}@{entry['date']} to "
+                  f"{args.record} ({n} entries); "
+                  f"itl_ms_p95 sync->async per point: {itl}")
+        else:
+            saved = [
+                r.get("prefill_tokens_saved", 0) for r in entry["after"]
+            ]
+            print(f"# appended run {entry['git_rev']}@{entry['date']} to "
+                  f"{args.record} ({n} entries); "
+                  f"after prefill_tokens_saved={saved}")
     else:
         rows = run(policy=args.policy, kv_layout=args.kv_layout,
                    workload=args.workload, api=args.api,
                    cache_extend=not args.no_cache_extend,
                    scheduler=args.scheduler, deadline_ms=args.deadline_ms,
-                   trace_phases=args.trace_phases)
+                   trace_phases=args.trace_phases,
+                   async_loop=args.async_loop, phase_mode=args.phase_mode,
+                   repeats=args.repeats)
         for row in rows:
             print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")

@@ -358,6 +358,52 @@ class ServeConfig:
     trace_phases: bool = False
     # Per-step records retained by the tracer's ring buffer.
     phase_ring: int = 512
+    # Tracer flavor (serve/phases.py).  "fenced": the PR-7 tracer —
+    # block_until_ready after every dispatch isolates device time
+    # exactly, at the cost of serializing host and device (it measures a
+    # pipeline it also destroys).  "overlap": never fences; instead it
+    # reports ``device_overlap_s`` (the host-side span between a decode
+    # dispatch returning and its collect starting — device time hidden
+    # under host work), ``host_bubble_s`` (the residual blocking wait in
+    # collect — host time NOT hidden), and ``overlap_efficiency`` =
+    # overlap / (overlap + bubble).  The only mode that can measure the
+    # async loop without un-pipelining it.
+    phase_mode: Literal["fenced", "overlap"] = "fenced"
+    # --- pipelined async engine loop (serve/api.py) ---
+    # Double-buffered engine loop: while step N's decode dispatch is in
+    # flight on device, the scheduler computes step N+1's decision and
+    # the host preps its inputs, so schedule/host_prep/sample hide under
+    # device time.  The executor splits into a non-blocking
+    # ``dispatch(decision) -> InflightStep`` and a blocking
+    # ``collect(inflight) -> StepOutput``; the device->host transfer of
+    # sampled tokens is deferred one step, and the sampled-token carry
+    # for step N+1's decode scan stays on device (no host round-trip
+    # between consecutive decode dispatches).  Greedy (temperature=0)
+    # token streams are bit-identical to the synchronous loop on every
+    # datapath/layout (test-enforced); sampled streams are equally
+    # distributed but may diverge (the dispatch schedule reshuffles PRNG
+    # key splits, same caveat as prefix-skip and preemption).  Cancels
+    # and EDF deadline drops act at a one-step-stale boundary: up to one
+    # in-flight dispatch's tokens for a cancelled request are discarded,
+    # and preemption victims are only picked among fully-collected slots
+    # (see README "Async engine loop & mesh sharding").  Off by default:
+    # the legacy loop runs byte-identical code.
+    async_loop: bool = False
+    # --- mesh-sharded decode (distributed/sharding.py) ---
+    # Place params and KV caches with NamedSharding over a host mesh
+    # (data x model, launch/mesh.make_host_mesh) via ShardingRules /
+    # cache_shardings, so every prefill/extend/decode program compiles
+    # against sharding-annotated operands.  On a 1-device host this is
+    # the identity placement (token streams bit-identical, jit budget
+    # unchanged — both test-enforced); on a multi-device host the paged
+    # KV pools shard over kv_heads (TP) with the page table over batch.
+    shard_decode: bool = False
+    # Data-parallel replica fan-out (serve/router.py ReplicaRouter):
+    # N independent engines behind one queue with least-loaded
+    # admission.  1 = a single engine, no router.  Each replica holds
+    # its own KV pool and jit caches (len(prefill_buckets)+2 programs
+    # per replica — the budget is per engine, not per process).
+    replicas: int = 1
 
     def resolved_buckets(self) -> tuple[int, ...]:
         """Prefill buckets, ascending.  Auto mode: powers of two in

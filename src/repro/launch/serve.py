@@ -18,7 +18,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import lm
-from repro.serve import Engine
+from repro.serve import Engine, ReplicaRouter
 from repro.serve.cli import (  # noqa: F401  (resolve_policy_arg re-export)
     add_serving_args,
     config_from_args,
@@ -37,7 +37,14 @@ def main():
 
     cfg = configs.get_config(args.arch, reduced=not args.full_config)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, config_from_args(args, cfg))
+    serve_cfg = config_from_args(args, cfg)
+    # replicas > 1: the same request-lifecycle API, fronted by the
+    # least-loaded data-parallel router (serve/router.py)
+    eng = (
+        ReplicaRouter(cfg, params, serve_cfg)
+        if serve_cfg.replicas > 1
+        else Engine(cfg, params, serve_cfg)
+    )
     rng = np.random.default_rng(0)
     preamble = list(rng.integers(0, cfg.vocab_size, args.shared_prefix))
     handles = [
@@ -71,10 +78,20 @@ def main():
         toks = sum(len(results[h.uid].generated) for h in handles)
         print(f"{len(handles)} requests, {toks} tokens in {dt:.2f}s "
               f"({toks/dt:.1f} tok/s host throughput)")
+    if isinstance(eng, ReplicaRouter):
+        fleet = eng.telemetry
+        print(f"router: {fleet['replicas']} replicas | "
+              f"{fleet['tokens_generated']} tokens total | "
+              "per-replica admitted "
+              f"{[t['prompts_admitted'] for t in fleet['replica_telemetry']]}")
+        eng = eng.engines[0]  # detailed prints: the first replica's view
     tel = eng.telemetry
     queue_wait_ms = (
         tel["queue_wait_s_total"] / max(tel["prompts_admitted"], 1) * 1e3
     )
+    mode = "async (pipelined)" if eng.serve_cfg.async_loop else "sync"
+    print(f"engine loop: {mode}"
+          + (" | mesh-sharded decode" if eng.serve_cfg.shard_decode else ""))
     print(f"telemetry: policy={eng.executor.policy.name} | "
           f"queue wait mean {queue_wait_ms:.1f} ms | "
           f"{tel['prefill_compiles']} prefill programs "
@@ -106,6 +123,11 @@ def main():
             f"{name} p50 {s['p50_ms']:.2f} / p95 {s['p95_ms']:.2f}"
             for name, s in tel["phases"].items() if isinstance(s, dict)
         ))
+        if "overlap_efficiency" in tel["phases"]:
+            ph = tel["phases"]
+            print(f"overlap: device hidden {ph['device_overlap_s']:.3f}s | "
+                  f"host bubble {ph['host_bubble_s']:.3f}s | "
+                  f"efficiency {ph['overlap_efficiency']:.3f}")
 
 
 if __name__ == "__main__":

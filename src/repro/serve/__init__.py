@@ -12,13 +12,19 @@ from repro.serve.scheduler import (  # noqa: F401
     Slot,
 )
 from repro.serve.slo import DeadlineScheduler  # noqa: F401
-from repro.serve.executor import ModelExecutor, StepOutput  # noqa: F401
+from repro.serve.executor import (  # noqa: F401
+    InflightStep,
+    ModelExecutor,
+    StepOutput,
+)
 from repro.serve.api import Engine, RequestHandle, TokenEvent  # noqa: F401
+from repro.serve.router import ReplicaRouter  # noqa: F401
 from repro.serve.engine import ServingEngine  # noqa: F401  (deprecated shim)
 from repro.serve.sampling import SamplingParams, sample  # noqa: F401
 from repro.serve.phases import (  # noqa: F401
     NULL_TRACER,
     NullTracer,
+    OverlapTracer,
     PhaseTracer,
     make_tracer,
 )

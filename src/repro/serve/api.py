@@ -18,12 +18,21 @@ not express:
   everything, run to completion, return finished requests) that
   ``ServingEngine.run()`` callers migrate to.
 
-The engine loop is synchronous and single-threaded: each
+The engine loop is synchronous and single-threaded by default: each
 :meth:`Engine.step` asks the scheduler for an explicit
 :class:`~repro.serve.scheduler.ScheduleDecision` and has the executor
-apply it.  All telemetry is merged from the two layers plus the cache
-manager under :attr:`Engine.telemetry` (same key set as the historical
-monolith).
+apply it.  With ``ServeConfig.async_loop`` the loop is *pipelined*
+(double-buffered): step N's decode scan is dispatched and left in
+flight on device while the host schedules and preps step N+1; N's
+results are collected — and its TokenEvents routed — one step late,
+stamped with the engine clock at N's *dispatch* so virtual-clock
+replay (:class:`~repro.serve.workloads.StepClock`) produces the exact
+same event timeline as the synchronous loop.  Greedy token streams are
+bit-identical between the two loops; the visible semantic differences
+sit at the one-step-stale boundary (cancel may discard one in-flight
+step's tokens, preemption defers one step — see README).  All
+telemetry is merged from the two layers plus the cache manager under
+:attr:`Engine.telemetry` (same key set as the historical monolith).
 """
 
 from __future__ import annotations
@@ -31,13 +40,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from collections.abc import Iterator
 from typing import Any, Callable
 
 import inspect
 
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.serve.executor import ModelExecutor
+from repro.serve.executor import InflightStep, ModelExecutor
 from repro.serve.phases import make_tracer
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import FifoScheduler, Request, Scheduler
@@ -132,9 +142,27 @@ class Engine:
         self.serve_cfg = self.executor.serve_cfg
         self.clock = clock if clock is not None else time.perf_counter
         self._tracer = make_tracer(
-            self.serve_cfg.trace_phases, self.serve_cfg.phase_ring
+            self.serve_cfg.trace_phases, self.serve_cfg.phase_ring,
+            mode=self.serve_cfg.phase_mode,
         )
+        if (
+            self.serve_cfg.trace_phases
+            and self.serve_cfg.async_loop
+            and self.serve_cfg.phase_mode == "fenced"
+        ):
+            # the default warnings filter surfaces this once per call
+            # site — enough to flag a measurement that contradicts itself
+            warnings.warn(
+                "trace_phases with phase_mode='fenced' fences every "
+                "dispatch, serializing the async_loop pipeline it is "
+                "measuring; use phase_mode='overlap' for non-destructive "
+                "overlap accounting",
+                UserWarning,
+                stacklevel=2,
+            )
         self.executor.tracer = self._tracer
+        #: the dispatched-but-uncollected step (async loop double buffer)
+        self._inflight: InflightStep | None = None
         if scheduler_factory is None:
             try:
                 factory = SCHEDULERS[self.serve_cfg.scheduler]
@@ -268,22 +296,22 @@ class Engine:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.scheduler.queue) or any(
-            s.active for s in self.executor.slots
+        return (
+            bool(self.scheduler.queue)
+            or any(s.active for s in self.executor.slots)
+            # an uncollected dispatch still owes tokens/finishes (async
+            # loop drain: one extra step collects it after the queue and
+            # slots empty out)
+            or (self._inflight is not None and not self._inflight.empty)
         )
 
     # -------------------------------------------------------------- loop --
-    def step(self) -> dict:
-        """One engine iteration: ``scheduler.schedule`` then
-        ``executor.execute``; route the step's emissions into per-request
-        event queues, finish any past-deadline drops the policy reported,
-        and stamp SLO accounting."""
-        tr = self._tracer
-        tr.begin_step()
-        with tr.phase("schedule"):
-            decision = self.scheduler.schedule(self.executor.slots)
-        out = self.executor.execute(decision)
-        now = self.clock()
+    def _route_output(self, out, ts: float) -> None:
+        """Route one collected step's emissions into per-request event
+        queues and finish bookkeeping, stamping everything with ``ts`` —
+        the engine clock at the step's *dispatch* (== collect time for
+        the synchronous loop, one step earlier under the async loop, so
+        both loops produce identical virtual-clock event timelines)."""
         finished_uids = {req.uid for req in out.finished}
         reasons = {
             req.uid: (
@@ -301,28 +329,36 @@ class Engine:
         for uid, token, index in out.tokens:
             final = uid in finished_uids and index == last_index[uid]
             self._events.setdefault(uid, collections.deque()).append(TokenEvent(
-                uid=uid, token=token, index=index, ts=now,
+                uid=uid, token=token, index=index, ts=ts,
                 finished=final,
                 finish_reason=reasons[uid] if final else None,
             ))
         for req in out.finished:
-            req.finished_at = now
+            req.finished_at = ts
             self._finished[req.uid] = req
             self._finish_reason[req.uid] = reasons[req.uid]
-        # past-deadline drops: the scheduler removed them from its queue;
-        # they finish here with a tokenless terminal event so every
-        # consumer (stream / generate / result) sees an answered request
-        for req in decision.dropped:
-            req.finished_at = now
+        self._account_slo(out.finished)
+
+    def _route_dropped(self, dropped, ts: float) -> None:
+        """Finish past-deadline drops: the scheduler removed them from
+        its queue; they finish here with a tokenless terminal event so
+        every consumer (stream / generate / result) sees an answered
+        request.  Drops are a host-side decision — under the async loop
+        they route at schedule time, never one step late."""
+        for req in dropped:
+            req.finished_at = ts
             self._finished[req.uid] = req
             self._finish_reason[req.uid] = FINISH_DEADLINE
             self._events.setdefault(req.uid, collections.deque()).append(
                 TokenEvent(
                     uid=req.uid, token=NO_TOKEN, index=len(req.generated),
-                    ts=now, finished=True, finish_reason=FINISH_DEADLINE,
+                    ts=ts, finished=True, finish_reason=FINISH_DEADLINE,
                 )
             )
-        for req in out.finished + decision.dropped:
+        self._account_slo(dropped)
+
+    def _account_slo(self, reqs) -> None:
+        for req in reqs:
             if req.deadline_at is None:
                 continue
             self._slo["deadline_requests"] += 1
@@ -331,7 +367,63 @@ class Engine:
             self._slo["deadline_missed"] += (
                 dropped or req.finished_at > req.deadline_at
             )
+
+    def step(self) -> dict:
+        """One engine iteration: ``scheduler.schedule`` then
+        ``executor.execute``; route the step's emissions into per-request
+        event queues, finish any past-deadline drops the policy reported,
+        and stamp SLO accounting.  Under ``ServeConfig.async_loop`` the
+        execute splits across steps: this step dispatches its decision
+        and collects the *previous* step's (see :meth:`_step_async`)."""
+        if self.executor.async_loop:
+            return self._step_async()
+        tr = self._tracer
+        tr.begin_step()
+        with tr.phase("schedule"):
+            decision = self.scheduler.schedule(self.executor.slots)
+        out = self.executor.execute(decision)
+        now = self.clock()
+        self._route_output(out, now)
+        self._route_dropped(decision.dropped, now)
         stats = out.stats
+        stats.update(
+            prefill_compiles=self.executor.tel["prefill_compiles"],
+            decode_compiles=self.executor.tel["decode_compiles"],
+        )
+        tr.end_step()
+        return stats
+
+    def _step_async(self) -> dict:
+        """One pipelined iteration: schedule and *dispatch* step N, then
+        *collect* step N-1 — so N-1's decode scan runs on device under
+        N's schedule/host_prep.  The stats returned (and the tokens
+        routed) are N-1's: every step's results surface exactly one
+        step after its dispatch, stamped with its dispatch-time clock.
+        The scheduler sees host slot state that is one step stale for
+        in-flight slots; staleness is safe by construction — collect
+        re-checks every slot against its dispatch-time snapshot and
+        ``admit_seq`` stamp, so tokens of a slot that was preempted,
+        cancelled, or turned over while its dispatch was in flight are
+        discarded (a preempted request regenerates them after resume),
+        and EDF drops touch only queued requests."""
+        tr = self._tracer
+        tr.begin_step()
+        with tr.phase("schedule"):
+            decision = self.scheduler.schedule(self.executor.slots)
+        inflight = self.executor.dispatch(decision)
+        inflight.dispatched_at = self.clock()
+        self._route_dropped(decision.dropped, inflight.dispatched_at)
+        prev, self._inflight = self._inflight, inflight
+        stats = {"prefilled": 0, "decoded": 0}
+        if prev is not None:
+            out = self.executor.collect(prev)
+            ts = (
+                prev.dispatched_at
+                if prev.dispatched_at is not None
+                else self.clock()
+            )
+            self._route_output(out, ts)
+            stats = out.stats
         stats.update(
             prefill_compiles=self.executor.tel["prefill_compiles"],
             decode_compiles=self.executor.tel["decode_compiles"],

@@ -108,6 +108,27 @@ def add_serving_args(
                          "dispatch/device/sample) with device fencing; "
                          "p50/p95/p99 land in Engine.telemetry['phases']. "
                          "Off by default: fencing serializes dispatch")
+    ap.add_argument("--phase-mode", default="fenced",
+                    choices=("fenced", "overlap"),
+                    help="tracer mode under --trace-phases: fenced isolates "
+                         "device time by blocking each dispatch; overlap "
+                         "never fences and reports device_overlap_s / "
+                         "host_bubble_s / overlap_efficiency instead (use "
+                         "with --async-loop)")
+    ap.add_argument("--async-loop", action="store_true",
+                    help="pipelined engine loop: dispatch step N+1 while "
+                         "step N's decode scan runs on device; greedy "
+                         "token streams stay bit-identical to the "
+                         "synchronous loop (results surface one step late)")
+    ap.add_argument("--shard-decode", action="store_true",
+                    help="place params and KV pools with NamedSharding "
+                         "over the host (data, model) mesh; the same "
+                         "len(buckets)+2 programs compile against sharded "
+                         "operands (single-device meshes are a no-op)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engines behind one ReplicaRouter "
+                         "front door with least-loaded admission (each "
+                         "replica owns its KV pool and jit caches)")
     return ap
 
 
@@ -136,4 +157,8 @@ def config_from_args(args: argparse.Namespace, model_cfg) -> ServeConfig:
         deadline_ms=getattr(args, "deadline_ms", None),
         overdue_policy=getattr(args, "overdue", "drop"),
         trace_phases=getattr(args, "trace_phases", False),
+        phase_mode=getattr(args, "phase_mode", "fenced"),
+        async_loop=getattr(args, "async_loop", False),
+        shard_decode=getattr(args, "shard_decode", False),
+        replicas=getattr(args, "replicas", 1),
     )

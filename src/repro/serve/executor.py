@@ -64,6 +64,60 @@ class StepOutput:
     preempted: list[Request] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class InflightStep:
+    """A dispatched-but-uncollected engine step (the async loop's
+    double-buffer token).  ``out`` already holds everything the
+    internally-synchronous prefill/extend paths produced (they sample on
+    host); the decode scan's results are still on device in ``dev``
+    until :meth:`ModelExecutor.collect` blocks on them.
+
+    ``snapshot`` pins each decode slot's Request at dispatch time so a
+    mid-flight ``cancel`` (or any slot turnover) is detected at collect:
+    a slot whose request changed identity — or was cancelled — has its
+    in-flight tokens discarded rather than routed to a dead stream."""
+
+    out: StepOutput
+    decision: ScheduleDecision
+    #: slots the decode dispatch covered (sorted), () = no decode ran
+    decode_set: tuple[int, ...] = ()
+    #: device arrays (toks_t, emit_t, tok_f, pos_f, act_f, rem_f) from
+    #: the decode scan; None when no decode ran
+    dev: Any = None
+    #: slot index -> Request resident there when the scan was dispatched
+    snapshot: dict[int, Request] = dataclasses.field(default_factory=dict)
+    #: slot index -> the slot's admission stamp at dispatch; catches the
+    #: turnover the Request identity check cannot — the SAME request
+    #: preempted mid-flight and re-admitted into the SAME slot (its
+    #: resume replay was planned from pre-dispatch ``generated``, so the
+    #: in-flight tokens must still be discarded)
+    admit_seqs: dict[int, int] = dataclasses.field(default_factory=dict)
+    #: per-slot forced-token counts the dispatch consumed (host array)
+    n_forced: Any = None
+    #: monotone dispatch stamp: collect only clears a slot's inflight
+    #: mark when no newer dispatch has re-marked it (the pipelined loop
+    #: dispatches N+1 before collecting N, often over the same slots)
+    seq: int = 0
+    #: tracer stamp of the decode dispatch's return (overlap accounting)
+    t_dispatch: float = 0.0
+    #: perf_counter at decode dispatch start (decode_time_s accounting)
+    t0: float = 0.0
+    #: engine-clock stamp set by the Engine right after dispatch; token
+    #: events and finished_at for this step carry it, keeping virtual-
+    #: clock replay deterministic one step late (StepClock contract)
+    dispatched_at: float | None = None
+
+    @property
+    def empty(self) -> bool:
+        """Nothing to collect and nothing to route (idle dispatch)."""
+        return (
+            self.dev is None
+            and not self.out.tokens
+            and not self.out.finished
+            and not self.out.preempted
+        )
+
+
 class ModelExecutor:
     def __init__(
         self,
@@ -121,6 +175,68 @@ class ModelExecutor:
         self.kv_layout = self.cache_mgr.layout
         self.caches = self.cache_mgr.init_device_caches()
         self.slots = [Slot() for _ in range(sc.max_batch)]
+        #: pipelined loop (ServeConfig.async_loop): dispatch and collect
+        #: interleave across steps, and the decode carry stays on device
+        self.async_loop = bool(sc.async_loop)
+
+        # Mesh-sharded decode: place params and the KV pools with
+        # NamedSharding over a (data, model) host mesh so every
+        # prefill/extend/decode program compiles against sharding-
+        # annotated operands.  Committed input shardings propagate
+        # through the existing jitted programs — no new programs, so the
+        # len(buckets)+2 budget holds (test-enforced).  The page table
+        # keeps its sharding across host-side rebuilds via the manager's
+        # ``table_sharding`` hook (a fresh uncommitted table would
+        # otherwise re-key the jit cache and mint a second decode
+        # program mid-run).
+        self.mesh = None
+        self.sharding_rules = None
+        self._cache_out_sh = None
+        self._rep_sh = None
+        if sc.shard_decode:
+            from repro.distributed import sharding as sharding_lib
+            from repro.launch.mesh import make_host_mesh
+
+            self.mesh = make_host_mesh()
+            rules = sharding_lib.ShardingRules(self.mesh)
+            self.sharding_rules = rules
+            self.params = jax.device_put(
+                self.params, sharding_lib.param_shardings(rules, cfg, lm)
+            )
+            cache_sh = self.cache_mgr.device_shardings(rules)
+            self.caches = jax.device_put(self.caches, cache_sh)
+            table_sh = cache_sh.get("layers", {}).get("page_table")
+            if table_sh is not None:
+                self.cache_mgr.table_sharding = table_sh
+            # pinning every program's cache outputs to the SAME shardings
+            # the pools were placed with (and the small per-slot arrays to
+            # a replicated placement) is what keeps the jit caches at one
+            # program each: left to GSPMD, a program's chosen output
+            # sharding (e.g. the page table partitioned over 'model') can
+            # differ from the host-side placement, and the next dispatch
+            # would re-key on the flip-flopping operand sharding
+            self._cache_out_sh = cache_sh
+            self._rep_sh = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec()
+            )
+
+        # Device-resident decode carry (async loop): the scan's final
+        # (token, position, active, budget) per slot, kept on device so
+        # consecutive decode dispatches chain without a host round-trip.
+        # ``_carry_valid[i]`` False means host state is authoritative for
+        # slot i (fresh admission / extend handoff / preemption / release
+        # since the last dispatch); the merge happens outside jit, so the
+        # decode program's signature — and the jit budget — is unchanged.
+        self._carry = None
+        self._carry_valid = np.zeros((sc.max_batch,), bool)
+        #: dispatch stamping for the Slot.inflight protocol (see
+        #: InflightStep.seq)
+        self._dispatch_seq = 0
+        self._slot_dispatch = [-1] * sc.max_batch
+        #: conservative per-slot upper bound on the next write position
+        #: while a dispatch is in flight (drives page ensure() when the
+        #: true position is still on device)
+        self._pos_ub = [0] * sc.max_batch
 
         # Bit-exact datapath predicate: is a decode-path forward bitwise
         # identical to the prefill-path forward for the same token at the
@@ -170,11 +286,20 @@ class ModelExecutor:
             and self.extend_width > 0
             and not self.kernel.get("use_pallas", False)
         )
-        self._decode_fn = jax.jit(self._decode_scan)
+        rep, csh = self._rep_sh, self._cache_out_sh
+        self._decode_fn = jax.jit(
+            self._decode_scan,
+            out_shardings=(rep, rep, rep, rep, rep, rep, csh),
+        ) if self.mesh is not None else jax.jit(self._decode_scan)
         self._prefill_fn: dict[int, Any] = {}  # jit cache per bucket length
-        self._extend_fn = (
-            jax.jit(self._extend_batch) if self.cache_extend else None
-        )
+        if not self.cache_extend:
+            self._extend_fn = None
+        elif self.mesh is not None:
+            self._extend_fn = jax.jit(
+                self._extend_batch, out_shardings=(rep, csh)
+            )
+        else:
+            self._extend_fn = jax.jit(self._extend_batch)
         # Step-phase tracer (serve/phases.py), assigned by the Engine when
         # ServeConfig.trace_phases is on.  The default NULL_TRACER is a
         # shared no-op whose fence() never touches the device, so the
@@ -322,7 +447,8 @@ class ModelExecutor:
         logits.  All zeros when nothing is forced, which reduces to the
         historical behavior.
         Returns (per-step next tokens, per-step emit mask, final carry
-        token, final positions, final active mask, caches).
+        token, final positions, final active mask, final budget,
+        caches).
         """
         sc = self.serve_cfg
         keys = jax.random.split(key, sc.decode_steps)
@@ -355,14 +481,27 @@ class ModelExecutor:
         (tok, pos, act, rem, caches), (toks_t, emit_t) = jax.lax.scan(
             body, init, (keys, forced, flags)
         )
-        return toks_t, emit_t, tok, pos, act, caches
+        # the final budget rides along so the async loop's device carry
+        # can chain dispatches without reading ``generated`` on host
+        return toks_t, emit_t, tok, pos, act, rem, caches
 
     # ----------------------------------------------------------- execute --
     def execute(self, decision: ScheduleDecision) -> StepOutput:
-        """Apply one :class:`ScheduleDecision`: reset preempted slots,
-        activate admissions (prefix-skip slots immediately, prefill /
-        chunked slots through their bucket dispatches), drain cache-
-        extend windows, then scan-decode the decision's decode slots.
+        """Apply one :class:`ScheduleDecision` synchronously:
+        :meth:`dispatch` then :meth:`collect`, back to back.  The legacy
+        engine loop — byte-identical op order to the historical
+        monolithic ``execute`` (the async loop interleaves the two
+        halves across steps instead)."""
+        return self.collect(self.dispatch(decision))
+
+    def dispatch(self, decision: ScheduleDecision) -> InflightStep:
+        """The non-blocking half: reset preempted slots, activate
+        admissions (prefix-skip slots immediately, prefill / chunked
+        slots through their bucket dispatches), drain cache-extend
+        windows, then *enqueue* the decode scan and return without
+        waiting for it.  Prefill and extend stay internally synchronous
+        (their first tokens must be sampled host-side either way); the
+        decode scan — the steady-state hot path — is what pipelines.
         The scheduler already performed the host-side page bookkeeping;
         nothing here chooses anything."""
         tel = self.tel
@@ -371,6 +510,7 @@ class ModelExecutor:
         for idx, req in decision.preempted:
             # pages were freed by the scheduler; drop the execution state
             self.slots[idx] = Slot()
+            self._host_dirty(idx)
             out.preempted.append(req)
         for adm in decision.admissions:
             slot = self.slots[adm.slot]
@@ -383,11 +523,87 @@ class ModelExecutor:
                 slot.active, slot.request = True, adm.request
                 slot.pos = adm.write_from
                 self._activate_tail(slot, adm, adm.write_from)
+                self._host_dirty(adm.slot)
                 out.stats["prefilled"] += 1
         for bucket, group in decision.prefill_groups.items():
             self._dispatch_prefill(bucket, group, out)
         self._dispatch_extend(decision, out)
-        self._run_decode(decision, out)
+        return self._dispatch_decode(decision, out)
+
+    def collect(self, inflight: InflightStep) -> StepOutput:
+        """The blocking half: transfer the decode scan's results to host
+        (the only point the loop waits on the device), route emitted
+        tokens into each slot's request, update slot execution state
+        from the device carry, and retire finished slots.  Under the
+        async loop this runs one step late — while the *next* decision's
+        dispatch is already in flight — so each slot is re-checked
+        against the dispatch-time ``snapshot``: a cancelled or
+        turned-over slot's in-flight tokens are discarded, never routed
+        to a dead stream."""
+        out = inflight.out
+        if inflight.dev is None:
+            return out
+        tel, tr = self.tel, self.tracer
+        decision = inflight.decision
+        tr.collect_begin(inflight.t_dispatch)
+        with tr.phase(tr.collect_phase):
+            toks_t, emit_t, tok_f, pos_f, act_f, rem_f = (
+                np.asarray(x) for x in inflight.dev
+            )
+        tel["decode_time_s"] += time.perf_counter() - inflight.t0
+        with tr.phase("sample"):
+            for idx in inflight.decode_set:
+                slot = self.slots[idx]
+                req = inflight.snapshot.get(idx)
+                if (
+                    req is None
+                    or req.cancelled
+                    or not slot.active
+                    or slot.request is not req
+                    or slot.admit_seq != inflight.admit_seqs.get(idx, -2)
+                ):
+                    # mid-flight cancel, preemption, or slot turnover
+                    # (including the same request re-admitted into the
+                    # same slot — the admit_seq stamp): the tokens this
+                    # dispatch produced for the slot are dropped at the
+                    # one-step-stale boundary; pages were already freed
+                    # by release()/preempt, and a preempted request
+                    # regenerates the discarded tokens after resume
+                    continue
+                for t in range(toks_t.shape[0]):
+                    if not emit_t[t, idx]:
+                        continue
+                    req.generated.append(int(toks_t[t, idx]))
+                    out.stats["decoded"] += 1
+                    tel["tokens_generated"] += 1
+                    out.tokens.append((
+                        req.uid, int(toks_t[t, idx]),
+                        len(req.generated) - 1,
+                    ))
+                slot.pos = int(pos_f[idx])
+                slot.last_token = int(tok_f[idx])
+                if decision.register_decoded:
+                    # decode-completed full pages become shareable too:
+                    # their content is bit-exact with a prefill of the
+                    # same tokens on this datapath
+                    self.cache_mgr.register_filled(
+                        idx, req.resume_tokens, slot.pos
+                    )
+                if not act_f[idx]:
+                    out.finished.append(req)
+                    self.slots[idx] = Slot()
+                    self.cache_mgr.free(idx)
+                    self._host_dirty(idx)
+                else:
+                    self._retire(idx, out)
+        # clear in-flight marks (also for skipped/cancelled slots) —
+        # unless a newer dispatch already re-marked the slot (the async
+        # loop dispatches N+1 before collecting N, often over the same
+        # slots); the marks tell policies which residents have an
+        # uncollected dispatch (preempting one discards its tokens)
+        for idx in inflight.decode_set:
+            if self._slot_dispatch[idx] == inflight.seq:
+                self.slots[idx].inflight = False
         return out
 
     def _activate_tail(self, slot: Slot, adm: Admission, start: int) -> None:
@@ -409,9 +625,29 @@ class ModelExecutor:
 
     def release(self, idx: int) -> None:
         """Immediately free a resident slot's pages and execution state
-        (request cancellation); safe on inactive slots."""
+        (request cancellation); safe on inactive slots.  An in-flight
+        dispatch covering the slot keeps writing through its captured
+        page table — device program order guarantees those writes land
+        before any later dispatch reuses the freed pages, and the next
+        table sync points the row at the trash page."""
         self.cache_mgr.free(idx)
         self.slots[idx] = Slot()
+        self._host_dirty(idx)
+
+    def _host_dirty(self, idx: int) -> None:
+        """Mark host slot state authoritative for ``idx``: the device
+        carry must not override it at the next decode dispatch (fresh
+        admission, extend handoff, preemption, release, retire)."""
+        self._carry_valid[idx] = False
+        self._pos_ub[idx] = self.slots[idx].pos
+
+    def _reserve_cap(self, req: Request) -> int:
+        """The admission-time worst-case length reservation for ``req``
+        (scheduler ``_reserve_len``): the hard cap for conservative page
+        ``ensure`` while the true position is still on device."""
+        return min(
+            len(req.prompt) + req.max_new_tokens, self.serve_cfg.max_seq_len
+        )
 
     def _dispatch_prefill(
         self, bucket: int, group: list[Admission], out: StepOutput
@@ -443,7 +679,13 @@ class ModelExecutor:
             self.caches = self.cache_mgr.write_table(self.caches)
         fn = self._prefill_fn.get(bucket)
         if fn is None:
-            fn = jax.jit(self._prefill_batch)
+            if self.mesh is not None:
+                fn = jax.jit(
+                    self._prefill_batch,
+                    out_shardings=(self._rep_sh, self._cache_out_sh),
+                )
+            else:
+                fn = jax.jit(self._prefill_batch)
             self._prefill_fn[bucket] = fn
             tel["prefill_compiles"] += 1
         t0 = time.perf_counter()
@@ -464,6 +706,7 @@ class ModelExecutor:
             for row, adm in enumerate(group):
                 slot = self.slots[adm.slot]
                 slot.active, slot.request = True, adm.request
+                self._host_dirty(adm.slot)
                 if adm.emits_first_token:
                     nxt = int(first_tokens[row])
                     adm.request.generated.append(nxt)
@@ -532,6 +775,7 @@ class ModelExecutor:
                 n = int(lens[i])
                 del slot.prefill_tail[:n]
                 slot.pos += n
+                self._host_dirty(i)
                 if slot.prefill_tail:
                     continue  # another window next step
                 if slot.pending:
@@ -555,18 +799,32 @@ class ModelExecutor:
                 self._retire(i, out)
         tel["extend_time_s"] += time.perf_counter() - t0
 
-    def _run_decode(self, decision: ScheduleDecision, out: StepOutput):
-        """Scan-decode the decision's decode slots (per-slot active masks;
-        slots outside the decision freeze for this dispatch; a slot still
-        draining a prefill tail is not ready to decode)."""
+    def _dispatch_decode(
+        self, decision: ScheduleDecision, out: StepOutput
+    ) -> InflightStep:
+        """Enqueue the decode scan for the decision's decode slots
+        (per-slot active masks; slots outside the decision freeze for
+        this dispatch; a slot still draining a prefill tail is not ready
+        to decode) and return the :class:`InflightStep` without waiting.
+
+        Synchronous mode builds every scan input from host slot state —
+        the historical op order, byte for byte.  Async mode merges the
+        device carry over the host arrays (outside jit: the program
+        signature is unchanged) for slots whose last dispatch has not
+        been collected yet, so consecutive decode dispatches chain
+        entirely on device; page ``ensure`` then works on a conservative
+        position upper bound (stale-low ``write_from``, +decode_steps
+        upper), which can only over-cover the true write range — extra
+        pages stay within the admission-time worst-case reservation."""
         sc, tel, tr = self.serve_cfg, self.tel, self.tracer
         decode_set = {
             i for i in decision.decode_slots
             if self.slots[i].active and not self.slots[i].prefill_tail
         }
         if not decode_set:
-            return
+            return InflightStep(out=out, decision=decision)
         nb = sc.max_batch
+        use_carry = self.async_loop and self._carry is not None
         with tr.phase("host_prep"):
             forced = np.zeros((sc.decode_steps, nb), np.int32)
             n_forced = np.zeros((nb,), np.int32)
@@ -576,6 +834,22 @@ class ModelExecutor:
                 if nf:
                     forced[:nf, idx] = slot.pending[:nf]
                     n_forced[idx] = nf
+                    # consumed by THIS dispatch: trimming here (not at
+                    # collect) keeps the next dispatch's forced window
+                    # correct even before this one is collected
+                    del slot.pending[:nf]
+                if use_carry and self._carry_valid[idx]:
+                    # true position still on device: ensure against the
+                    # conservative upper bound; write_from = the stale
+                    # host pos (a lower bound) so CoW covers the range
+                    base = self._pos_ub[idx]
+                    upto = min(
+                        base + sc.decode_steps,
+                        self._reserve_cap(slot.request),
+                    )
+                    self._pos_ub[idx] = upto
+                    self.cache_mgr.ensure(idx, upto, write_from=slot.pos)
+                    continue
                 # the scan advances at most min(decode_steps, forced
                 # tail + remaining budget) positions, so this never
                 # outgrows the pages reserved at admission; passing
@@ -591,6 +865,11 @@ class ModelExecutor:
                         sc.max_seq_len),
                     write_from=slot.pos,
                 )
+                if self.async_loop:
+                    self._pos_ub[idx] = min(
+                        slot.pos + min(sc.decode_steps, nf + rem_i),
+                        sc.max_seq_len,
+                    )
             self.caches = self.cache_mgr.flush_copies(self.caches)
             self.caches = self.cache_mgr.write_table(self.caches)
             tokens = np.asarray([s.last_token for s in self.slots], np.int32)
@@ -622,56 +901,69 @@ class ModelExecutor:
                 ],
                 np.int32,
             )
+            if use_carry:
+                # merge: device truth for uncollected slots, host truth
+                # where an admission/extend/release made host fresh.
+                # Plain (B,)-element ops outside jit — no new compiled
+                # engine programs.
+                # .copy() is load-bearing: device_put on the CPU backend
+                # zero-copies an aligned numpy buffer, so handing the
+                # live mask to jax would alias it — the asynchronously
+                # dispatched merge could then read the ``[:] = True``
+                # reset below (or a later ``_host_dirty``) instead of
+                # the merge-time values, silently resurrecting a stale
+                # device carry for a just-turned-over slot
+                v = jnp.asarray(self._carry_valid.copy())
+                c_tok, c_pos, c_act, c_rem = self._carry
+                tok_in = jnp.where(v, c_tok, tokens)
+                pos_in = jnp.where(v, c_pos, positions)
+                act_in = jnp.asarray(active) & jnp.where(v, c_act, True)
+                rem_in = jnp.where(v, c_rem, rem)
+            else:
+                tok_in, pos_in = jnp.asarray(tokens), jnp.asarray(positions)
+                act_in, rem_in = jnp.asarray(active), jnp.asarray(rem)
+            if self.mesh is not None:
+                # commit the per-slot operands to one replicated placement
+                # on every dispatch: an uncommitted host array (first
+                # step) and a committed carry-merge result would
+                # otherwise key two decode programs
+                tok_in, pos_in, act_in, rem_in = (
+                    jax.device_put(x, self._rep_sh)
+                    for x in (tok_in, pos_in, act_in, rem_in)
+                )
         self.key, sub = jax.random.split(self.key)
         if tel["decode_compiles"] == 0:
             tel["decode_compiles"] = 1  # one program, fixed shapes
         t0 = time.perf_counter()
         with tr.phase("dispatch"):
-            toks_t, emit_t, tok_f, pos_f, act_f, self.caches = (
+            toks_t, emit_t, tok_f, pos_f, act_f, rem_f, self.caches = (
                 self._decode_fn(
-                    self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                    jnp.asarray(active), jnp.asarray(rem), jnp.asarray(eos),
+                    self.params, tok_in, pos_in,
+                    act_in, rem_in, jnp.asarray(eos),
                     jnp.asarray(forced), jnp.asarray(n_forced),
                     self.caches, sub,
                 )
             )
         with tr.phase("device"):
             tr.fence((toks_t, emit_t, tok_f, pos_f, act_f, self.caches))
-        with tr.phase("sample"):
-            toks_t, emit_t = np.asarray(toks_t), np.asarray(emit_t)
-            tok_f = np.asarray(tok_f)
-            pos_f, act_f = np.asarray(pos_f), np.asarray(act_f)
-        tel["decode_time_s"] += time.perf_counter() - t0
-        with tr.phase("sample"):
-            for idx in sorted(decode_set):
-                slot = self.slots[idx]
-                if slot.pending:
-                    del slot.pending[:int(n_forced[idx])]
-                for t in range(toks_t.shape[0]):
-                    if not emit_t[t, idx]:
-                        continue
-                    slot.request.generated.append(int(toks_t[t, idx]))
-                    out.stats["decoded"] += 1
-                    tel["tokens_generated"] += 1
-                    out.tokens.append((
-                        slot.request.uid, int(toks_t[t, idx]),
-                        len(slot.request.generated) - 1,
-                    ))
-                slot.pos = int(pos_f[idx])
-                slot.last_token = int(tok_f[idx])
-                if decision.register_decoded:
-                    # decode-completed full pages become shareable too:
-                    # their content is bit-exact with a prefill of the
-                    # same tokens on this datapath
-                    self.cache_mgr.register_filled(
-                        idx, slot.request.resume_tokens, slot.pos
-                    )
-                if not act_f[idx]:
-                    out.finished.append(slot.request)
-                    self.slots[idx] = Slot()
-                    self.cache_mgr.free(idx)
-                else:
-                    self._retire(idx, out)
+        if self.async_loop:
+            # every batch row's scan output reflects the merged (device
+            # or fresh-host) input, so the whole carry is valid until
+            # the next host-side slot mutation
+            self._carry = (tok_f, pos_f, act_f, rem_f)
+            self._carry_valid[:] = True
+        snapshot = {i: self.slots[i].request for i in decode_set}
+        admit_seqs = {i: self.slots[i].admit_seq for i in decode_set}
+        self._dispatch_seq += 1
+        for i in decode_set:
+            self.slots[i].inflight = True
+            self._slot_dispatch[i] = self._dispatch_seq
+        return InflightStep(
+            out=out, decision=decision, decode_set=tuple(sorted(decode_set)),
+            dev=(toks_t, emit_t, tok_f, pos_f, act_f, rem_f),
+            snapshot=snapshot, admit_seqs=admit_seqs, n_forced=n_forced,
+            seq=self._dispatch_seq, t_dispatch=tr.mark_dispatch(), t0=t0,
+        )
 
     def _retire(self, idx: int, out: StepOutput):
         slot = self.slots[idx]
@@ -684,3 +976,4 @@ class ModelExecutor:
     def _finish_slot(self, idx: int):
         self.slots[idx] = Slot()
         self.cache_mgr.free(idx)
+        self._host_dirty(idx)

@@ -780,6 +780,13 @@ class CacheManager:
             int(np.prod(leaf.shape)) * leaf.dtype.itemsize
             for leaf in jax.tree.leaves(self._abstract())
         )
+        #: NamedSharding for the page_table leaf (set by the executor
+        #: when shard_decode is on).  write_table rebuilds the table
+        #: from host numpy each sync; without re-placing it onto the
+        #: mesh the rebuilt leaf would arrive with default (single
+        #: device) sharding and re-key the decode jit cache — a second
+        #: compiled decode program, blowing the budget.
+        self.table_sharding = None
 
     # ----------------------------------------------------------- layout --
     def _layout_kw(self) -> dict:
@@ -801,6 +808,21 @@ class CacheManager:
         return init_caches(
             self.cfg, self.serve_cfg.max_batch, self.serve_cfg.max_seq_len,
             dtype=self.dtype, quantized=self.quantized, **self._layout_kw(),
+        )
+
+    def device_shardings(self, rules) -> PyTree:
+        """NamedSharding tree matching :meth:`init_device_caches` for the
+        given :class:`~repro.distributed.sharding.ShardingRules` — the
+        executor device_puts the live caches onto it when
+        ``ServeConfig.shard_decode`` is on, and stores the page_table
+        leaf in :attr:`table_sharding` so :meth:`write_table` rebuilds
+        land on the same placement."""
+        from repro.distributed.sharding import cache_shardings
+
+        return cache_shardings(
+            rules, self.cfg, self.serve_cfg.max_batch,
+            self.serve_cfg.max_seq_len, quantized=self.quantized,
+            **self._layout_kw(),
         )
 
     # ------------------------------------------------------- allocation --
@@ -1151,10 +1173,17 @@ class CacheManager:
         (no-op for dense or when nothing changed since the last sync)."""
         if self.layout != "paged" or not self._table_dirty:
             return caches
-        table = jnp.asarray(self._table)
+        # .copy() is load-bearing: the CPU backend zero-copies aligned
+        # numpy buffers, so the device table would otherwise alias the
+        # live host table — an in-flight dispatch (async engine loop)
+        # could then observe ``ensure``/``free`` mutations made while
+        # its program is still running
+        table = jnp.asarray(self._table.copy())
         stacked = jnp.broadcast_to(
             table[None], (self.cfg.n_layers,) + table.shape
         )
+        if self.table_sharding is not None:
+            stacked = jax.device_put(stacked, self.table_sharding)
         layers = dict(caches["layers"])
         layers["page_table"] = stacked
         self._table_dirty = False

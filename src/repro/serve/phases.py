@@ -23,6 +23,26 @@ and the off path is :data:`NULL_TRACER`, whose methods are no-ops and
 which never fences: an untraced engine runs the exact code it ran
 before, test-enforced to cost no measurable throughput.
 
+The fenced tracer *destroys the pipeline it measures*: under the
+PR-8 async engine loop (``ServeConfig.async_loop``) a fence between
+dispatch N and schedule N+1 is exactly the serialization the loop
+exists to remove.  :class:`OverlapTracer`
+(``ServeConfig.phase_mode="overlap"``) is the non-fencing alternative:
+it records, per step,
+
+    overlap    host seconds between a dispatch returning and its
+               collect starting — device compute hidden under host
+               work (schedule/host_prep/sample of the next step)
+    collect    the residual blocking wait inside ``collect`` — host
+               time the device did NOT hide (the pipeline bubble)
+
+and its summary adds ``device_overlap_s`` (total overlap),
+``host_bubble_s`` (total collect wait), and ``overlap_efficiency`` =
+overlap / (overlap + bubble) — 1.0 means the loop is fully pipelined,
+0.0 means it is effectively synchronous.  ``overlap`` is an upper
+bound on hidden device time (the device may finish early inside the
+span); ``collect`` is exact.
+
 The tracer always stamps with ``time.perf_counter`` — real host/device
 seconds — even when the engine itself runs on a virtual clock
 (:class:`~repro.serve.workloads.StepClock`): phase timings are physical
@@ -70,6 +90,10 @@ class NullTracer:
 
     enabled = False
     _ctx = _NullCtx()
+    #: record key the executor wraps collect's blocking transfer in
+    #: ("sample" keeps the fenced/untraced record schema; the overlap
+    #: tracer renames it "collect" — the pipeline-bubble measurement)
+    collect_phase = "sample"
 
     def begin_step(self) -> None:
         pass
@@ -82,6 +106,15 @@ class NullTracer:
 
     def fence(self, value):
         return value
+
+    def mark_dispatch(self) -> float:
+        """Timestamp a decode dispatch's return (overlap accounting);
+        the no-op tracer never reads a clock."""
+        return 0.0
+
+    def collect_begin(self, dispatched_at: float) -> None:
+        """Record the dispatch->collect host span as hidden device time
+        (overlap accounting); no-op here."""
 
     def records(self) -> list[dict]:
         return []
@@ -138,6 +171,10 @@ class PhaseTracer:
     """
 
     enabled = True
+    #: per-step record keys the summary reports (subclasses extend)
+    _names = PHASES
+    #: see NullTracer.collect_phase
+    collect_phase = "sample"
 
     def __init__(self, ring: int = 512):
         if ring < 1:
@@ -173,6 +210,16 @@ class PhaseTracer:
         self.fences += 1
         return jax.block_until_ready(value)
 
+    def mark_dispatch(self) -> float:
+        """Timestamp a decode dispatch's return.  The fenced tracer
+        already isolates device time via :meth:`fence`; the stamp is
+        consumed by :class:`OverlapTracer.collect_begin`."""
+        return time.perf_counter()
+
+    def collect_begin(self, dispatched_at: float) -> None:
+        """Overlap accounting hook; the fenced tracer measures device
+        time by fencing instead, so this records nothing."""
+
     # ---------------------------------------------------------- reading --
     def records(self) -> list[dict]:
         """Completed per-step records, oldest first (bounded by the ring)."""
@@ -185,7 +232,7 @@ class PhaseTracer:
         phase summarizes only the steps it appeared in."""
         recs = self.records()
         out: dict = {"steps": len(recs), "ring": self._ring.maxlen}
-        for name in PHASES + ("wall",):
+        for name in self._names + ("wall",):
             xs = sorted(r[name] for r in recs if name in r)
             if not xs:
                 continue
@@ -212,7 +259,63 @@ class PhaseTracer:
         return out
 
 
-def make_tracer(trace: bool, ring: int = 512) -> PhaseTracer | NullTracer:
+class OverlapTracer(PhaseTracer):
+    """The non-fencing tracer for the pipelined loop: same per-phase
+    accumulation as :class:`PhaseTracer`, but :meth:`fence` is a
+    pass-through (device and host stay overlapped) and device time is
+    accounted by *span*, not by blocking:
+
+    * ``overlap`` — host seconds between :meth:`mark_dispatch` (a decode
+      dispatch returned, device busy) and :meth:`collect_begin` (the
+      host finally needs the results).  Under the async loop this span
+      contains the *next* step's schedule/host_prep — exactly the work
+      the pipeline hides.  Upper bound on hidden device time.
+    * ``collect`` — wrapped by the executor around the blocking
+      device->host conversion in ``collect()``: host time the device
+      did not hide (the pipeline bubble).  Exact.
+
+    The summary adds ``device_overlap_s`` / ``host_bubble_s`` /
+    ``overlap_efficiency`` totals over the ring.
+    """
+
+    _names = PHASES + ("collect", "overlap")
+    collect_phase = "collect"
+
+    def fence(self, value):
+        """Never blocks — fencing would serialize the pipeline this
+        tracer exists to measure.  ``fences`` stays 0."""
+        return value
+
+    def collect_begin(self, dispatched_at: float) -> None:
+        if self._cur is not None and dispatched_at > 0.0:
+            span = max(0.0, time.perf_counter() - dispatched_at)
+            self._cur["overlap"] = self._cur.get("overlap", 0.0) + span
+
+    def summary(self) -> dict:
+        out = super().summary()
+        recs = self.records()
+        overlap = sum(r.get("overlap", 0.0) for r in recs)
+        bubble = sum(r.get("collect", 0.0) for r in recs)
+        out["device_overlap_s"] = overlap
+        out["host_bubble_s"] = bubble
+        out["overlap_efficiency"] = (
+            overlap / (overlap + bubble) if (overlap + bubble) > 0 else 0.0
+        )
+        return out
+
+
+def make_tracer(
+    trace: bool, ring: int = 512, mode: str = "fenced"
+) -> PhaseTracer | NullTracer:
     """The ServeConfig -> tracer factory: a live tracer when tracing is
-    requested, the shared no-op otherwise."""
-    return PhaseTracer(ring=ring) if trace else NULL_TRACER
+    requested (``mode`` "fenced" = :class:`PhaseTracer`, "overlap" =
+    :class:`OverlapTracer`), the shared no-op otherwise."""
+    if not trace:
+        return NULL_TRACER
+    if mode == "overlap":
+        return OverlapTracer(ring=ring)
+    if mode == "fenced":
+        return PhaseTracer(ring=ring)
+    raise ValueError(
+        f"phase_mode must be 'fenced' or 'overlap', got {mode!r}"
+    )

@@ -124,6 +124,16 @@ class Slot:
     prefill_tail: list[int] = dataclasses.field(default_factory=list)
     #: admission order stamp — preemption picks the youngest resident
     admit_seq: int = -1
+    #: a decode dispatch referencing this slot is in flight and not yet
+    #: collected (async loop).  Set by the executor at dispatch, cleared
+    #: at collect (unless a newer dispatch re-marked the slot first).
+    #: Policies MAY preempt an in-flight slot: the executor's dispatch
+    #: snapshot discards the uncollected tokens at collect, and the
+    #: resume replays from the host-visible ``generated`` — greedy
+    #: streams regenerate the discarded tokens bit-identically.  Under
+    #: the synchronous loop dispatch/collect run back-to-back and the
+    #: scheduler never observes this True.
+    inflight: bool = False
     #: generated-token count at (re-)admission: a slot is only
     #: preemptable once it has emitted at least one token this
     #: residency, so every preemption cycle nets forward progress (a
@@ -407,7 +417,15 @@ class FifoScheduler:
         has not emitted a token since its (re-)admission: preempting it
         would discard a residency that made no progress, and a
         skip-resumed slot still replaying its teacher-forced tail could
-        be preempted every step forever (livelock)."""
+        be preempted every step forever (livelock).
+
+        A slot with an uncollected decode dispatch in flight (async
+        loop) IS preemptable: collect discards its in-flight tokens
+        (executor snapshot guard) and the resume regenerates them, so
+        greedy streams stay identical.  Excluding in-flight victims
+        would starve preemption entirely under the pipelined loop —
+        every decoding resident has a dispatch in flight at schedule
+        time."""
         if not self.preempt_enabled:
             return False
         taken = {idx for idx, _ in decision.preempted}
