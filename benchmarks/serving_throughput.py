@@ -42,6 +42,19 @@ instead gains ``device_overlap_s`` / ``host_bubble_s`` /
 which is the number ``--async-loop`` exists to raise (and the matrix
 ``--check`` gate can guard).
 
+``--speculative`` turns on draft-propose/target-verify speculative
+decoding (self-draft, ``--spec-tokens`` per verify step); the derived
+column gains ``draft_tokens_proposed``/``draft_tokens_accepted``/
+``acceptance_rate``/``spec_dispatches``.  ``--temperature-mix 0,0.7``
+cycles per-request sampling temperatures across the wave (sampled rows
+get deterministic per-request seeds, so the wave stays reproducible);
+``--n-best N`` fans every prompt into N siblings that share generated
+KV pages (forces the paged layout) and the derived column gains
+``forks``/``gen_pages_shared``.  ``--record --ablation speculative``
+appends a plain-decode vs speculative before/after entry (after
+records carry ``acceptance_rate``; with ``--api stream`` both sides
+carry ``itl_ms_p95``).
+
 CSV rows: ``name,us_per_call,derived`` where ``us_per_call`` is mean
 microseconds per generated token and ``derived`` packs
 ``tok_s=<tokens/s>;prefill_compiles=<n>;decode_compiles=<n>;``
@@ -57,7 +70,7 @@ import numpy as np
 from repro import configs
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import lm
-from repro.serve import Engine, workloads
+from repro.serve import Engine, SamplingParams, workloads
 
 
 def physics_scale_lm() -> ModelConfig:
@@ -110,7 +123,8 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
                api="batch", n_requests=8, max_new=16, seed=0,
                cache_extend=True, scheduler="fifo", deadline_ms=None,
                trace_phases=False, async_loop=False, phase_mode="fenced",
-               repeats=1):
+               repeats=1, speculative=False, spec_tokens=4,
+               temperature_mix=None, n_best=1):
     prefix_mode = workload == "prefix"
     poisson_mode = workload == "poisson"
     clock = workloads.StepClock() if poisson_mode else None
@@ -124,6 +138,7 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             cache_extend=cache_extend, scheduler=scheduler,
             deadline_ms=deadline_ms, trace_phases=trace_phases,
             async_loop=async_loop, phase_mode=phase_mode,
+            speculative=speculative, spec_tokens=spec_tokens,
         ),
         clock=clock,
     )
@@ -148,12 +163,24 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             return rep.host_wall_s, [], [], rep
         rng = np.random.default_rng(wave_seed)
         handles = []
-        for _ in range(n_requests):
+        for j in range(n_requests):
             payload = list(
                 rng.integers(0, cfg.vocab_size, int(rng.integers(3, 14)))
             )
             prompt = preamble + payload if prefix_mode else payload
-            handles.append(eng.submit(prompt, max_new_tokens=max_new))
+            # --temperature-mix cycles per-request temperatures through
+            # the wave (sampled rows carry a per-request seed, so mixed
+            # waves stay deterministic per wave_seed)
+            if temperature_mix:
+                t = float(temperature_mix[j % len(temperature_mix)])
+                sp = SamplingParams(
+                    max_new_tokens=max_new, temperature=t,
+                    seed=(wave_seed * 1000 + j) if t > 0 else None,
+                )
+            else:
+                sp = SamplingParams(max_new_tokens=max_new)
+            h = eng.submit(prompt, sp, n=n_best)
+            handles.extend(h if isinstance(h, list) else [h])
         t0 = time.perf_counter()
         if api == "stream":
             ttfts, gaps = _stream_wave(eng, handles)
@@ -208,6 +235,20 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             f";deadline_dropped={rep.dropped}"
             f";miss_rate={rep.miss_rate:.2f}"
         )
+    if speculative:
+        prop = tel["draft_tokens_proposed"]
+        acc = tel["draft_tokens_accepted"]
+        derived += (
+            f";draft_tokens_proposed={prop}"
+            f";draft_tokens_accepted={acc}"
+            f";acceptance_rate={acc / max(prop, 1):.3f}"
+            f";spec_dispatches={tel['spec_dispatches']}"
+        )
+    if n_best > 1:
+        derived += (
+            f";forks={tel['forks']}"
+            f";gen_pages_shared={tel['gen_pages_shared']}"
+        )
     if trace_phases:
         for ph, s in tel["phases"].items():
             if isinstance(s, dict):
@@ -236,9 +277,13 @@ def run(policy: str | None = None, kv_layout: str = "dense",
         cache_extend: bool = True, scheduler: str = "fifo",
         deadline_ms: float | None = None,
         trace_phases: bool = False, async_loop: bool = False,
-        phase_mode: str = "fenced", repeats: int = 1) -> list[str]:
+        phase_mode: str = "fenced", repeats: int = 1,
+        speculative: bool = False, spec_tokens: int = 4,
+        temperature_mix=None, n_best: int = 1) -> list[str]:
     if workload == "prefix" and kv_layout == "dense":
         kv_layout = "paged"  # sharing needs pages; dense would be inert
+    if n_best > 1 and kv_layout == "dense":
+        kv_layout = "paged"  # generation-page sharing needs refcounted pages
     rows = ["bench,config,batch,decode_steps,us_per_token,derived"]
     archs = [
         ("physics_scale", physics_scale_lm()),
@@ -260,6 +305,8 @@ def run(policy: str | None = None, kv_layout: str = "dense",
                         deadline_ms=deadline_ms,
                         trace_phases=trace_phases, async_loop=async_loop,
                         phase_mode=phase_mode, repeats=repeats,
+                        speculative=speculative, spec_tokens=spec_tokens,
+                        temperature_mix=temperature_mix, n_best=n_best,
                     )
                 )
     return rows
@@ -332,6 +379,11 @@ def record_trajectory(path: str, ablation: str = "cache_extend",
     * ``"async_loop"`` — synchronous vs pipelined engine loop, same
       seeded workload; with ``api="stream"`` the before/after records
       carry ``itl_ms_p95``, the overlap loop's acceptance metric.
+    * ``"speculative"`` — plain decode vs draft-propose/target-verify
+      speculative decoding (self-draft), same seeded greedy workload;
+      the after records carry ``acceptance_rate`` and — with
+      ``api="stream"`` — the before/after ``itl_ms_p95`` comparison
+      speculation exists to win.
     """
     import datetime
     import json
@@ -342,10 +394,13 @@ def record_trajectory(path: str, ablation: str = "cache_extend",
     elif ablation == "async_loop":
         before = run(async_loop=False, **run_kw)
         after = run(async_loop=True, **run_kw)
+    elif ablation == "speculative":
+        before = run(speculative=False, **run_kw)
+        after = run(speculative=True, **run_kw)
     else:
         raise ValueError(
-            f"ablation must be 'cache_extend' or 'async_loop', "
-            f"got {ablation!r}"
+            f"ablation must be 'cache_extend', 'async_loop', or "
+            f"'speculative', got {ablation!r}"
         )
     entry = {
         "bench": "serving_throughput",
@@ -411,10 +466,29 @@ def main():
                     help="pipelined engine loop (ServeConfig.async_loop) "
                          "for every sweep point")
     ap.add_argument("--ablation", default="cache_extend",
-                    choices=("cache_extend", "async_loop"),
+                    choices=("cache_extend", "async_loop", "speculative"),
                     help="--record before/after axis: cache-extend off/on "
-                         "(historical) or sync/async engine loop (with "
-                         "--api stream the records carry itl_ms_p95)")
+                         "(historical), sync/async engine loop (with "
+                         "--api stream the records carry itl_ms_p95), or "
+                         "plain-decode vs speculative decoding (after "
+                         "records carry acceptance_rate)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-propose/target-verify speculative decoding "
+                         "(self-draft) for every sweep point; derived "
+                         "gains draft_tokens_proposed/accepted, "
+                         "acceptance_rate, spec_dispatches")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="draft tokens proposed per verify step under "
+                         "--speculative / --ablation speculative")
+    ap.add_argument("--temperature-mix", default=None, metavar="T0,T1,...",
+                    help="comma-separated per-request temperatures cycled "
+                         "across the wave (e.g. '0,0.7,1.0'); sampled "
+                         "rows get deterministic per-request seeds so "
+                         "the wave stays reproducible")
+    ap.add_argument("--n-best", type=int, default=1,
+                    help="fan each prompt into N siblings that share "
+                         "generated KV pages (forces --kv-layout paged); "
+                         "derived gains forks / gen_pages_shared")
     ap.add_argument("--no-cache-extend", action="store_true",
                     help="disable the cache-extending prefill program "
                          "(pre-extend behavior: skip/chunk/preempt gated "
@@ -429,6 +503,9 @@ def main():
                          "PATH instead of printing one CSV sweep")
     args = ap.parse_args()
     t0 = time.time()
+    temperature_mix = None
+    if args.temperature_mix:
+        temperature_mix = [float(x) for x in args.temperature_mix.split(",")]
     if args.record:
         record_kw = dict(
             policy=args.policy, kv_layout=args.kv_layout,
@@ -436,13 +513,33 @@ def main():
             scheduler=args.scheduler, deadline_ms=args.deadline_ms,
             repeats=args.repeats,
         )
+        if temperature_mix is not None:
+            record_kw["temperature_mix"] = temperature_mix
+        if args.n_best > 1:
+            record_kw["n_best"] = args.n_best
         if args.ablation == "cache_extend" and args.async_loop:
             record_kw["async_loop"] = True
+        if args.ablation == "speculative":
+            record_kw["spec_tokens"] = args.spec_tokens
+        elif args.speculative:
+            record_kw["speculative"] = True
+            record_kw["spec_tokens"] = args.spec_tokens
         entry = record_trajectory(
             args.record, ablation=args.ablation, **record_kw
         )
         n = len(load_trajectory(args.record))
-        if args.ablation == "async_loop" and args.api == "stream":
+        if args.ablation == "speculative":
+            acc = [a.get("acceptance_rate") for a in entry["after"]]
+            itl = [
+                (b.get("itl_ms_p95"), a.get("itl_ms_p95"))
+                for b, a in zip(entry["before"], entry["after"])
+            ] if args.api == "stream" else None
+            print(f"# appended run {entry['git_rev']}@{entry['date']} to "
+                  f"{args.record} ({n} entries); "
+                  f"acceptance_rate per point: {acc}"
+                  + (f"; itl_ms_p95 plain->spec per point: {itl}"
+                     if itl is not None else ""))
+        elif args.ablation == "async_loop" and args.api == "stream":
             itl = [
                 (b.get("itl_ms_p95"), a.get("itl_ms_p95"))
                 for b, a in zip(entry["before"], entry["after"])
@@ -464,7 +561,11 @@ def main():
                    scheduler=args.scheduler, deadline_ms=args.deadline_ms,
                    trace_phases=args.trace_phases,
                    async_loop=args.async_loop, phase_mode=args.phase_mode,
-                   repeats=args.repeats)
+                   repeats=args.repeats,
+                   speculative=args.speculative,
+                   spec_tokens=args.spec_tokens,
+                   temperature_mix=temperature_mix,
+                   n_best=args.n_best)
         for row in rows:
             print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")

@@ -106,6 +106,16 @@ def main():
           f"{tel['kv_bytes'] / 2**20:.2f} MiB | "
           f"pages peak {tel['pages_in_use_peak']}/{tel['pages_capacity']} "
           f"(page_size={tel['kv_page_size']})")
+    if args.speculative:
+        acc = tel["draft_tokens_accepted"] / max(
+            tel["draft_tokens_proposed"], 1
+        )
+        print(f"speculative: draft={args.draft or 'self'} "
+              f"k={args.spec_tokens} | "
+              f"proposed {tel['draft_tokens_proposed']} / "
+              f"accepted {tel['draft_tokens_accepted']} "
+              f"(rate {acc:.2f}) | "
+              f"{tel['spec_dispatches']} verify dispatches")
     if args.kv_prefix_cache or args.kv_preemption:
         print(f"prefix cache: hit rate {tel['prefix_hit_rate']:.2f} | "
               f"prefill tokens saved {tel['prefill_tokens_saved']} "

@@ -228,6 +228,12 @@ class TrainConfig:
 class ServeConfig:
     max_batch: int = 8
     max_seq_len: int = 1024
+    # Engine-default softmax temperature (0.0 = greedy).  A per-request
+    # SamplingParams.temperature overrides it; the knobs ride the
+    # compiled programs as traced per-slot arrays (serve/sampling.py),
+    # so mixing greedy and sampled requests in one batch mints no extra
+    # programs — the len(prefill_buckets)+2 jit budget is unchanged and
+    # test-enforced.
     temperature: float = 0.0
     # Declarative serving precision: a PrecisionPolicy, a preset name
     # ("int8_serve", "paper_vu13p", "qat_fixed<12,6>", ...), or None.
@@ -258,9 +264,12 @@ class ServeConfig:
     # writes into a shared page copy-on-write a private copy first, so
     # every logit stays bit-identical to the dense layout — greedy
     # (temperature=0) token streams are bit-identical too,
-    # test-enforced.  Sampled (temperature>0) streams are equally
-    # distributed but not reproducible against a dense run: skipping a
-    # prefill dispatch reshuffles which PRNG key samples which token.
+    # test-enforced.  Unseeded sampled (temperature>0) streams are
+    # equally distributed but not reproducible against a dense run:
+    # skipping a prefill dispatch reshuffles which engine PRNG key
+    # samples which token.  Requests with an explicit
+    # SamplingParams.seed are exempt — their streams are keyed by
+    # (seed, position) and survive any rescheduling (test-enforced).
     # A hit additionally skips the prompt-prefill dispatch (prefill-skip):
     # bit-exact float-GQA engines teacher-force the uncovered tail through
     # the decode program, every other datapath (MLA, int8 KV, LUT softmax)
@@ -279,8 +288,9 @@ class ServeConfig:
     # math that originally wrote each position — so greedy token streams
     # stay identical to the unpreempted run on every datapath (see the
     # README datapath-capability matrix).  The identity guarantee is on
-    # logits and greedy token streams; a resume changes the PRNG dispatch
-    # schedule for sampled decoding.
+    # logits and greedy token streams; a resume changes the PRNG
+    # dispatch schedule for unseeded sampled decoding (seeded requests
+    # are position-keyed and reproduce exactly, test-enforced).
     kv_preemption: bool = False
     # --- engine v2: bucketed prefill + scan decode ---
     # Prompt-length buckets for prefill padding.  None = auto powers of two
@@ -324,6 +334,33 @@ class ServeConfig:
     # legacy bit-exact gating.  Disable to restore the pre-extend
     # behavior (quantized datapaths silently skip the optimizations).
     cache_extend: bool = True
+    # --- speculative decoding (serve/executor.py DraftWorker) ---
+    # A small draft model greedily proposes up to ``spec_tokens`` tokens
+    # per sampling-ready resident slot; the target model verifies the
+    # whole proposal in ONE cache-extending prefill dispatch
+    # (accept-prefix + one correction token).  Rejected drafts rewind
+    # through the existing window-write machinery: extend writes are
+    # position-idempotent, so the stale tail is simply overwritten by
+    # the next accepted window.  Requires the cache-extending prefill
+    # program (``cache_extend``); silently off (with a warning) where
+    # that program is unavailable.  The target's jit budget is unchanged
+    # — the draft model adds its own bounded program set (at most
+    # len(prefill_buckets) draft prefills + 1 propose scan,
+    # CI-enforced).  Greedy (temperature=0) token streams are bitwise
+    # identical to non-speculative decoding on bit-exact datapaths
+    # (test-enforced); per-request acceptance counters land in
+    # telemetry.
+    speculative: bool = False
+    # Draft tokens proposed per verification window; clamped to the
+    # extend program's window width.
+    spec_tokens: int = 4
+    # Zoo config name for the draft model (resolved by the Engine, which
+    # initializes fresh params for it — pass explicit draft params via
+    # ``Engine(draft=...)`` for a trained draft).  None/"self" = use the
+    # target model as its own draft: acceptance approaches 1.0, which
+    # exercises the full verify/rewind machinery and bounds the
+    # best-case speedup, without needing a second trained model.
+    draft_config: str | None = None
     # --- SLO-aware scheduling (serve/slo.py DeadlineScheduler) ---
     # Scheduling policy the engine builds when no explicit
     # ``scheduler_factory`` is passed.  "fifo": the historical
@@ -380,9 +417,11 @@ class ServeConfig:
     # for step N+1's decode scan stays on device (no host round-trip
     # between consecutive decode dispatches).  Greedy (temperature=0)
     # token streams are bit-identical to the synchronous loop on every
-    # datapath/layout (test-enforced); sampled streams are equally
-    # distributed but may diverge (the dispatch schedule reshuffles PRNG
-    # key splits, same caveat as prefix-skip and preemption).  Cancels
+    # datapath/layout (test-enforced); unseeded sampled streams are
+    # equally distributed but may diverge (the dispatch schedule
+    # reshuffles PRNG key splits, same caveat as prefix-skip and
+    # preemption; seeded requests are position-keyed and reproduce
+    # exactly).  Cancels
     # and EDF deadline drops act at a one-step-stale boundary: up to one
     # in-flight dispatch's tokens for a cancelled request are discarded,
     # and preemption victims are only picked among fully-collected slots

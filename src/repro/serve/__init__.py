@@ -13,6 +13,7 @@ from repro.serve.scheduler import (  # noqa: F401
 )
 from repro.serve.slo import DeadlineScheduler  # noqa: F401
 from repro.serve.executor import (  # noqa: F401
+    DraftWorker,
     InflightStep,
     ModelExecutor,
     StepOutput,
@@ -20,7 +21,11 @@ from repro.serve.executor import (  # noqa: F401
 from repro.serve.api import Engine, RequestHandle, TokenEvent  # noqa: F401
 from repro.serve.router import ReplicaRouter  # noqa: F401
 from repro.serve.engine import ServingEngine  # noqa: F401  (deprecated shim)
-from repro.serve.sampling import SamplingParams, sample  # noqa: F401
+from repro.serve.sampling import (  # noqa: F401
+    SamplingParams,
+    sample,
+    sample_tokens,
+)
 from repro.serve.phases import (  # noqa: F401
     NULL_TRACER,
     NullTracer,

@@ -135,9 +135,28 @@ class Engine:
         seed: int = 0,
         scheduler_factory: Callable[..., Scheduler] | None = None,
         clock: Callable[[], float] | None = None,
+        replica: int = 0,
+        draft: tuple[ModelConfig, PyTree] | None = None,
     ):
+        sc_in = serve_cfg or ServeConfig()
+        if (
+            draft is None
+            and sc_in.speculative
+            and sc_in.draft_config not in (None, "self")
+        ):
+            # resolve the named draft from the config zoo (reduced =
+            # CPU-sized smoke shapes); the executor rejects a draft
+            # whose vocabulary differs from the target's
+            import jax
+
+            from repro.configs import get_config
+            from repro.models import lm
+
+            dcfg = get_config(sc_in.draft_config, reduced=True)
+            draft = (dcfg, lm.init_params(dcfg, jax.random.PRNGKey(seed)))
         self.executor = ModelExecutor(
-            cfg, params, serve_cfg, kernel=kernel, seed=seed
+            cfg, params, serve_cfg, kernel=kernel, seed=seed,
+            replica=replica, draft=draft,
         )
         self.serve_cfg = self.executor.serve_cfg
         self.clock = clock if clock is not None else time.perf_counter
@@ -203,11 +222,21 @@ class Engine:
         max_new_tokens: int | None = None,
         eos_id: int | None = None,
         deadline_s: float | None = None,
-    ) -> RequestHandle:
+        n: int = 1,
+    ) -> RequestHandle | list[RequestHandle]:
         """Enqueue a prompt.  Per-request knobs ride a
         :class:`~repro.serve.sampling.SamplingParams` (or the keyword
         shortcuts); returns a handle for :meth:`stream` / :meth:`cancel`
         / :meth:`result`.
+
+        ``n > 1`` fans the prompt into n independent candidates (n-best
+        sampling) and returns a list of n handles.  On paged engines the
+        siblings fork off the first candidate's live KV pages
+        copy-on-write — prompt pages AND already-generated-into pages
+        are shared until a sibling diverges — so the prompt prefills
+        once, not n times.  Each sibling draws its own sampled stream: a
+        seeded request's siblings get consecutive seeds (seed + i),
+        unseeded siblings diverge through the engine dispatch key.
 
         ``deadline_s`` is the request's completion budget in seconds
         from now (engine clock); None inherits
@@ -223,6 +252,20 @@ class Engine:
             raise ValueError(
                 "pass either SamplingParams or the keyword shortcuts, not both"
             )
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        if params.temperature is not None and params.temperature < 0:
+            raise ValueError(
+                f"temperature must be >= 0, got {params.temperature}"
+            )
+        if params.top_k is not None and params.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {params.top_k}")
+        if params.top_p is not None and not 0.0 < params.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {params.top_p}"
+            )
+        if params.seed is not None and params.seed < 0:
+            raise ValueError(f"seed must be >= 0, got {params.seed}")
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.serve_cfg.max_seq_len:
@@ -234,12 +277,6 @@ class Engine:
             deadline_s = self.serve_cfg.deadline_ms / 1e3
         if deadline_s is not None and deadline_s <= 0:
             raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
-        now = self.clock()
-        req = Request(
-            self._uid + 1, list(prompt), params.max_new_tokens, params.eos_id,
-            created_at=now, submitted_at=now,
-            deadline_at=None if deadline_s is None else now + deadline_s,
-        )
         cache = self.executor.cache_mgr
         need = cache.pages_for(
             min(len(prompt) + params.max_new_tokens, self.serve_cfg.max_seq_len)
@@ -251,11 +288,31 @@ class Engine:
                 f"holds {cache.pages_capacity}; raise "
                 "ServeConfig.kv_pages or lower max_new_tokens"
             )
-        self._uid += 1
-        self._requests[req.uid] = req
-        self._events[req.uid] = collections.deque()
-        self.scheduler.enqueue(req)
-        return RequestHandle(req.uid)
+        handles = []
+        fork_of = None
+        for i in range(n):
+            now = self.clock()
+            req = Request(
+                self._uid + 1, list(prompt),
+                params.max_new_tokens, params.eos_id,
+                created_at=now, submitted_at=now,
+                deadline_at=None if deadline_s is None else now + deadline_s,
+            )
+            req.temperature = params.temperature
+            req.top_k = params.top_k
+            req.top_p = params.top_p
+            req.seed = (
+                None if params.seed is None else params.seed + i
+            )
+            req.fork_of = fork_of
+            self._uid += 1
+            self._requests[req.uid] = req
+            self._events[req.uid] = collections.deque()
+            self.scheduler.enqueue(req)
+            handles.append(RequestHandle(req.uid))
+            if fork_of is None:
+                fork_of = req.uid
+        return handles if n > 1 else handles[0]
 
     def cancel(self, handle: RequestHandle | int) -> bool:
         """Cancel a request: a queued one is dropped before it ever

@@ -86,6 +86,20 @@ def add_serving_args(
                     help="disable the cache-extending prefill program "
                          "(chunked prefill / prefix-skip / preemption fall "
                          "back to bit-exact-datapath gating, as before)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding: a draft model proposes "
+                         "--spec-tokens greedy tokens per slot; the target "
+                         "verifies the window in one cache-extending "
+                         "dispatch (accept-prefix + correction; greedy "
+                         "output stays bitwise identical on bit-exact "
+                         "datapaths)")
+    ap.add_argument("--draft", default=None,
+                    help="draft model for --speculative: a config-zoo arch "
+                         "name (reduced shape), or 'self'/omitted for "
+                         "self-drafting with the target model")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="draft tokens proposed per speculative step "
+                         "(capped by the extend window width)")
     ap.add_argument("--stream", action="store_true",
                     help="consume requests through Engine.stream "
                          "(per-token events with TTFT) instead of the "
@@ -153,6 +167,9 @@ def config_from_args(args: argparse.Namespace, model_cfg) -> ServeConfig:
         kv_prefix_cache=args.kv_prefix_cache,
         kv_preemption=args.kv_preemption,
         cache_extend=not getattr(args, "no_cache_extend", False),
+        speculative=getattr(args, "speculative", False),
+        spec_tokens=getattr(args, "spec_tokens", 4),
+        draft_config=getattr(args, "draft", None),
         scheduler=getattr(args, "scheduler", "fifo"),
         deadline_ms=getattr(args, "deadline_ms", None),
         overdue_policy=getattr(args, "overdue", "drop"),

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any
 
 import jax
@@ -39,14 +40,16 @@ from repro.core import precision as precision_lib
 from repro.models import lm
 from repro.serve import kv_cache
 from repro.serve.phases import NULL_TRACER
-from repro.serve.sampling import sample
+from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import (
+    MODE_FORK,
     MODE_SKIP,
     Admission,
     ExecutorCaps,
     Request,
     ScheduleDecision,
     Slot,
+    encode_sampling,
 )
 
 PyTree = Any
@@ -118,6 +121,127 @@ class InflightStep:
         )
 
 
+class DraftWorker:
+    """The draft side of speculative decoding: a (small) model with its
+    own dense float KV cache that greedily proposes ``spec_k`` tokens per
+    resident slot in one scan dispatch.
+
+    Program discipline mirrors the target executor's: at most
+    ``len(buckets)`` draft prefill programs (used to resync a slot's
+    draft cache from its token history after any host-side turnover)
+    plus ONE propose-scan program, all at fixed ``(max_batch, ...)``
+    shapes.  The draft cache is always dense float32 at
+    ``max_batch x max_seq_len`` — the draft never pages and never
+    quantizes, so its decode math is its own prefill math and resyncs
+    are cheap and exact.
+
+    ``pos[i]``/``tok[i]`` track which (position, carry token) the draft
+    cache row i is synced to; ``-1`` means unsynced (the target
+    executor's ``_host_dirty`` hook invalidates on every slot turnover).
+    """
+
+    def __init__(self, cfg, params, serve_cfg, buckets, spec_k):
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        self.buckets = tuple(buckets)
+        self.spec_k = int(spec_k)
+        nb = serve_cfg.max_batch
+        self.caches = kv_cache.init_caches(
+            cfg, nb, serve_cfg.max_seq_len, dtype=jnp.float32,
+            quantized=False,
+        )
+        self.pos = [-1] * nb
+        self.tok = [0] * nb
+        self._prefill_fn: dict[int, Any] = {}
+        self._propose_fn = jax.jit(self._propose_scan)
+
+    def bucket_for(self, n: int) -> int | None:
+        """Smallest draft prefill bucket covering ``n`` history tokens
+        (None when the history outgrew every bucket — the slot simply
+        decodes without speculation)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return None
+
+    def _prefill_batch(self, params, tokens, lengths, caches, slots):
+        """Rebuild draft cache rows from token histories in one bucketed
+        dispatch (same row conventions as the target's prefill: pad rows
+        carry length 0 and slot ``max_batch``, dropped by the dense
+        scatter)."""
+        nb, bucket = tokens.shape
+        mask = jnp.arange(bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
+        tokens = jnp.where(mask, tokens, 0)
+        small = kv_cache.init_caches(
+            self.cfg, nb, self.sc.max_seq_len, dtype=jnp.float32,
+            quantized=False,
+        )
+        _, filled, _ = lm.forward(
+            params, self.cfg, {"tokens": tokens}, mode="prefill",
+            caches=small,
+        )
+        filled = kv_cache.mask_cache_tail(filled, lengths)
+        return kv_cache.insert_prefill_dense(caches, filled, slots)
+
+    def _propose_scan(self, params, tokens, positions, active, caches):
+        """Propose ``spec_k`` greedy tokens per active row in one scan.
+        Row i processes its carry token at ``positions[i]`` (writing its
+        KV) and argmaxes the next, exactly like the target decode scan
+        minus sampling and emission bookkeeping.  Inactive rows freeze;
+        their repeated same-position writes are idempotent."""
+        def body(carry, _):
+            tok, pos, c = carry
+            logits, new_c, _ = lm.forward(
+                params, self.cfg, {"tokens": tok[:, None]}, mode="decode",
+                caches=c, positions=pos,
+            )
+            nxt = jnp.where(
+                active,
+                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                tok,
+            )
+            new_pos = jnp.where(active, pos + 1, pos)
+            return (nxt, new_pos, new_c), nxt
+
+        (tok, pos, caches), toks_t = jax.lax.scan(
+            body, (tokens, positions, caches), None, length=self.spec_k
+        )
+        return toks_t, caches
+
+    def sync(self, need: list[tuple[int, list[int]]], tel: dict) -> None:
+        """Resync draft cache rows from their token histories, grouped by
+        the smallest covering bucket.  ``need`` rows were pre-filtered to
+        fit a bucket; empty histories just mark synced (nothing to
+        write)."""
+        groups: dict[int, list[tuple[int, list[int]]]] = {}
+        for i, hist in need:
+            if not hist:
+                continue
+            groups.setdefault(self.bucket_for(len(hist)), []).append((i, hist))
+        nb = self.sc.max_batch
+        for bucket in sorted(groups):
+            grp = groups[bucket]
+            toks = np.zeros((nb, bucket), np.int32)
+            lengths = np.zeros((nb,), np.int32)
+            slot_arr = np.full((nb,), nb, np.int32)
+            for row, (i, hist) in enumerate(grp):
+                toks[row, : len(hist)] = hist
+                lengths[row] = len(hist)
+                slot_arr[row] = i
+            fn = self._prefill_fn.get(bucket)
+            if fn is None:
+                fn = jax.jit(self._prefill_batch)
+                self._prefill_fn[bucket] = fn
+                tel["draft_prefill_compiles"] = (
+                    tel.get("draft_prefill_compiles", 0) + 1
+                )
+            self.caches = fn(
+                self.params, jnp.asarray(toks), jnp.asarray(lengths),
+                self.caches, jnp.asarray(slot_arr),
+            )
+
+
 class ModelExecutor:
     def __init__(
         self,
@@ -126,6 +250,8 @@ class ModelExecutor:
         serve_cfg: ServeConfig | None = None,
         kernel: dict | None = None,
         seed: int = 0,
+        replica: int = 0,
+        draft: tuple[ModelConfig, PyTree] | None = None,
     ):
         self.serve_cfg = serve_cfg or ServeConfig()
         if self.serve_cfg.decode_steps < 1:
@@ -138,6 +264,15 @@ class ModelExecutor:
             )
         self.kernel = kernel or {}
         self.key = jax.random.PRNGKey(seed)
+        # Replica salt: fold the replica index into the dispatch key so a
+        # router's replicas draw distinct unseeded sampled streams even
+        # when handed the same base seed.  fold_in (not seed + replica)
+        # keeps (seed, replica) pairs collision-free.  Per-request seeded
+        # streams are position-keyed and replica-independent by design,
+        # so the salt leaves them untouched.
+        self.replica = int(replica)
+        if self.replica:
+            self.key = jax.random.fold_in(self.key, self.replica)
 
         # Precision: one declarative policy governs weights (offline PTQ /
         # int8 quantize-dequantize; the true int8 GEMM path is
@@ -315,8 +450,47 @@ class ModelExecutor:
             "prefill_time_s": 0.0,
             "decode_time_s": 0.0,
             "extend_time_s": 0.0,
+            "draft_tokens_proposed": 0,
+            "draft_tokens_accepted": 0,
+            "spec_dispatches": 0,
+            "spec_time_s": 0.0,
             "steps": 0,
         }
+
+        # Speculative decoding: a draft model proposes spec_tokens greedy
+        # tokens per resident decoding slot; the target verifies the whole
+        # window in ONE cache-extending dispatch and accepts the longest
+        # matching prefix plus a correction token.  The verify path IS the
+        # extend program (no new target program — the len(buckets)+2
+        # budget holds); rejected draft tokens rewind through the same
+        # position-idempotent window-write machinery that extend replay
+        # uses, which is why the feature is gated to cache_extend
+        # datapaths.  The draft worker owns its own bounded program set
+        # (at most len(buckets) draft prefills + 1 propose scan).
+        self.draft: DraftWorker | None = None
+        self.spec_k = 0
+        if sc.speculative and not self.cache_extend:
+            warnings.warn(
+                "speculative decoding disabled: it verifies drafts through "
+                "the cache-extending prefill program, which this datapath "
+                "does not support (cache_extend off, unbucketable cache, "
+                "or the Pallas prefill kernel)",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        elif sc.speculative:
+            dcfg, dparams = draft if draft is not None else (
+                self.cfg, self.params
+            )
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    "draft model must share the target vocabulary: "
+                    f"draft {dcfg.vocab_size} vs target {cfg.vocab_size}"
+                )
+            self.spec_k = max(1, min(int(sc.spec_tokens), self.extend_width))
+            self.draft = DraftWorker(
+                dcfg, dparams, sc, self.buckets, self.spec_k
+            )
 
     # ------------------------------------------------------------- view --
     @property
@@ -406,8 +580,10 @@ class ModelExecutor:
         cache entries and logits bitwise what a whole-prompt prefill
         would have produced at those positions.  Masked entries carry
         the ``max_seq_len`` sentinel position (dropped / trash-paged).
-        Returns (per-row logits at the window's last valid position,
-        updated caches).
+        Returns (full per-window logits (max_batch, W, V), updated
+        caches) — tail replay selects each row's last valid position
+        eagerly on host, while speculative verification consumes every
+        window position's logits, so ONE program serves both.
         """
         cfg = self.cfg
         nb, w = tokens.shape
@@ -419,17 +595,20 @@ class ModelExecutor:
             params, cfg, {"tokens": tokens}, mode="extend",
             caches=caches, positions=positions, kernel=self.kernel,
         )
-        idx = jnp.maximum(win_len - 1, 0)[:, None, None]
-        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
-        return last, new_caches
+        return logits, new_caches
 
     def _decode_scan(self, params, tokens, positions, active, rem, eos,
-                     forced, n_forced, caches, key):
+                     temp, top_k, top_p, seed, forced, n_forced, caches,
+                     key):
         """Run ``decode_steps`` fused decode steps under one dispatch.
 
         All arrays are per-slot (B,): ``tokens`` last sampled token,
         ``positions`` next write position, ``active`` live mask, ``rem``
         generation budget left, ``eos`` per-request eos id (-1 = none).
+        ``temp``/``top_k``/``top_p``/``seed`` are the stacked per-request
+        sampling knobs (scheduler-stamped sentinels when absent — see
+        ``encode_sampling``); they ride the dispatch exactly like ``eos``
+        so a mixed greedy/sampled batch shares this one program.
         Inactive slots freeze (token, position); re-running a frozen
         position is idempotent for position-addressed caches (dense slabs
         and pages alike — retired paged slots write the trash page) and
@@ -464,7 +643,10 @@ class ModelExecutor:
                 params, self.cfg, {"tokens": tok[:, None]}, mode="decode",
                 caches=c, positions=pos, kernel=self.kernel,
             )
-            sampled = sample(logits[:, -1], k, temperature=sc.temperature)
+            sampled = sample_tokens(
+                logits[:, -1], k, temperature=temp, top_k=top_k,
+                top_p=top_p, seed=seed, positions=pos,
+            )
             nxt = jnp.where(act, jnp.where(flag_t, forced_t, sampled), tok)
             emit = act & ~flag_t
             emitted = (nxt, emit)
@@ -516,10 +698,15 @@ class ModelExecutor:
             slot = self.slots[adm.slot]
             slot.admit_seq = adm.admit_seq
             slot.admit_gen = adm.admit_gen
-            if adm.mode == MODE_SKIP:
-                # the shared pages hold every position < write_from; no
-                # prompt-prefill dispatch at all for this admission —
-                # the remaining tail replays per the admission's split
+            if adm.mode in (MODE_SKIP, MODE_FORK):
+                # MODE_SKIP: the shared pages hold every position <
+                # write_from; no prompt-prefill dispatch at all — the
+                # remaining tail replays per the admission's split.
+                # MODE_FORK is mechanically identical: the n-best child
+                # entered owning refcounted views of its parent's pages
+                # (prompt AND generated-into), so only the prompt's last
+                # token replays; the child's first diverging write
+                # copy-on-writes it off the shared last page
                 slot.active, slot.request = True, adm.request
                 slot.pos = adm.write_from
                 self._activate_tail(slot, adm, adm.write_from)
@@ -528,7 +715,8 @@ class ModelExecutor:
         for bucket, group in decision.prefill_groups.items():
             self._dispatch_prefill(bucket, group, out)
         self._dispatch_extend(decision, out)
-        return self._dispatch_decode(decision, out)
+        spec_served = self._dispatch_speculative(decision, out)
+        return self._dispatch_decode(decision, out, exclude=spec_served)
 
     def collect(self, inflight: InflightStep) -> StepOutput:
         """The blocking half: transfer the decode scan's results to host
@@ -637,9 +825,14 @@ class ModelExecutor:
     def _host_dirty(self, idx: int) -> None:
         """Mark host slot state authoritative for ``idx``: the device
         carry must not override it at the next decode dispatch (fresh
-        admission, extend handoff, preemption, release, retire)."""
+        admission, extend handoff, preemption, release, retire).  The
+        same turnovers invalidate the slot's draft-cache sync stamp: the
+        draft worker re-prefills the row from its token history before
+        speculating for it again."""
         self._carry_valid[idx] = False
         self._pos_ub[idx] = self.slots[idx].pos
+        if self.draft is not None:
+            self.draft.pos[idx] = -1
 
     def _reserve_cap(self, req: Request) -> int:
         """The admission-time worst-case length reservation for ``req``
@@ -697,11 +890,24 @@ class ModelExecutor:
         with tr.phase("device"):
             tr.fence((last, self.caches))
         tel["prefill_dispatches"] += 1
-        # one vectorized sample + one device->host transfer for the group
+        # one vectorized sample + one device->host transfer for the group;
+        # the admission carries the scheduler-stamped per-request knobs
         self.key, sub = jax.random.split(self.key)
         with tr.phase("sample"):
+            knobs = [adm.sampling for adm in group]
             first_tokens = np.asarray(
-                sample(last[:len(group)], sub, temperature=sc.temperature)
+                sample_tokens(
+                    last[:len(group)], sub,
+                    temperature=jnp.asarray(
+                        [s[0] for s in knobs], jnp.float32
+                    ),
+                    top_k=jnp.asarray([s[1] for s in knobs], jnp.int32),
+                    top_p=jnp.asarray([s[2] for s in knobs], jnp.float32),
+                    seed=jnp.asarray([s[3] for s in knobs], jnp.int32),
+                    positions=jnp.asarray(
+                        [len(adm.tokens) - 1 for adm in group], jnp.int32
+                    ),
+                )
             )
             for row, adm in enumerate(group):
                 slot = self.slots[adm.slot]
@@ -758,17 +964,40 @@ class ModelExecutor:
             tel["extend_compiles"] = 1  # one program, fixed shapes
         t0 = time.perf_counter()
         with tr.phase("dispatch"):
-            last, self.caches = self._extend_fn(
+            logits, self.caches = self._extend_fn(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 jnp.asarray(starts), self.caches,
             )
         with tr.phase("device"):
-            tr.fence((last, self.caches))
+            tr.fence((logits, self.caches))
         tel["extend_dispatches"] += 1
         self.key, sub = jax.random.split(self.key)
         with tr.phase("sample"):
+            # each row's true logits live at its window's last valid
+            # position (selected eagerly — the program returns the full
+            # window so speculative verification can reuse it)
+            idx = np.maximum(lens - 1, 0)
+            last = jnp.take_along_axis(
+                logits, jnp.asarray(idx)[:, None, None], axis=1
+            )[:, 0]
+            knobs = [
+                encode_sampling(
+                    self.slots[i].request if i in work else None,
+                    sc.temperature,
+                )
+                for i in range(nb)
+            ]
             first_tokens = np.asarray(
-                sample(last, sub, temperature=sc.temperature)
+                sample_tokens(
+                    last, sub,
+                    temperature=jnp.asarray(
+                        [s[0] for s in knobs], jnp.float32
+                    ),
+                    top_k=jnp.asarray([s[1] for s in knobs], jnp.int32),
+                    top_p=jnp.asarray([s[2] for s in knobs], jnp.float32),
+                    seed=jnp.asarray([s[3] for s in knobs], jnp.int32),
+                    positions=jnp.asarray(starts + idx, jnp.int32),
+                )
             )
             for i in work:
                 slot = self.slots[i]
@@ -799,8 +1028,192 @@ class ModelExecutor:
                 self._retire(i, out)
         tel["extend_time_s"] += time.perf_counter() - t0
 
-    def _dispatch_decode(
+    def _dispatch_speculative(
         self, decision: ScheduleDecision, out: StepOutput
+    ) -> set[int]:
+        """Advance eligible decode slots by up to ``spec_k + 1`` tokens in
+        one draft-propose + one target-verify dispatch; returns the slots
+        served (the decode scan skips them this step).
+
+        The draft greedily proposes ``spec_k`` tokens per slot.  The
+        target verifies the whole window [carry, d1..d_{k-1}] through the
+        cache-extending prefill program at starts = pos: the window's
+        logits at offset j are exactly what the decode scan would have
+        produced for position pos+j, so sampling them with the same
+        per-request knobs and position-keyed PRNG yields the target's own
+        token s_j.  The accepted prefix is the run of j with s_j == d_j;
+        one correction token (the target's sample at the first mismatch)
+        always ships, so a fully-rejected draft still nets one token —
+        greedy speculative output is bitwise the non-speculative stream
+        on bit-exact datapaths (test-enforced).  Rejected window
+        positions hold stale KV that the next window/decode write
+        overwrites — the same position-idempotence extend replay relies
+        on, which is why speculation is gated to cache_extend datapaths.
+
+        Host emission replicates the decode scan's deactivation rules
+        exactly: emit eos then stop, stop at budget zero, stop when the
+        next write position would reach max_seq_len.  Served slots are
+        marked host-dirty (the async carry never covers them), then the
+        draft sync stamp is advanced — the accepted prefix was written to
+        the draft cache during proposal, so steady-state speculation
+        needs no draft resync at all.
+        """
+        if self.draft is None:
+            return set()
+        sc, tel, tr = self.serve_cfg, self.tel, self.tracer
+        k, nb = self.spec_k, sc.max_batch
+        cand: list[int] = []
+        for i in sorted(set(decision.decode_slots)):
+            slot = self.slots[i]
+            if not slot.active or slot.prefill_tail or slot.pending:
+                continue
+            if slot.request.cancelled:
+                continue
+            if self.async_loop and self._carry_valid[i]:
+                continue  # the device carry owns this slot's truth
+            if slot.request.max_new_tokens <= len(slot.request.generated):
+                continue
+            if slot.pos + k > sc.max_seq_len - 1:
+                continue  # near the cap: plain decode finishes it
+            cand.append(i)
+        if not cand:
+            return set()
+        t0 = time.perf_counter()
+        with tr.phase("host_prep"):
+            # resync draft cache rows whose (pos, carry) drifted from the
+            # target's — any admission/extend/preempt/release turnover
+            # invalidated them via _host_dirty
+            need: list[tuple[int, list[int]]] = []
+            fit: list[int] = []
+            for i in cand:
+                slot = self.slots[i]
+                if (
+                    self.draft.pos[i] == slot.pos
+                    and self.draft.tok[i] == slot.last_token
+                ):
+                    fit.append(i)
+                    continue
+                hist = list(slot.request.resume_tokens[: slot.pos])
+                if hist and self.draft.bucket_for(len(hist)) is None:
+                    continue  # history outgrew the draft buckets
+                need.append((i, hist))
+                fit.append(i)
+            cand = fit
+            if not cand:
+                tel["spec_time_s"] += time.perf_counter() - t0
+                return set()
+            self.draft.sync(need, tel)
+            for i, _ in need:
+                self.draft.pos[i] = self.slots[i].pos
+                self.draft.tok[i] = self.slots[i].last_token
+            # propose: one draft scan over the full batch
+            d_tok = np.zeros((nb,), np.int32)
+            d_pos = np.zeros((nb,), np.int32)
+            d_act = np.zeros((nb,), bool)
+            for i in cand:
+                d_tok[i] = self.slots[i].last_token
+                d_pos[i] = self.slots[i].pos
+                d_act[i] = True
+        with tr.phase("dispatch"):
+            toks_t, self.draft.caches = self.draft._propose_fn(
+                self.draft.params, jnp.asarray(d_tok), jnp.asarray(d_pos),
+                jnp.asarray(d_act), self.draft.caches,
+            )
+        props = np.asarray(toks_t)  # (k, nb)
+        with tr.phase("host_prep"):
+            # verify: ONE extend dispatch over [carry, d1..d_{k-1}]
+            vt = np.zeros((nb, self.extend_width), np.int32)
+            vl = np.zeros((nb,), np.int32)
+            vs = np.zeros((nb,), np.int32)
+            for i in cand:
+                slot = self.slots[i]
+                vt[i, 0] = slot.last_token
+                vt[i, 1:k] = props[: k - 1, i]
+                vl[i] = k
+                vs[i] = slot.pos
+                self.cache_mgr.ensure(i, slot.pos + k, write_from=slot.pos)
+            self.caches = self.cache_mgr.flush_copies(self.caches)
+            self.caches = self.cache_mgr.write_table(self.caches)
+        with tr.phase("dispatch"):
+            logits, self.caches = self._extend_fn(
+                self.params, jnp.asarray(vt), jnp.asarray(vl),
+                jnp.asarray(vs), self.caches,
+            )
+        with tr.phase("device"):
+            tr.fence((logits, self.caches))
+        tel["spec_dispatches"] += 1
+        self.key, sub = jax.random.split(self.key)
+        with tr.phase("sample"):
+            knobs = [
+                encode_sampling(
+                    self.slots[i].request if i in cand else None,
+                    sc.temperature,
+                )
+                for i in range(nb)
+            ]
+            temp = jnp.asarray([s[0] for s in knobs], jnp.float32)
+            top_k = jnp.asarray([s[1] for s in knobs], jnp.int32)
+            top_p = jnp.asarray([s[2] for s in knobs], jnp.float32)
+            seedv = jnp.asarray([s[3] for s in knobs], jnp.int32)
+            samp = np.stack([
+                np.asarray(
+                    sample_tokens(
+                        logits[:, t], jax.random.fold_in(sub, t),
+                        temperature=temp, top_k=top_k, top_p=top_p,
+                        seed=seedv,
+                        positions=jnp.asarray(d_pos + t, jnp.int32),
+                    )
+                )
+                for t in range(k)
+            ])  # (k, nb): the target's own token at each window offset
+            served: set[int] = set()
+            for i in cand:
+                slot = self.slots[i]
+                req = slot.request
+                d = [int(props[t, i]) for t in range(k)]
+                s = [int(samp[t, i]) for t in range(k)]
+                m = 0
+                while m < k and s[m] == d[m]:
+                    m += 1
+                emitted = d[:m] + ([] if m == k else [s[m]])
+                req.draft_proposed += k
+                req.draft_accepted += m
+                tel["draft_tokens_proposed"] += k
+                tel["draft_tokens_accepted"] += m
+                base = slot.pos
+                n_emit = 0
+                for nxt in emitted:
+                    req.generated.append(nxt)
+                    out.stats["decoded"] += 1
+                    tel["tokens_generated"] += 1
+                    out.tokens.append((req.uid, nxt, len(req.generated) - 1))
+                    n_emit += 1
+                    if (
+                        (req.eos_id is not None and nxt == req.eos_id)
+                        or len(req.generated) >= req.max_new_tokens
+                        or base + n_emit + 1 >= sc.max_seq_len
+                    ):
+                        break
+                slot.pos = base + n_emit
+                slot.last_token = emitted[n_emit - 1]
+                self._host_dirty(i)
+                # accepted positions were written to the draft cache
+                # during proposal, so the draft is synced by construction
+                self.draft.pos[i] = slot.pos
+                self.draft.tok[i] = slot.last_token
+                self.cache_mgr.register_filled(
+                    i, req.resume_tokens, slot.pos
+                )
+                self._retire(i, out)
+                served.add(i)
+        tel["spec_time_s"] += time.perf_counter() - t0
+        return served
+
+    def _dispatch_decode(
+        self,
+        decision: ScheduleDecision,
+        out: StepOutput,
+        exclude: frozenset[int] | set[int] = frozenset(),
     ) -> InflightStep:
         """Enqueue the decode scan for the decision's decode slots
         (per-slot active masks; slots outside the decision freeze for
@@ -819,7 +1232,9 @@ class ModelExecutor:
         sc, tel, tr = self.serve_cfg, self.tel, self.tracer
         decode_set = {
             i for i in decision.decode_slots
-            if self.slots[i].active and not self.slots[i].prefill_tail
+            if self.slots[i].active
+            and not self.slots[i].prefill_tail
+            and i not in exclude  # already advanced speculatively
         }
         if not decode_set:
             return InflightStep(out=out, decision=decision)
@@ -901,6 +1316,23 @@ class ModelExecutor:
                 ],
                 np.int32,
             )
+            # stacked per-request sampling knobs, built next to eos from
+            # the same host slot state; a carried (uncollected) slot's
+            # request cannot change mid-residency, so rebuilding from
+            # host is sound under the async merge too
+            knobs = [
+                encode_sampling(
+                    self.slots[i].request
+                    if self.slots[i].active and i in decode_set
+                    else None,
+                    sc.temperature,
+                )
+                for i in range(nb)
+            ]
+            temp = np.asarray([s[0] for s in knobs], np.float32)
+            top_k = np.asarray([s[1] for s in knobs], np.int32)
+            top_p = np.asarray([s[2] for s in knobs], np.float32)
+            seedv = np.asarray([s[3] for s in knobs], np.int32)
             if use_carry:
                 # merge: device truth for uncollected slots, host truth
                 # where an admission/extend/release made host fresh.
@@ -940,6 +1372,8 @@ class ModelExecutor:
                 self._decode_fn(
                     self.params, tok_in, pos_in,
                     act_in, rem_in, jnp.asarray(eos),
+                    jnp.asarray(temp), jnp.asarray(top_k),
+                    jnp.asarray(top_p), jnp.asarray(seedv),
                     jnp.asarray(forced), jnp.asarray(n_forced),
                     self.caches, sub,
                 )

@@ -607,6 +607,11 @@ class CacheStats:
     prefix_pages_hit: int = 0
     cow_copies: int = 0
     page_evictions: int = 0
+    #: pages shared by mapping a resident parent's live pages onto an
+    #: n-best sibling (CacheManager.fork) — generated-into pages
+    #: included, unlike prefix-index hits which only ever share fully
+    #: prompt-written pages
+    gen_pages_shared: int = 0
 
     @property
     def page_utilization(self) -> float:
@@ -639,6 +644,7 @@ class CacheStats:
             "prefix_pages_hit": self.prefix_pages_hit,
             "cow_copies": self.cow_copies,
             "page_evictions": self.page_evictions,
+            "gen_pages_shared": self.gen_pages_shared,
         }
 
 
@@ -773,6 +779,7 @@ class CacheManager:
         self._pending_copies: list[tuple[int, int]] = []
         self._cow_copies = 0
         self._evictions = 0
+        self._gen_pages_shared = 0
         self._prefix_queries = 0
         self._prefix_hits = 0
         self._prefix_pages_hit = 0
@@ -1027,6 +1034,60 @@ class CacheManager:
         self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
         return len(shared)
 
+    def fork_need(
+        self, parent_slot: int, upto_len: int, reserve_len: int
+    ) -> int:
+        """Pages a fork admission must be able to reserve: the worst-case
+        tail beyond the shared coverage, plus one copy-on-write headroom
+        page — the child's first write always lands inside the last
+        shared page (it re-processes the parent's final prompt token)."""
+        if self.layout != "paged":
+            return 0
+        shared = min(
+            -(-upto_len // self.page_size), len(self._slot_pages[parent_slot])
+        )
+        total = self.pages_for(min(reserve_len, self.serve_cfg.max_seq_len))
+        return max(total - shared, 0) + (1 if shared else 0)
+
+    def fork(
+        self, slot: int, parent_slot: int, upto_len: int, reserve_len: int
+    ) -> int:
+        """Map the parent's pages covering positions [0, ``upto_len``)
+        onto ``slot`` with a refcount bump each — the n-best
+        generation-page sharing path (``Engine.submit(n=...)``).
+
+        Unlike a prefix-index hit, which only ever shares fully
+        prompt-written pages, this shares the parent's *live* pages,
+        including the page the parent is actively generating into; the
+        child's own writes split off private copies through the ordinary
+        copy-on-write machinery in :meth:`ensure`.  The shared chain-key
+        watermark transfers too (the child's tokens match the parent's
+        on every shared page), so registration stays incremental.
+        Returns the number of shared pages."""
+        if self.layout != "paged":
+            raise RuntimeError("fork() requires the paged layout")
+        need = self.fork_need(parent_slot, upto_len, reserve_len)
+        if not self.can_reserve(need):
+            raise RuntimeError(
+                f"cannot reserve {need} KV pages for fork; check "
+                "can_reserve(fork_need()) before calling fork()"
+            )
+        parent_pages = self._slot_pages[parent_slot]
+        n = min(-(-upto_len // self.page_size), len(parent_pages))
+        pages = self._slot_pages[slot]
+        assert not pages, f"fork target slot {slot} already holds pages"
+        for col in range(n):
+            page = parent_pages[col]
+            self._page_ref[page] += 1
+            self._table[slot, col] = page
+            pages.append(page)
+        self._table_dirty = True
+        self._slot_keys[slot] = list(self._slot_keys[parent_slot][:n])
+        self._slot_reserved[slot] = n + need
+        self._gen_pages_shared += n
+        self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
+        return n
+
     def register_filled(
         self, slot: int, tokens: list[int], upto_len: int
     ) -> None:
@@ -1237,6 +1298,7 @@ class CacheManager:
             prefix_pages_hit=self._prefix_pages_hit,
             cow_copies=self._cow_copies,
             page_evictions=self._evictions,
+            gen_pages_shared=self._gen_pages_shared,
         )
 
     # ------------------------------------------------------- invariants --
@@ -1306,3 +1368,18 @@ class CacheManager:
             assert len(self._slot_keys[slot]) <= len(pages), (
                 f"slot {slot} chain-key watermark outran its page list"
             )
+        # a page shared by several slots sits at the SAME table column in
+        # every owner: both sharing paths (prefix-index hits and n-best
+        # forks) map leading runs of pages, so a shared page's tokens
+        # occupy identical global positions in every mapping — the paged
+        # gather's position arithmetic depends on this.  Covers
+        # generation-page refcounts: a forked generated-into page obeys
+        # the same rule until copy-on-write splits it.
+        col_of: dict[int, int] = {}
+        for slot, pages in enumerate(self._slot_pages):
+            for col, page in enumerate(pages):
+                seen = col_of.setdefault(page, col)
+                assert seen == col, (
+                    f"shared page {page} mapped at column {seen} and at "
+                    f"column {col} (slot {slot})"
+                )

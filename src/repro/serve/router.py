@@ -51,6 +51,10 @@ _SUMMED = (
     "deadline_requests",
     "deadline_missed",
     "deadline_dropped",
+    "draft_tokens_proposed",
+    "draft_tokens_accepted",
+    "spec_dispatches",
+    "gen_pages_shared",
 )
 
 
@@ -63,9 +67,12 @@ class ReplicaRouter:
     same config (each replica sees ``replicas=1``; the fan-out lives
     here).  ``params`` are shared by reference: replicas on one host
     read the same device arrays, so N replicas cost N KV pools, not N
-    copies of the weights.  Per-replica PRNG seeds are offset by the
-    replica index so sampled (temperature > 0) replicas do not mirror
-    each other; greedy decoding is seed-independent and stays
+    copies of the weights.  Every replica gets the same base ``seed``
+    with its replica index folded into the dispatch key (see
+    ``ModelExecutor``) — collision-free across (seed, replica) pairs,
+    unlike additive ``seed + i`` offsets — so unseeded sampled
+    (temperature > 0) replicas draw distinct streams; greedy decoding
+    and per-request *seeded* streams are key-independent and stay
     bit-identical to a single engine.
     """
 
@@ -78,6 +85,7 @@ class ReplicaRouter:
         seed: int = 0,
         scheduler_factory: Callable[..., Scheduler] | None = None,
         clock: Callable[[], float] | None = None,
+        draft: tuple | None = None,
     ):
         sc = serve_cfg or ServeConfig()
         if sc.replicas < 1:
@@ -86,8 +94,9 @@ class ReplicaRouter:
         self.serve_cfg = sc
         self.engines = [
             Engine(
-                cfg, params, per_replica, kernel=kernel, seed=seed + i,
+                cfg, params, per_replica, kernel=kernel, seed=seed,
                 scheduler_factory=scheduler_factory, clock=clock,
+                replica=i, draft=draft,
             )
             for i in range(sc.replicas)
         ]
@@ -109,14 +118,20 @@ class ReplicaRouter:
         prompt: list[int],
         params: SamplingParams | None = None,
         **kw,
-    ) -> RequestHandle:
+    ) -> RequestHandle | list[RequestHandle]:
         """Admit to the least-loaded replica (ties -> lowest index) and
-        return a router-level handle."""
+        return a router-level handle (a list of them for ``n > 1``
+        fan-out — the siblings stay on one replica so their generation
+        pages can share)."""
         idx = min(range(len(self.engines)), key=lambda i: (self._load(i), i))
         local = self.engines[idx].submit(prompt, params, **kw)
-        self._uid += 1
-        self._route[self._uid] = (idx, local.uid)
-        return RequestHandle(self._uid)
+        locals_ = local if isinstance(local, list) else [local]
+        out = []
+        for lh in locals_:
+            self._uid += 1
+            self._route[self._uid] = (idx, lh.uid)
+            out.append(RequestHandle(self._uid))
+        return out if isinstance(local, list) else out[0]
 
     def replica_of(self, handle: RequestHandle | int) -> int:
         """Which replica a request was routed to (introspection/tests)."""

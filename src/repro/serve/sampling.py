@@ -1,4 +1,34 @@
-"""Token sampling for the serving engine."""
+"""Token sampling for the serving engine.
+
+Sampling knobs are *per-request* traced quantities.  The decode scan,
+the bucketed prefill programs, and the cache-extending prefill program
+all receive stacked per-slot ``(B,)`` arrays of (temperature, top-k,
+top-p, seed) next to the per-slot ``eos`` array, so a batch can mix a
+greedy request with a temperature-1.0 top-p request without minting a
+second compiled program: greedy is a traced ``where``-select on
+``temperature > 0``, never a Python branch.  The jit budget
+(len(prefill_buckets) + 2 programs) is unchanged and test-enforced.
+
+Traced encodings (host ``None`` -> array sentinel, see
+:func:`repro.serve.scheduler.encode_sampling`):
+
+* ``temperature <= 0``  -> greedy (argmax)
+* ``top_k <= 0``        -> top-k off
+* ``top_p >= 1``        -> top-p off
+* ``seed < 0``          -> stream derived from the engine dispatch key
+  (schedule-dependent, replica-salted)
+
+A non-negative per-request ``seed`` pins the stream *by position*: row
+``i`` draws with ``fold_in(PRNGKey(seed_i), position_i)`` where
+``position_i`` is the global position of the token being processed.
+Because the key depends only on (seed, position) — not on batch
+composition, slot index, dispatch boundaries, or which program
+(prefill / extend / decode scan) processes the token — a seeded
+request's sampled stream is identical whether it runs alone or inside
+a mixed-temperature batch, across prefix-skip, chunked prefill,
+preemption-resume, and the async loop.  That schedule independence is
+what the per-slot token-identity tests pin down.
+"""
 
 from __future__ import annotations
 
@@ -12,15 +42,91 @@ import jax.numpy as jnp
 class SamplingParams:
     """Per-request generation knobs for :meth:`repro.serve.Engine.submit`.
 
-    Temperature / top-k stay engine-level (``ServeConfig.temperature``):
-    they are baked into the single compiled decode program, and a
-    per-request temperature would either mint extra programs or force a
-    traced greedy/sampled select — both against the bounded-program
-    discipline this stack inherits from the paper's fixed datapaths.
+    ``temperature`` / ``top_k`` / ``top_p`` / ``seed`` ride the compiled
+    programs as traced per-slot arrays (see module docstring), so every
+    combination shares the one decode program.  ``None`` means "engine
+    default": ``ServeConfig.temperature`` for temperature, *off* for
+    top-k / top-p, and the engine's replica-salted dispatch key for the
+    seed.  ``temperature=0.0`` is greedy decoding regardless of the
+    other knobs.
     """
 
     max_new_tokens: int = 16
     eos_id: int | None = None
+    #: softmax temperature; None = ServeConfig.temperature, 0.0 = greedy
+    temperature: float | None = None
+    #: keep only the k highest logits (tie-inclusive); None/0 = off
+    top_k: int | None = None
+    #: nucleus sampling mass in (0, 1]; None/1.0 = off
+    top_p: float | None = None
+    #: pins the sampled stream per (seed, position) — schedule- and
+    #: replica-independent; None = engine dispatch key
+    seed: int | None = None
+
+
+def _mask_top_k(scaled: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Mask all but each row's ``top_k`` highest logits to the dtype
+    minimum.  ``top_k`` is per-row traced; ``<= 0`` disables the mask.
+    Tie-inclusive: values equal to the k-th largest all survive."""
+    v = scaled.shape[-1]
+    k = jnp.where(top_k > 0, top_k, v)
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(desc, jnp.clip(k - 1, 0, v - 1)[:, None], axis=-1)
+    return jnp.where(scaled < kth, jnp.finfo(scaled.dtype).min, scaled)
+
+
+def _mask_top_p(scaled: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Nucleus mask: keep each row's smallest set of tokens whose
+    probability mass reaches ``top_p`` (the top token always survives).
+    ``top_p`` is per-row traced; ``>= 1`` disables the mask."""
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_p[:, None]
+    thresh = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1, keepdims=True)
+    masked = jnp.where(scaled < thresh, jnp.finfo(scaled.dtype).min, scaled)
+    return jnp.where(top_p[:, None] >= 1.0, scaled, masked)
+
+
+def _row_keys(
+    key: jax.Array, seed: jax.Array, positions: jax.Array
+) -> jax.Array:
+    """One PRNG key per batch row.  Seeded rows (``seed >= 0``) fold the
+    processed token's global position into ``PRNGKey(seed)`` — the
+    stream depends only on (seed, position).  Unseeded rows fold the row
+    index into the engine's per-dispatch ``key``."""
+    rows = jnp.arange(seed.shape[0], dtype=jnp.uint32)
+
+    def one(s, p, r):
+        pinned = jax.random.fold_in(
+            jax.random.PRNGKey(jnp.maximum(s, 0).astype(jnp.uint32)), p
+        )
+        shared = jax.random.fold_in(key, r)
+        return jnp.where(s >= 0, pinned, shared)
+
+    return jax.vmap(one)(seed, positions, rows)
+
+
+def sample_tokens(
+    logits: jax.Array,  # (B, V)
+    key: jax.Array,
+    *,
+    temperature: jax.Array,  # (B,) float32; <= 0 = greedy
+    top_k: jax.Array,        # (B,) int32;   <= 0 = off
+    top_p: jax.Array,        # (B,) float32; >= 1 = off
+    seed: jax.Array,         # (B,) int32;   <  0 = engine key
+    positions: jax.Array,    # (B,) int32 position of the processed token
+) -> jax.Array:
+    """Per-slot sampling with traced knob arrays — greedy and sampled
+    rows coexist in one dispatch via a ``where``-select, so one compiled
+    program serves every knob combination."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.where(temperature > 0, temperature, 1.0)[:, None]
+    scaled = _mask_top_k(scaled, top_k)
+    scaled = _mask_top_p(scaled, top_p)
+    keys = _row_keys(key, seed, positions)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
 
 
 def sample(
@@ -30,12 +136,19 @@ def sample(
     temperature: float = 0.0,
     top_k: int | None = None,
 ) -> jax.Array:
-    """Greedy when temperature == 0, else (top-k) temperature sampling."""
+    """Greedy when temperature == 0, else (top-k) temperature sampling.
+
+    The scalar-knob path: one temperature / top-k for the whole batch,
+    one key.  The serving programs use :func:`sample_tokens`; this stays
+    for direct callers and as the reference the per-slot path reduces to
+    when every row carries the same knobs."""
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits / temperature
     if top_k is not None:
         vals, _ = jax.lax.top_k(scaled, top_k)
         cut = vals[..., -1:]
-        scaled = jnp.where(scaled < cut, -1e30, scaled)
+        # dtype-aware sentinel: a hardcoded -1e30 overflows/flushes under
+        # low-precision logits and corrupts the masked distribution
+        scaled = jnp.where(scaled < cut, jnp.finfo(scaled.dtype).min, scaled)
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -84,6 +84,22 @@ class Request:
     preemptions: int = 0
     #: set by Engine.cancel; a cancelled request emits no further tokens
     cancelled: bool = False
+    #: per-request sampling knobs (None = engine default); resolved by
+    #: :func:`encode_sampling` and threaded through the compiled
+    #: programs as traced per-slot arrays (see ``serve/sampling.py``)
+    temperature: float | None = None
+    top_k: int | None = None
+    top_p: float | None = None
+    seed: int | None = None
+    #: uid of the primary request this n-best sibling forked from
+    #: (``Engine.submit(n=...)``); admission maps the parent's pages —
+    #: prompt AND generated-so-far — copy-on-write instead of
+    #: re-prefilling, when the parent is still resident
+    fork_of: int | None = None
+    #: speculative-decoding counters for this request (tokens the draft
+    #: model proposed for it / the target model accepted)
+    draft_proposed: int = 0
+    draft_accepted: int = 0
 
     @property
     def done(self) -> bool:
@@ -142,11 +158,36 @@ class Slot:
     admit_gen: int = 0
 
 
+# ------------------------------------------------------------ sampling --
+#: traced-array sentinels for "knob off" (see ``serve/sampling.py``)
+TOPK_OFF = 0
+TOPP_OFF = 1.0
+SEED_OFF = -1
+
+
+def encode_sampling(
+    req: Request | None, default_temperature: float = 0.0
+) -> tuple[float, int, float, int]:
+    """Resolve a request's sampling knobs to the traced-array encoding
+    ``(temperature, top_k, top_p, seed)`` consumed by the compiled
+    programs: ``None`` temperature inherits the engine default, off
+    knobs map to their sentinels (top_k 0, top_p 1.0, seed -1).  Pure
+    host arithmetic — this module stays device-free."""
+    if req is None:
+        return (0.0, TOPK_OFF, TOPP_OFF, SEED_OFF)
+    t = default_temperature if req.temperature is None else req.temperature
+    k = TOPK_OFF if not req.top_k else int(req.top_k)
+    p = TOPP_OFF if req.top_p is None else float(req.top_p)
+    s = SEED_OFF if req.seed is None else int(req.seed)
+    return (float(t), k, p, s)
+
+
 # ------------------------------------------------------------ decisions --
 #: admission modes — how the prompt's KV gets into the cache
 MODE_PREFILL = "prefill"  # whole effective prompt through one bucket dispatch
 MODE_SKIP = "skip"        # prefix hit: no dispatch, tail teacher-forced
 MODE_CHUNKED = "chunked"  # first chunk through a bucket dispatch, tail forced
+MODE_FORK = "fork"        # n-best sibling: parent pages mapped CoW, no dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,14 +205,18 @@ class Admission:
     slot: int
     request: Request
     tokens: tuple[int, ...]
-    mode: str  # MODE_PREFILL | MODE_SKIP | MODE_CHUNKED
-    bucket: int  # padded dispatch length (0 for MODE_SKIP)
+    mode: str  # MODE_PREFILL | MODE_SKIP | MODE_CHUNKED | MODE_FORK
+    bucket: int  # padded dispatch length (0 for MODE_SKIP / MODE_FORK)
     fill_len: int  # prompt tokens the prefill dispatch computes
     write_from: int  # first position written after the prefill dispatch
     decode_from: int  # first position replayed through the decode scan
-    shared_pages: int  # leading prefix-cache pages mapped at admit()
+    shared_pages: int  # leading shared pages mapped at admit()/fork()
     admit_seq: int
     admit_gen: int
+    #: resolved (temperature, top_k, top_p, seed) traced-array encoding
+    #: for this tenancy (:func:`encode_sampling`); the executor stacks
+    #: these into the per-slot sampling arrays
+    sampling: tuple[float, int, float, int] = (0.0, TOPK_OFF, TOPP_OFF, SEED_OFF)
 
     @property
     def emits_first_token(self) -> bool:
@@ -322,6 +367,13 @@ class FifoScheduler:
                 "bit-exact and the cache-extending prefill program is "
                 "unavailable (Pallas kernel or cache_extend=False)",
             )
+        #: n-best sibling admission (``Request.fork_of``): map the
+        #: resident parent's pages — including generated-into ones —
+        #: copy-on-write instead of re-prefilling.  Needs refcounted
+        #: pages (paged layout) and a replayable datapath: the child
+        #: re-processes the parent's last prompt token to sample its own
+        #: first token, exactly like a full-coverage prefix-skip.
+        self.fork_enabled = caps.paged and replayable
         #: page-aware preemption instead of FIFO head-of-line blocking
         self.preempt_enabled = (
             caps.paged and serve_cfg.kv_preemption and replayable
@@ -378,6 +430,11 @@ class FifoScheduler:
             # prompt tokens whose pages were deduped by a prefix hit on
             # the storage-only path (recomputed, but no pages written)
             "prefix_tokens_shared": 0,
+            # n-best siblings admitted by mapping the parent's pages CoW
+            "forks": 0,
+            # siblings whose parent had already left its slot, admitted
+            # through a plain prefill instead (correct, just no sharing)
+            "fork_fallbacks": 0,
             # requested-but-unhonorable knobs ("feature: reason")
             "disabled_features": disabled,
         }
@@ -465,6 +522,85 @@ class FifoScheduler:
         override this to protect urgent residents."""
         return max(victims, key=lambda i: slots[i].admit_seq)
 
+    # ------------------------------------------------------------- fork --
+    def _try_fork(
+        self,
+        head: Request,
+        slots: list[Slot],
+        free: list[int],
+        decision: ScheduleDecision,
+    ) -> str:
+        """Try to admit the queue head — an n-best sibling — by mapping
+        its resident parent's pages copy-on-write (generated-into pages
+        included: this is what extends page sharing beyond prompts).
+
+        Returns ``"admitted"`` on success, ``"wait"`` when the parent is
+        resident but not yet covering the prompt (or pages are short and
+        preemption cannot help) — the head blocks, FIFO order holds —,
+        ``"retry"`` after a preemption freed pages, and ``"fallback"``
+        when the parent already left its slot: the sibling then admits
+        through the plain prefill path (correct, just no sharing)."""
+        taken = {i for i, _ in decision.preempted}
+        pidx = next(
+            (
+                i for i, s in enumerate(slots)
+                if s.active
+                and i not in taken
+                and s.request is not None
+                and s.request.uid == head.fork_of
+            ),
+            None,
+        )
+        if pidx is None:
+            if any(
+                a.request.uid == head.fork_of for a in decision.admissions
+            ):
+                # the parent is being admitted by THIS decision (the
+                # common submit(n=...) burst): it is not in a slot yet,
+                # but will be next step — wait instead of falling back
+                return "wait"
+            return "fallback"
+        upto = len(head.prompt)
+        if slots[pidx].pos < upto:
+            # parent still prefilling its prompt (or its host position
+            # is stale-low under the async loop): wait a step.  The
+            # parent is resident and progressing, so this never wedges.
+            return "wait"
+        reserve_len = self._reserve_len(head)
+        need = self.cache.fork_need(pidx, upto, reserve_len)
+        if not self.cache.can_reserve(need):
+            # preemption may evict the parent itself — the retry then
+            # takes the fallback path, which is still correct
+            return "retry" if self._try_preempt(slots, free, decision) else "wait"
+        req = self.queue.pop(0)
+        if req.admitted_at == 0.0:
+            self.stats["prompts_admitted"] += 1
+        req.admitted_at = self.clock()
+        self.stats["queue_wait_s_total"] += req.queue_wait_s
+        self.stats["queue_wait_created_s_total"] += max(
+            0.0, req.admitted_at - req.created_at
+        )
+        idx = free.pop(0)
+        self._admit_seq += 1
+        shared = self.cache.fork(idx, pidx, upto, reserve_len)
+        self.stats["forks"] += 1
+        # every prompt position is already in the shared pages; the
+        # child re-processes only the last prompt token (write_from) to
+        # sample its own first token — prefill-skip mechanics with the
+        # parent's live pages instead of the prefix index
+        write_from = max(upto - 1, 0)
+        decode_from = upto if self.extend_replay else write_from
+        adm = Admission(
+            slot=idx, request=req, tokens=tuple(req.prompt), mode=MODE_FORK,
+            bucket=0, fill_len=0, write_from=write_from,
+            decode_from=decode_from, shared_pages=shared,
+            admit_seq=self._admit_seq, admit_gen=0,
+            sampling=encode_sampling(req, self.serve_cfg.temperature),
+        )
+        decision.admissions.append(adm)
+        self.stats["prefill_tokens_saved"] += write_from
+        return "admitted"
+
     # -------------------------------------------------------- admission --
     def _reserve_len(self, req: Request) -> int:
         """Worst-case sequence length for a request: decode writes reach at
@@ -490,6 +626,24 @@ class FifoScheduler:
         n_admitted = 0
         while self.queue and free and n_admitted < cap:
             head = self.queue[0]
+            if (
+                self.fork_enabled
+                and head.fork_of is not None
+                and not head.generated
+            ):
+                outcome = self._try_fork(head, slots, free, decision)
+                if outcome == "admitted":
+                    n_admitted += 1
+                    continue
+                if outcome == "retry":
+                    continue
+                if outcome == "wait":
+                    break
+                # "fallback": parent gone for good (finished, cancelled,
+                # or itself preempted) — sticky-demote the sibling to a
+                # plain admission so it is planned (and counted) once
+                head.fork_of = None
+                self.stats["fork_fallbacks"] += 1
             seq = head.resume_tokens
             resume = bool(head.generated)
             # a preemption resume on the cache-extend path splits: the
@@ -591,6 +745,7 @@ class FifoScheduler:
                 bucket=bucket, fill_len=fill_len, write_from=write_from,
                 decode_from=decode_from, shared_pages=shared,
                 admit_seq=self._admit_seq, admit_gen=len(req.generated),
+                sampling=encode_sampling(req, sc.temperature),
             )
             decision.admissions.append(adm)
             if mode != MODE_SKIP:
@@ -609,7 +764,9 @@ class FifoScheduler:
             | {
                 a.slot for a in decision.admissions
                 if a.decode_from > (
-                    a.write_from if a.mode == MODE_SKIP else a.fill_len
+                    a.write_from
+                    if a.mode in (MODE_SKIP, MODE_FORK)
+                    else a.fill_len
                 )
             }
         )

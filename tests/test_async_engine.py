@@ -327,21 +327,32 @@ def test_shard_decode_places_named_shardings(cfg, params):
 def test_jit_budget_with_everything_enabled(cfg, params):
     """THE budget gate for this PR (CI-enforced): async loop + sharded
     decode + overlap tracer + EDF + prefix cache + preemption + chunked
-    prefill together still mint exactly len(prefill_buckets) prefill
-    programs + 1 decode + 1 extend — no feature may re-key a jit cache
-    mid-run (the page-table re-placement hook is what this catches)."""
+    prefill + speculative decoding + mixed per-request sampling + n-best
+    forking together still mint at most len(prefill_buckets) prefill
+    programs + 1 decode + 1 extend on the target — no feature may re-key
+    a jit cache mid-run (the page-table re-placement hook is what this
+    catches).  The draft worker owns its own bounded set (at most
+    len(prefill_buckets) draft prefills + 1 propose scan)."""
     clock = StepClock()
     eng = Engine(cfg, params, _serve(
         async_loop=True, shard_decode=True, trace_phases=True,
         phase_mode="overlap", scheduler="edf", kv_layout="paged",
         kv_page_size=8, kv_prefix_cache=True, kv_preemption=True,
-        prefill_chunk=8,
+        prefill_chunk=8, speculative=True, spec_tokens=3,
     ), clock=clock)
     events = workloads.poisson(
         rate=50.0, n=12, vocab_size=cfg.vocab_size, seed=0,
         max_new_tokens=6, deadline_s=(0.5, 5.0), shared_prefix=8,
     )
     workloads.replay(eng, events, step_cost=0.1)
+    # mixed per-request sampling + an n-best fork on the same engine:
+    # knobs ride the dispatches as stacked arrays, never as new programs
+    eng.submit([5, 9, 3], SamplingParams(max_new_tokens=4))
+    eng.submit([2, 4, 6, 8], SamplingParams(
+        max_new_tokens=4, temperature=0.9, top_k=12, top_p=0.95, seed=7))
+    eng.submit([7, 7, 1], SamplingParams(
+        max_new_tokens=4, temperature=0.7, seed=11), n=2)
+    eng.generate()
 
     def programs(fn):
         size = getattr(fn, "_cache_size", None)
@@ -350,9 +361,17 @@ def test_jit_budget_with_everything_enabled(cfg, params):
     ex = eng.executor
     buckets = ex.buckets
     assert sum(programs(f) for f in ex._prefill_fn.values()) <= len(buckets)
-    assert programs(ex._decode_fn) == 1
+    # a fully-speculative steady state can retire every token through the
+    # verify dispatch without ever compiling the decode scan — hence <= 1
+    assert programs(ex._decode_fn) <= 1
     if ex._extend_fn is not None:
         assert programs(ex._extend_fn) <= 1
+    assert ex.draft is not None
+    assert programs(ex.draft._propose_fn) <= 1
+    assert sum(
+        programs(f) for f in ex.draft._prefill_fn.values()
+    ) <= len(buckets)
+    assert eng.telemetry["draft_tokens_proposed"] > 0
     assert eng._tracer.fences == 0
 
 

@@ -1,0 +1,337 @@
+"""PR-9 per-request sampling / speculative decoding / n-best tests:
+the per-slot token-identity matrix (a greedy row in a mixed-temperature
+batch bit-identical to the same request running alone, and a *seeded*
+sampled stream identical across batch composition and engine seed —
+dense/paged x GQA/MLA/int8-KV), the tie-inclusive dtype-aware top-k
+mask, speculative decoding (greedy bitwise-identical to the plain
+engine with a self-draft, seeded sampled streams identical too because
+the correction token is the target's own position-keyed sample, gating
+to cache-extend datapaths), n-best generation-page sharing (fork
+telemetry, ``check_invariants`` over shared generation pages, seeded
+sibling divergence + determinism), and the replica salt (unseeded
+sampled streams diverge across replicas; seeded streams don't)."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ServeConfig
+from repro.core import precision as P
+from repro.models import lm
+from repro.serve import Engine, ReplicaRouter, SamplingParams
+from repro.serve.sampling import _mask_top_k, sample
+
+KEY = jax.random.PRNGKey(3)
+
+KV8 = P.PrecisionPolicy(
+    "kv8", (P.Rule("kv_cache", P.int8(per_channel=False)),)
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.get_config("granite-8b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return lm.init_params(cfg, KEY)
+
+
+def _serve(**kw):
+    base = dict(
+        max_batch=2, max_seq_len=64, prefill_buckets=(8, 16),
+        decode_steps=3, temperature=0.0,
+    )
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+GREEDY_PROMPT = [5, 9, 3]
+SAMPLED_PROMPT = [2, 4, 6, 8, 1]
+SAMPLED = SamplingParams(
+    max_new_tokens=6, temperature=0.9, top_k=12, top_p=0.95, seed=7
+)
+
+
+# ------------------------------------------------------- top-k masking --
+
+
+def test_top_k_mask_is_tie_inclusive_and_dtype_aware():
+    """Values tied with the k-th largest all survive, and masked slots
+    carry the dtype minimum (a hardcoded -1e30 would overflow to -inf
+    under float16 and corrupt the masked softmax)."""
+    scaled = jnp.asarray([[1.0, 3.0, 3.0, 2.0, 0.0]], jnp.float16)
+    out = _mask_top_k(scaled, jnp.asarray([2]))
+    lo = jnp.finfo(jnp.float16).min
+    np.testing.assert_array_equal(
+        out[0], jnp.asarray([lo, 3.0, 3.0, lo, lo], jnp.float16)
+    )
+    assert jnp.isfinite(out).any() and not jnp.isinf(out).any()
+    # top_k <= 0 disables the mask entirely
+    np.testing.assert_array_equal(
+        _mask_top_k(scaled, jnp.asarray([0])), scaled
+    )
+
+
+def test_scalar_sample_top_k_ties_and_finfo_min():
+    """The scalar path (serve-independent callers): top_k=1 with a tied
+    maximum keeps *both* argmaxes in support, everything else never
+    appears, and float16 logits don't produce inf/nan."""
+    logits = jnp.asarray([[0.0, 5.0, 5.0, 1.0]], jnp.float16)
+    seen = set()
+    for i in range(64):
+        tok = sample(
+            logits, jax.random.PRNGKey(i), temperature=1.0, top_k=1
+        )
+        seen.add(int(tok[0]))
+    assert seen <= {1, 2}
+    assert 1 in seen and 2 in seen  # ties genuinely reachable
+
+
+# ------------------------------------- per-slot token-identity matrix --
+
+
+@pytest.mark.parametrize(
+    "arch,policy",
+    [
+        ("granite-8b", None),   # GQA float (bit-exact datapath)
+        ("minicpm3-4b", None),  # MLA float
+        ("granite-8b", KV8),    # GQA int8 KV
+    ],
+)
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_per_slot_sampling_identity_matrix(arch, policy, layout):
+    """The tentpole acceptance bar: a mixed-temperature batch emits, per
+    request, exactly the stream that request would emit running alone —
+    the greedy row is unperturbed by its sampled neighbor, and the
+    seeded sampled row is schedule- and engine-seed-independent (its
+    PRNG keys depend only on (seed, position))."""
+    acfg = configs.get_config(arch, reduced=True)
+    aparams = lm.init_params(acfg, KEY)
+    sc = _serve(kv_layout=layout, kv_page_size=8, policy=policy)
+
+    solo_g = Engine(acfg, aparams, sc, seed=0)
+    hg = solo_g.submit(GREEDY_PROMPT, SamplingParams(max_new_tokens=6))
+    want_g = solo_g.generate()[hg.uid].generated
+
+    solo_s = Engine(acfg, aparams, sc, seed=123)  # different engine seed
+    hs = solo_s.submit(SAMPLED_PROMPT, SAMPLED)
+    want_s = solo_s.generate()[hs.uid].generated
+
+    mixed = Engine(acfg, aparams, sc, seed=77)
+    hg2 = mixed.submit(GREEDY_PROMPT, SamplingParams(max_new_tokens=6))
+    hs2 = mixed.submit(SAMPLED_PROMPT, SAMPLED)
+    fin = mixed.generate()
+    assert fin[hg2.uid].generated == want_g
+    assert fin[hs2.uid].generated == want_s
+
+
+def test_unseeded_sampling_is_engine_keyed(cfg, params):
+    """Without a per-request seed the stream comes from the engine's
+    dispatch key: same engine seed reproduces, different diverges."""
+    sp = SamplingParams(max_new_tokens=8, temperature=1.0)
+
+    def run(seed):
+        eng = Engine(cfg, params, _serve(), seed=seed)
+        h = eng.submit(SAMPLED_PROMPT, sp)
+        return eng.generate()[h.uid].generated
+
+    assert run(0) == run(0)
+    assert run(0) != run(1)
+
+
+# ------------------------------------------------- speculative decode --
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_spec_greedy_bitwise_identical(cfg, params, layout):
+    """Greedy speculative output is bitwise the plain engine's on the
+    same datapath; the self-draft accepts everything, so the measured
+    acceptance rate is the upper bound, not merely > 0."""
+    kw = dict(kv_layout=layout, kv_page_size=8)
+    base = Engine(cfg, params, _serve(**kw))
+    hs = [
+        base.submit(list(p), max_new_tokens=6)
+        for p in (GREEDY_PROMPT, SAMPLED_PROMPT, [7, 7, 1, 2])
+    ]
+    fin = base.generate()
+    want = [fin[h.uid].generated for h in hs]
+
+    spec = Engine(
+        cfg, params, _serve(speculative=True, spec_tokens=4, **kw)
+    )
+    hs2 = [
+        spec.submit(list(p), max_new_tokens=6)
+        for p in (GREEDY_PROMPT, SAMPLED_PROMPT, [7, 7, 1, 2])
+    ]
+    fin2 = spec.generate()
+    assert [fin2[h.uid].generated for h in hs2] == want
+    tel = spec.telemetry
+    assert tel["spec_dispatches"] > 0
+    assert tel["draft_tokens_proposed"] > 0
+    assert tel["draft_tokens_accepted"] == tel["draft_tokens_proposed"]
+    # per-request counters mirror the engine totals
+    reqs = [fin2[h.uid] for h in hs2]
+    assert sum(r.draft_proposed for r in reqs) == tel["draft_tokens_proposed"]
+    assert sum(r.draft_accepted for r in reqs) == tel["draft_tokens_accepted"]
+
+
+def test_spec_sampled_stream_matches_plain_engine(cfg, params):
+    """Under sampling the greedy draft is rarely accepted — but the
+    correction token is the target's own position-keyed sample, so a
+    seeded request's stream through the speculative engine is exactly
+    the plain engine's."""
+    plain = Engine(cfg, params, _serve())
+    h = plain.submit(SAMPLED_PROMPT, SAMPLED)
+    want = plain.generate()[h.uid].generated
+
+    spec = Engine(cfg, params, _serve(speculative=True, spec_tokens=4))
+    h2 = spec.submit(SAMPLED_PROMPT, SAMPLED)
+    got = spec.generate()[h2.uid].generated
+    assert got == want
+    assert spec.telemetry["spec_dispatches"] > 0
+
+
+def test_spec_requires_cache_extend(cfg, params):
+    """Speculation rides the extend-window program; without it the
+    engine warns once and disables rather than silently degrading."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng = Engine(
+            cfg, params,
+            _serve(speculative=True, cache_extend=False),
+        )
+    assert any(
+        issubclass(w.category, RuntimeWarning)
+        and "speculative" in str(w.message).lower()
+        for w in caught
+    )
+    assert eng.executor.draft is None
+    h = eng.submit(GREEDY_PROMPT, max_new_tokens=4)
+    assert len(eng.generate()[h.uid].generated) == 4  # plain decode works
+
+
+def test_spec_draft_vocab_mismatch_is_an_error(cfg, params):
+    import dataclasses
+
+    bad = dataclasses.replace(
+        cfg, name="bad-vocab", vocab_size=cfg.vocab_size + 1
+    )
+    bad_params = lm.init_params(bad, KEY)
+    with pytest.raises(ValueError, match="vocab"):
+        Engine(
+            cfg, params, _serve(speculative=True),
+            draft=(bad, bad_params),
+        )
+
+
+# ----------------------------------------------------- n-best fan-out --
+
+
+def _nbest_cfg(**kw):
+    return _serve(
+        max_batch=4, kv_layout="paged", kv_page_size=8, **kw
+    )
+
+
+def test_n_best_siblings_share_generation_pages(cfg, params):
+    """submit(n=3) admits one prefill plus two forks whose block tables
+    map the primary's pages CoW; the pool invariants must hold with
+    generation pages shared, and seeded siblings must diverge."""
+    eng = Engine(cfg, params, _nbest_cfg())
+    hh = eng.submit(
+        SAMPLED_PROMPT,
+        SamplingParams(max_new_tokens=6, temperature=0.8, seed=11),
+        n=3,
+    )
+    assert isinstance(hh, list) and len(hh) == 3
+    fin = eng.generate()
+    outs = [fin[h.uid].generated for h in hh]
+    assert all(len(o) == 6 for o in outs)
+    assert len({tuple(o) for o in outs}) == 3  # seed+i per sibling
+    eng.executor.cache_mgr.check_invariants()
+    tel = eng.telemetry
+    assert tel["forks"] == 2
+    assert tel["gen_pages_shared"] > 0
+    assert tel["prefill_dispatches"] == 1  # one prefill serves all three
+
+
+def test_n_best_is_deterministic(cfg, params):
+    def run():
+        eng = Engine(cfg, params, _nbest_cfg())
+        hh = eng.submit(
+            SAMPLED_PROMPT,
+            SamplingParams(max_new_tokens=6, temperature=0.8, seed=11),
+            n=3,
+        )
+        fin = eng.generate()
+        return [fin[h.uid].generated for h in hh]
+
+    assert run() == run()
+
+
+def test_n_best_falls_back_without_pages(cfg, params):
+    """Dense layout cannot refcount pages: siblings admit as plain
+    prefills (n results, zero forks) instead of failing."""
+    eng = Engine(cfg, params, _serve(max_batch=4))
+    hh = eng.submit(
+        SAMPLED_PROMPT,
+        SamplingParams(max_new_tokens=5, temperature=0.8, seed=11),
+        n=2,
+    )
+    fin = eng.generate()
+    assert len({tuple(fin[h.uid].generated) for h in hh}) == 2
+    assert eng.telemetry["forks"] == 0
+
+
+def test_submit_validates_sampling_and_n(cfg, params):
+    eng = Engine(cfg, params, _serve())
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], SamplingParams(temperature=-0.5))
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], SamplingParams(top_p=0.0))
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], SamplingParams(top_k=-1))
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], SamplingParams(seed=-3))
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], n=0)
+
+
+# -------------------------------------------------------- replica salt --
+
+
+def test_replicas_draw_distinct_unseeded_streams(cfg, params):
+    """The fold_in replica salt: the same unseeded sampled prompt routed
+    to different replicas draws different streams, while the whole fleet
+    stays deterministic per (router seed, submission order)."""
+    sp = SamplingParams(max_new_tokens=8, temperature=1.0)
+
+    def run():
+        router = ReplicaRouter(cfg, params, _serve(replicas=2), seed=5)
+        h0 = router.submit(list(SAMPLED_PROMPT), sp)
+        h1 = router.submit(list(SAMPLED_PROMPT), sp)
+        assert {router.replica_of(h0), router.replica_of(h1)} == {0, 1}
+        fin = router.generate()
+        return fin[h0.uid].generated, fin[h1.uid].generated
+
+    a = run()
+    assert a[0] != a[1]  # replica salt diverges the streams
+    assert run() == a    # ...deterministically
+
+
+def test_seeded_stream_is_replica_independent(cfg, params):
+    """A per-request seed pins the stream by (seed, position) — the
+    replica salt only touches the engine dispatch key, so the same
+    seeded request emits identically on any replica."""
+    outs = []
+    for replica in (0, 5):
+        eng = Engine(cfg, params, _serve(), seed=9, replica=replica)
+        h = eng.submit(SAMPLED_PROMPT, SAMPLED)
+        outs.append(eng.generate()[h.uid].generated)
+    assert outs[0] == outs[1]
