@@ -42,6 +42,18 @@ instead gains ``device_overlap_s`` / ``host_bubble_s`` /
 which is the number ``--async-loop`` exists to raise (and the matrix
 ``--check`` gate can guard).
 
+``--workload multi_tenant`` replays the warm-prefix multi-tenant stream
+(serve/workloads.py): Poisson arrivals cycling over four distinct
+seeded tenant preambles, against a device page pool deliberately sized
+*below* the warm working set, so tenant prefixes churn off the LRU
+between visits.  With ``--kv-host-pages N`` the evicted prefixes spill
+to the host-memory victim tier and swap back on re-arrival; the derived
+column gains ``swap_outs``/``swap_ins``/``swap_hit_rate``/
+``prefill_tokens_saved``/``host_pages_used``.  ``--record --ablation
+victim_tier`` appends a tier-off vs tier-on before/after entry on that
+workload — the number the tier exists to raise is
+``prefill_tokens_saved`` at identical token output.
+
 ``--speculative`` turns on draft-propose/target-verify speculative
 decoding (self-draft, ``--spec-tokens`` per verify step); the derived
 column gains ``draft_tokens_proposed``/``draft_tokens_accepted``/
@@ -124,17 +136,24 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
                cache_extend=True, scheduler="fifo", deadline_ms=None,
                trace_phases=False, async_loop=False, phase_mode="fenced",
                repeats=1, speculative=False, spec_tokens=4,
-               temperature_mix=None, n_best=1):
+               temperature_mix=None, n_best=1, kv_host_pages=0):
     prefix_mode = workload == "prefix"
     poisson_mode = workload == "poisson"
-    clock = workloads.StepClock() if poisson_mode else None
+    mt_mode = workload == "multi_tenant"
+    clock = workloads.StepClock() if (poisson_mode or mt_mode) else None
     eng = Engine(
         cfg, params,
         ServeConfig(
             max_batch=max_batch, max_seq_len=64,
             prefill_buckets=buckets, decode_steps=decode_steps,
             policy=policy, kv_layout=kv_layout, kv_page_size=16,
-            kv_prefix_cache=prefix_mode, kv_preemption=prefix_mode,
+            # multi-tenant: one spare page above worst-case residency, so
+            # the warm tenant prefixes (4 tenants x 2 pages) cannot all
+            # stay device-resident — the victim tier is what keeps them
+            kv_pages=(max_batch * 4 + 2) if mt_mode else None,
+            kv_prefix_cache=prefix_mode or mt_mode,
+            kv_preemption=prefix_mode or mt_mode,
+            kv_host_pages=kv_host_pages,
             cache_extend=cache_extend, scheduler=scheduler,
             deadline_ms=deadline_ms, trace_phases=trace_phases,
             async_loop=async_loop, phase_mode=phase_mode,
@@ -150,15 +169,28 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
 
     def wave(wave_seed):
         import time
-        if poisson_mode:
-            events = workloads.poisson(
-                rate=200.0, n=n_requests, vocab_size=cfg.vocab_size,
-                seed=wave_seed, prompt_len=(3, 13),
-                max_new_tokens=max_new,
-                deadline_s=(
-                    None if deadline_ms is None else deadline_ms / 1e3
-                ),
-            )
+        if poisson_mode or mt_mode:
+            if mt_mode:
+                # 2x arrivals over 4 tenants: every tenant re-arrives,
+                # so each wave exercises evict -> spill -> swap-back
+                events = workloads.multi_tenant(
+                    rate=200.0, n=2 * n_requests,
+                    vocab_size=cfg.vocab_size, seed=wave_seed,
+                    tenants=4, preamble_len=32, prompt_len=(3, 13),
+                    max_new_tokens=max_new,
+                    deadline_s=(
+                        None if deadline_ms is None else deadline_ms / 1e3
+                    ),
+                )
+            else:
+                events = workloads.poisson(
+                    rate=200.0, n=n_requests, vocab_size=cfg.vocab_size,
+                    seed=wave_seed, prompt_len=(3, 13),
+                    max_new_tokens=max_new,
+                    deadline_s=(
+                        None if deadline_ms is None else deadline_ms / 1e3
+                    ),
+                )
             rep = workloads.replay(eng, events)
             return rep.host_wall_s, [], [], rep
         rng = np.random.default_rng(wave_seed)
@@ -229,6 +261,16 @@ def _sweep_one(name, cfg, params, *, max_batch, buckets, decode_steps,
             f";preemptions={tel['preemptions']}"
             f";extend_dispatches={tel['extend_dispatches']}"
         )
+    if mt_mode:
+        derived += (
+            f";swap_outs={tel['swap_outs']}"
+            f";swap_ins={tel['swap_ins']}"
+            f";swap_hit_rate={tel['swap_ins'] / max(tel['swap_outs'], 1):.2f}"
+            f";prefill_tokens_saved={tel['prefill_tokens_saved']}"
+            f";prefix_hit_rate={tel['prefix_hit_rate']:.2f}"
+            f";host_pages_used={tel['host_pages_used']}"
+            f";host_evictions={tel['host_evictions']}"
+        )
     if rep is not None:
         derived += (
             f";completed={rep.completed}"
@@ -279,8 +321,9 @@ def run(policy: str | None = None, kv_layout: str = "dense",
         trace_phases: bool = False, async_loop: bool = False,
         phase_mode: str = "fenced", repeats: int = 1,
         speculative: bool = False, spec_tokens: int = 4,
-        temperature_mix=None, n_best: int = 1) -> list[str]:
-    if workload == "prefix" and kv_layout == "dense":
+        temperature_mix=None, n_best: int = 1,
+        kv_host_pages: int = 0) -> list[str]:
+    if workload in ("prefix", "multi_tenant") and kv_layout == "dense":
         kv_layout = "paged"  # sharing needs pages; dense would be inert
     if n_best > 1 and kv_layout == "dense":
         kv_layout = "paged"  # generation-page sharing needs refcounted pages
@@ -307,6 +350,7 @@ def run(policy: str | None = None, kv_layout: str = "dense",
                         phase_mode=phase_mode, repeats=repeats,
                         speculative=speculative, spec_tokens=spec_tokens,
                         temperature_mix=temperature_mix, n_best=n_best,
+                        kv_host_pages=kv_host_pages,
                     )
                 )
     return rows
@@ -384,6 +428,11 @@ def record_trajectory(path: str, ablation: str = "cache_extend",
       the after records carry ``acceptance_rate`` and — with
       ``api="stream"`` — the before/after ``itl_ms_p95`` comparison
       speculation exists to win.
+    * ``"victim_tier"`` — host-memory victim tier off vs on, on the
+      warm-prefix ``multi_tenant`` workload (forced if the caller left
+      the workload at its default); the after records carry
+      ``swap_hit_rate`` and the strictly-higher ``prefill_tokens_saved``
+      the tier exists to buy at identical token output.
     """
     import datetime
     import json
@@ -397,10 +446,17 @@ def record_trajectory(path: str, ablation: str = "cache_extend",
     elif ablation == "speculative":
         before = run(speculative=False, **run_kw)
         after = run(speculative=True, **run_kw)
+    elif ablation == "victim_tier":
+        if run_kw.get("workload", "uniform") in ("uniform", None):
+            run_kw["workload"] = "multi_tenant"
+        if not run_kw.get("kv_host_pages"):
+            run_kw["kv_host_pages"] = 32
+        before = run(**{**run_kw, "kv_host_pages": 0})
+        after = run(**run_kw)
     else:
         raise ValueError(
-            f"ablation must be 'cache_extend', 'async_loop', or "
-            f"'speculative', got {ablation!r}"
+            f"ablation must be 'cache_extend', 'async_loop', "
+            f"'speculative', or 'victim_tier', got {ablation!r}"
         )
     entry = {
         "bench": "serving_throughput",
@@ -438,14 +494,23 @@ def main():
                          "(batch) or Engine.stream (per-token events; adds "
                          "ttft/itl p50/p95 columns)")
     ap.add_argument("--workload", default="uniform",
-                    choices=("uniform", "prefix", "poisson"),
+                    choices=("uniform", "prefix", "poisson",
+                             "multi_tenant"),
                     help="request stream: uniform random prompts, "
                          "prefix-heavy (shared preamble; enables the "
                          "prefix cache + preemption and reports hit rate "
-                         "/ prefill tokens saved / preemption count), or "
+                         "/ prefill tokens saved / preemption count), "
                          "poisson (seeded open-loop arrivals on a virtual "
                          "engine clock via serve/workloads.py; --api is "
-                         "ignored, the replay driver consumes results)")
+                         "ignored, the replay driver consumes results), "
+                         "or multi_tenant (warm-prefix tenant cycling "
+                         "against a device pool below the warm working "
+                         "set — the victim-tier exercise; reports "
+                         "swap_outs/swap_ins/swap_hit_rate)")
+    ap.add_argument("--kv-host-pages", type=int, default=0,
+                    help="host-memory victim tier capacity in pages for "
+                         "every sweep point (0 = off); pairs with "
+                         "--workload multi_tenant")
     ap.add_argument("--scheduler", default="fifo",
                     choices=("fifo", "edf"),
                     help="admission policy for the swept engines")
@@ -466,12 +531,16 @@ def main():
                     help="pipelined engine loop (ServeConfig.async_loop) "
                          "for every sweep point")
     ap.add_argument("--ablation", default="cache_extend",
-                    choices=("cache_extend", "async_loop", "speculative"),
+                    choices=("cache_extend", "async_loop", "speculative",
+                             "victim_tier"),
                     help="--record before/after axis: cache-extend off/on "
                          "(historical), sync/async engine loop (with "
-                         "--api stream the records carry itl_ms_p95), or "
+                         "--api stream the records carry itl_ms_p95), "
                          "plain-decode vs speculative decoding (after "
-                         "records carry acceptance_rate)")
+                         "records carry acceptance_rate), or victim_tier "
+                         "off/on over the multi_tenant workload (after "
+                         "records carry swap_hit_rate and the higher "
+                         "prefill_tokens_saved)")
     ap.add_argument("--speculative", action="store_true",
                     help="draft-propose/target-verify speculative decoding "
                          "(self-draft) for every sweep point; derived "
@@ -519,6 +588,8 @@ def main():
             record_kw["n_best"] = args.n_best
         if args.ablation == "cache_extend" and args.async_loop:
             record_kw["async_loop"] = True
+        if args.kv_host_pages:
+            record_kw["kv_host_pages"] = args.kv_host_pages
         if args.ablation == "speculative":
             record_kw["spec_tokens"] = args.spec_tokens
         elif args.speculative:
@@ -539,6 +610,17 @@ def main():
                   f"acceptance_rate per point: {acc}"
                   + (f"; itl_ms_p95 plain->spec per point: {itl}"
                      if itl is not None else ""))
+        elif args.ablation == "victim_tier":
+            saved = [
+                (b.get("prefill_tokens_saved", 0),
+                 a.get("prefill_tokens_saved", 0))
+                for b, a in zip(entry["before"], entry["after"])
+            ]
+            hits = [a.get("swap_hit_rate") for a in entry["after"]]
+            print(f"# appended run {entry['git_rev']}@{entry['date']} to "
+                  f"{args.record} ({n} entries); "
+                  f"prefill_tokens_saved tier-off->on per point: {saved}; "
+                  f"swap_hit_rate per point: {hits}")
         elif args.ablation == "async_loop" and args.api == "stream":
             itl = [
                 (b.get("itl_ms_p95"), a.get("itl_ms_p95"))
@@ -565,7 +647,8 @@ def main():
                    speculative=args.speculative,
                    spec_tokens=args.spec_tokens,
                    temperature_mix=temperature_mix,
-                   n_best=args.n_best)
+                   n_best=args.n_best,
+                   kv_host_pages=args.kv_host_pages)
         for row in rows:
             print(row)
     print(f"# serving_throughput done in {time.time()-t0:.1f}s")

@@ -122,6 +122,13 @@ def main():
               f"(+{tel['prefix_tokens_shared']} shared-storage) | "
               f"{tel['cow_copies']} CoW copies | "
               f"{tel['preemptions']} preemptions")
+    if getattr(args, "kv_host_pages", 0):
+        print(f"victim tier: {tel['swap_outs']} spills / "
+              f"{tel['swap_ins']} swap-ins | "
+              f"host pages {tel['host_pages_used']}/"
+              f"{tel['host_pages_capacity']} "
+              f"({tel['host_evictions']} tier evictions) | "
+              f"swap time {tel['swap_latency_s']*1e3:.1f} ms")
     if args.scheduler == "edf" or args.deadline_ms is not None:
         print(f"slo: scheduler={args.scheduler} | "
               f"{tel['deadline_requests']} deadlined requests, "

@@ -292,6 +292,28 @@ class ServeConfig:
     # dispatch schedule for unseeded sampled decoding (seeded requests
     # are position-keyed and reproduce exactly, test-enforced).
     kv_preemption: bool = False
+    # --- tiered KV cache: host-memory victim tier (paged + prefix cache) ---
+    # Host-memory pages backing the prefix cache.  When > 0 (and
+    # ``kv_victim_tier`` is on), a registered page evicted off the device
+    # LRU under pool pressure spills its pool rows (k/v, int8 scale, MLA
+    # latent pools alike) into a pinned host-side numpy ring of this many
+    # pages instead of being discarded, keeping its prefix-index chain
+    # key alive.  A later same-prefix admission that walks past device
+    # coverage into the host tier swaps the spilled rows back into fresh
+    # device pages — one batched host->device copy applied at the next
+    # dispatch (``CacheManager.flush_swaps``, next to the CoW flush) —
+    # and admits as a normal prefix hit with prefill-skip, so a warm
+    # prefix larger than the device pool costs a page copy instead of a
+    # recompute.  Spilled pages survive their tenant's finish (and the
+    # device eviction) but not a process restart.  0 = no victim tier
+    # (evictions discard, the pre-tier behavior).  Requires the paged
+    # layout with kv_prefix_cache; silently inert otherwise.
+    kv_host_pages: int = 0
+    # Kill switch for the victim tier: with False, kv_host_pages is
+    # ignored and evictions discard pages exactly as before.  Split from
+    # kv_host_pages so deployments can size the ring in config and flip
+    # the tier off operationally.
+    kv_victim_tier: bool = True
     # --- engine v2: bucketed prefill + scan decode ---
     # Prompt-length buckets for prefill padding.  None = auto powers of two
     # up to max_seq_len; () = exact-length prefill (the v1 behavior, one

@@ -38,6 +38,7 @@ from repro.serve.workloads import (  # noqa: F401
     ReplayReport,
     StepClock,
     load_trace,
+    multi_tenant,
     poisson,
     replay,
     save_trace,

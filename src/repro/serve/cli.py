@@ -78,6 +78,16 @@ def add_serving_args(
                          "head-of-line blocking when the page pool is "
                          "exhausted; resumes are token-exact on every "
                          "datapath (paged layout)")
+    ap.add_argument("--kv-host-pages", type=int, default=0,
+                    help="host-memory victim tier: pages evicted off the "
+                         "prefix-cache LRU spill their rows to a host ring "
+                         "of this many pages and swap back into fresh "
+                         "device pages on a later prefix hit (paged layout "
+                         "with --kv-prefix-cache; 0 = off)")
+    ap.add_argument("--no-kv-victim-tier", action="store_true",
+                    help="kill switch: keep --kv-host-pages configured but "
+                         "never spill or swap (evictions discard rows, as "
+                         "without a tier)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a fixed preamble of this many tokens to "
                          "every request (prefix-cache exercise; think "
@@ -166,6 +176,8 @@ def config_from_args(args: argparse.Namespace, model_cfg) -> ServeConfig:
         kv_pages=args.kv_pages,
         kv_prefix_cache=args.kv_prefix_cache,
         kv_preemption=args.kv_preemption,
+        kv_host_pages=getattr(args, "kv_host_pages", 0),
+        kv_victim_tier=not getattr(args, "no_kv_victim_tier", False),
         cache_extend=not getattr(args, "no_cache_extend", False),
         speculative=getattr(args, "speculative", False),
         spec_tokens=getattr(args, "spec_tokens", 4),

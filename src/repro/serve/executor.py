@@ -869,6 +869,11 @@ class ModelExecutor:
                 lengths[row] = n
                 slots_arr[row] = adm.slot
                 shared_arr[row] = adm.shared_pages
+            # victim-tier movement queued by this step's admissions must
+            # land before the prefill program runs: spills drain the
+            # rows of pages the scatter is about to overwrite, swap-ins
+            # fill the covered columns the scatter redirects to trash
+            self.caches = self.cache_mgr.flush_swaps(self.caches)
             self.caches = self.cache_mgr.write_table(self.caches)
         fn = self._prefill_fn.get(bucket)
         if fn is None:
@@ -958,6 +963,9 @@ class ModelExecutor:
                 # grow pages over the write range; shared pages
                 # overlapping it are copy-on-write replaced pre-scatter
                 self.cache_mgr.ensure(i, slot.pos + n, write_from=slot.pos)
+            # swaps before CoW copies: a CoW destination can be a
+            # just-evicted page whose rows must spill first
+            self.caches = self.cache_mgr.flush_swaps(self.caches)
             self.caches = self.cache_mgr.flush_copies(self.caches)
             self.caches = self.cache_mgr.write_table(self.caches)
         if tel["extend_compiles"] == 0:
@@ -1132,6 +1140,7 @@ class ModelExecutor:
                 vl[i] = k
                 vs[i] = slot.pos
                 self.cache_mgr.ensure(i, slot.pos + k, write_from=slot.pos)
+            self.caches = self.cache_mgr.flush_swaps(self.caches)
             self.caches = self.cache_mgr.flush_copies(self.caches)
             self.caches = self.cache_mgr.write_table(self.caches)
         with tr.phase("dispatch"):
@@ -1285,6 +1294,7 @@ class ModelExecutor:
                         slot.pos + min(sc.decode_steps, nf + rem_i),
                         sc.max_seq_len,
                     )
+            self.caches = self.cache_mgr.flush_swaps(self.caches)
             self.caches = self.cache_mgr.flush_copies(self.caches)
             self.caches = self.cache_mgr.write_table(self.caches)
             tokens = np.asarray([s.last_token for s in self.slots], np.int32)

@@ -66,11 +66,27 @@ refcount-1 page first drops the page from the index, so shared history
 is immutable and every token stream stays bit-identical to the dense
 layout.  Sharing, CoW bookkeeping, and preemption are host-side
 block-table operations: the jitted program set does not grow.
+
+**Host-memory victim tier** (``ServeConfig.kv_host_pages``): a fourth
+page state behind the cached LRU.  A registered page evicted under pool
+pressure spills its pool rows (every pool leaf — k/v, int8 scales, MLA
+latents) into a host-side numpy ring of ``kv_host_pages`` pages instead
+of discarding them, keeping its prefix-index chain key alive in a
+host-tier index.  ``match_prefix`` walks past device coverage into that
+index; admission then allocates fresh device pages for the host-covered
+chunks and queues batched host->device row copies, applied by
+:meth:`CacheManager.flush_swaps` at the executor's next dispatch
+(exactly like CoW copies through :meth:`CacheManager.flush_copies`) —
+so a warm prefix larger than the device pool admits as a normal prefix
+hit with prefill-skip instead of recomputing.  All tier movement is
+host bookkeeping plus eager device copies outside every jitted program:
+the compiled program budget stays len(prefill_buckets) + 2.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -612,6 +628,17 @@ class CacheStats:
     #: included, unlike prefix-index hits which only ever share fully
     #: prompt-written pages
     gen_pages_shared: int = 0
+    #: victim-tier movement: pages spilled to the host ring on eviction
+    #: (swap_outs), spilled pages fetched back into device pages on a
+    #: later prefix hit (swap_ins), and spilled pages dropped when the
+    #: host ring itself overflowed (host_evictions)
+    swap_outs: int = 0
+    swap_ins: int = 0
+    host_evictions: int = 0
+    host_pages_used: int = 0
+    host_pages_capacity: int = 0
+    #: host wall seconds spent in flush_swaps (device<->host row copies)
+    swap_latency_s: float = 0.0
 
     @property
     def page_utilization(self) -> float:
@@ -645,21 +672,36 @@ class CacheStats:
             "cow_copies": self.cow_copies,
             "page_evictions": self.page_evictions,
             "gen_pages_shared": self.gen_pages_shared,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "host_evictions": self.host_evictions,
+            "host_pages_used": self.host_pages_used,
+            "host_pages_capacity": self.host_pages_capacity,
+            "swap_latency_s": self.swap_latency_s,
         }
 
 
 @dataclasses.dataclass(frozen=True)
 class PrefixMatch:
-    """Longest prefix-index match for a prompt: ``pages[i]`` holds the KV
-    of token chunk ``i`` (all full pages), ``keys[i]`` its interned chain
-    key.  ``tokens`` == ``len(pages) * page_size``."""
+    """Longest prefix-index match for a prompt.  ``keys[i]`` is the
+    interned chain key of token chunk ``i`` (all full pages); the
+    leading ``len(pages)`` chunks are device-resident (``pages[i]``
+    holds chunk ``i``'s KV), the remaining ``host_hits`` chunks live in
+    the host victim tier and swap back in at admission.  Without a
+    victim tier ``len(keys) == len(pages)``.  ``tokens`` ==
+    ``len(keys) * page_size`` — total coverage across both tiers."""
 
     pages: tuple[int, ...] = ()
     keys: tuple[int, ...] = ()
     tokens: int = 0
 
+    @property
+    def host_hits(self) -> int:
+        """Matched chunks resident only in the host victim tier."""
+        return len(self.keys) - len(self.pages)
+
     def __bool__(self) -> bool:
-        return bool(self.pages)
+        return bool(self.keys)
 
 
 class CacheManager:
@@ -683,7 +725,12 @@ class CacheManager:
     ``free`` (unregistered content) or ``cached`` (refcount 0 but still
     registered in the prefix index, evictable LRU) when its last owner
     finishes.  The reserved trash page 0 never enters any of the three
-    sets.
+    sets.  With a victim tier (``ServeConfig.kv_host_pages``) eviction
+    off the cached LRU adds a fourth, host-side state: ``spilled`` —
+    the page's rows live in the host ring under its chain key, and a
+    later prefix hit swaps them back into a fresh device page
+    (:meth:`flush_swaps`); the tier-LRU eviction of a spilled chain is
+    the only point where warm prefix state is truly discarded.
     """
 
     def __init__(
@@ -783,6 +830,49 @@ class CacheManager:
         self._prefix_queries = 0
         self._prefix_hits = 0
         self._prefix_pages_hit = 0
+        # --- host-memory victim tier (kv_host_pages) ---
+        #: tier on: registered pages evicted off the device LRU spill
+        #: their pool rows into host numpy rings instead of vanishing
+        self.victim_tier = bool(
+            self.prefix_cache
+            and getattr(sc, "kv_victim_tier", True)
+            and getattr(sc, "kv_host_pages", 0) > 0
+        )
+        self.host_pages = sc.kv_host_pages if self.victim_tier else 0
+        #: per-pool host rings, (n_layers, host_pages, per-page dims...)
+        #: mirroring every device pool leaf (k/v, scales, latents — never
+        #: the page table)
+        self._host_pool: dict[str, np.ndarray] = {}
+        if self.victim_tier:
+            for name, leaf in self._abstract()["layers"].items():
+                if name == "page_table":
+                    continue
+                self._host_pool[name] = np.zeros(
+                    (leaf.shape[0], self.host_pages) + leaf.shape[2:],
+                    leaf.dtype,
+                )
+        self._host_free: list[int] = list(range(self.host_pages - 1, -1, -1))
+        #: chain key -> host ring slot, insertion order == tier LRU
+        self._host_index: dict[int, int] = {}
+        self._host_key: dict[int, int] = {}  # host slot -> chain key
+        #: host-tier keys the current admit() must not evict while it
+        #: allocates their swap-in device pages (a fetch's own device
+        #: allocation can evict a cached page, whose spill could
+        #: otherwise recycle a host slot the same admission still needs)
+        self._host_pins: set[int] = set()
+        #: queued device->host row copies (evictions of warm pages) and
+        #: host->device copies (prefix hits on spilled chains), both
+        #: applied by flush_swaps at the executor's next dispatch
+        self._pending_spills: list[tuple[int, int]] = []  # (page, host slot)
+        self._pending_swap_ins: list[tuple[int, int]] = []  # (host slot, page)
+        #: device page -> (host slot, chain key) for unflushed swap-ins,
+        #: so eviction/free of the target page can cancel the copy and
+        #: restore the key to the host tier (the rows never left it)
+        self._swap_in_by_page: dict[int, tuple[int, int]] = {}
+        self._swap_ins = 0
+        self._swap_outs = 0
+        self._host_evictions = 0
+        self._swap_latency_s = 0.0
         self.kv_bytes = sum(
             int(np.prod(leaf.shape)) * leaf.dtype.itemsize
             for leaf in jax.tree.leaves(self._abstract())
@@ -857,21 +947,129 @@ class CacheManager:
 
     def _take_page(self) -> int | None:
         """Pop a free page, evicting the LRU cached page when the free list
-        is empty.  Returns None when the pool is truly exhausted."""
+        is empty.  With a victim tier, the evicted page's rows spill to
+        the host ring (its chain key stays fetchable) instead of being
+        discarded.  Returns None when the pool is truly exhausted."""
         if self._free:
             return self._free.pop()
         if self._cached:
             page = next(iter(self._cached))
             del self._cached[page]
-            self._deregister(page)
+            self._spill(page)
             self._evictions += 1
             return page
         return None
 
-    def _deregister(self, page: int) -> None:
+    def _spill(self, page: int) -> None:
+        """Deregister an evicted page; with a victim tier, move its chain
+        key into the host index and queue the device->host row copy for
+        :meth:`flush_swaps` (the copy must land before the page's new
+        owner writes it — guaranteed because every dispatch flushes
+        swaps at host_prep, ahead of its device program).  Degenerates
+        to plain deregistration when the tier is off or the host ring
+        has no evictable slot left."""
         key = self._page_key.pop(page, None)
         if key is not None and self._prefix_index.get(key) == page:
             del self._prefix_index[key]
+        if not self.victim_tier or key is None:
+            return
+        if page in self._swap_in_by_page:
+            # the page's content is itself an unflushed swap-in: the
+            # chain rows never left the host ring, so cancel the copy
+            # and re-register the key on its still-valid host slot
+            self._cancel_swap_in(page)
+            return
+        host = self._host_take()
+        if host is None:
+            return  # ring exhausted (all pinned/absent): classic discard
+        self._host_index[key] = host
+        self._host_key[host] = key
+        self._pending_spills.append((page, host))
+        self._swap_outs += 1
+
+    def _host_take(self) -> int | None:
+        """Pop a free host ring slot, evicting the tier-LRU chain (for
+        real — its rows are gone) when the ring is full.  Keys pinned by
+        an in-progress admission are never victims."""
+        if self._host_free:
+            return self._host_free.pop()
+        victim = next(
+            (k for k in self._host_index if k not in self._host_pins), None
+        )
+        if victim is None:
+            return None
+        host = self._host_index.pop(victim)
+        del self._host_key[host]
+        # a spill aimed at the recycled slot that never flushed is
+        # superseded by the new tenant's rows — drop it
+        self._pending_spills = [
+            (p, h) for p, h in self._pending_spills if h != host
+        ]
+        self._host_evictions += 1
+        return host
+
+    def _cancel_swap_in(self, page: int) -> None:
+        """Cancel the unflushed host->device copy aimed at ``page``
+        (the page is being evicted or freed before any dispatch flushed
+        it) and restore its chain key onto the host slot, whose rows are
+        still intact."""
+        host, key = self._swap_in_by_page.pop(page)
+        self._pending_swap_ins = [
+            (h, p) for h, p in self._pending_swap_ins if p != page
+        ]
+        if key not in self._host_index and key not in self._prefix_index:
+            self._host_index[key] = host
+            self._host_key[host] = key
+        elif host not in self._host_key:
+            self._host_free.append(host)
+
+    def _fetch_host(self, key: int) -> int:
+        """Swap one spilled chain page back: allocate a fresh device
+        page, queue the host->device row copy for :meth:`flush_swaps`,
+        and re-register the key on the device page (the host slot frees
+        once the copy lands).  Callers have already counted this
+        allocation in :meth:`admission_need`."""
+        host = self._host_index.pop(key)
+        del self._host_key[host]
+        page = self._take_page()
+        if page is None:
+            # unreachable under the admission discipline (the fetch was
+            # charged to admission_need); restore the host entry and
+            # fail loudly rather than corrupt the chain
+            self._host_index[key] = host
+            self._host_key[host] = key
+            raise RuntimeError(
+                "KV page pool exhausted during victim-tier swap-in; "
+                "check can_reserve(admission_need(...)) before admit()"
+            )
+        self._pending_swap_ins.append((host, page))
+        self._swap_in_by_page[page] = (host, key)
+        self._prefix_index[key] = page
+        self._page_key[page] = key
+        self._swap_ins += 1
+        self._allocs_total += 1
+        return page
+
+    def _deregister(self, page: int) -> None:
+        key = self._page_key.pop(page, None)
+        if key is None:
+            return
+        if self._prefix_index.get(key) == page:
+            del self._prefix_index[key]
+        entry = self._swap_in_by_page.get(page)
+        if (
+            entry is not None
+            and entry[1] == key
+            and key not in self._host_index
+        ):
+            # deregistered by a mid-tenancy write before its swap-in
+            # flushed: the device copy is about to diverge, but the host
+            # ring still holds the chain's original rows — keep the key
+            # fetchable there (the pending copy still runs: positions
+            # below the write still need the swapped content)
+            host = entry[0]
+            self._host_index[key] = host
+            self._host_key[host] = key
 
     def _intern_key(self, parent: int, chunk: tuple[int, ...]) -> int:
         key = self._key_intern.get((parent, chunk))
@@ -913,8 +1111,14 @@ class CacheManager:
     # ----------------------------------------------------- prefix cache --
     def match_prefix(self, tokens: list[int]) -> PrefixMatch:
         """Longest run of leading *full* prompt pages already present in
-        the prefix index.  Pure lookup — hit/query telemetry is counted at
-        :meth:`admit` so admission retries don't inflate the rate."""
+        the prefix index — device-resident pages first, then (victim
+        tier) chain keys whose rows live in the host ring and will swap
+        back in at admission.  The device run must stay leading (shared
+        pages sit at identical table columns in every owner), so the
+        walk ends at the first chunk found in neither tier, or at a
+        device-resident chunk that follows a host hit.  Pure lookup —
+        hit/query telemetry is counted at :meth:`admit` so admission
+        retries don't inflate the rate."""
         if not self.prefix_cache:
             return PrefixMatch()
         parent = 0
@@ -923,25 +1127,29 @@ class CacheManager:
         for i in range(len(tokens) // self.page_size):
             chunk = tuple(tokens[i * self.page_size:(i + 1) * self.page_size])
             key = self._key_intern.get((parent, chunk))
-            page = None if key is None else self._prefix_index.get(key)
-            if page is None:
+            if key is None:
                 break
-            pages.append(page)
+            page = self._prefix_index.get(key)
+            if page is not None and len(keys) == len(pages):
+                pages.append(page)
+            elif key not in self._host_index:
+                break
             keys.append(key)
             parent = key
         return PrefixMatch(
-            tuple(pages), tuple(keys), len(pages) * self.page_size
+            tuple(pages), tuple(keys), len(keys) * self.page_size
         )
 
     def _tail_need(
         self, match: PrefixMatch | None, reserve_len: int, write_from: int
     ) -> int:
         """Pages this admission will still have to allocate beyond its
-        shared prefix: the unshared tail, plus one copy-on-write headroom
-        page when the first decode write lands inside a shared page (a
-        full-coverage prefix hit)."""
+        shared coverage (device-matched plus swapped-in chunks): the
+        uncovered tail, plus one copy-on-write headroom page when the
+        first decode write lands inside a covered page (a full-coverage
+        prefix hit)."""
         total = self.pages_for(min(reserve_len, self.serve_cfg.max_seq_len))
-        shared = len(match.pages) if match else 0
+        shared = len(match.keys) if match else 0
         headroom = 1 if match and write_from < match.tokens else 0
         return max(total - shared, 0) + headroom
 
@@ -959,13 +1167,16 @@ class CacheManager:
     ) -> int:
         """Pages the pool must have available (free + evictable-cached,
         net of other residents' unallocated reservations) to admit this
-        request: its unshared tail's worst case plus any cached matched
-        pages its admission revives."""
+        request: its uncovered tail's worst case, plus any cached
+        matched pages its admission revives, plus one fresh device page
+        per host-tier hit (each swapped-in chunk lands in a new device
+        page)."""
         if self.layout != "paged":
             return 0
         return (
             self._tail_need(match, reserve_len, write_from)
             + self._revived(match)
+            + (match.host_hits if match else 0)
         )
 
     def admit(
@@ -979,8 +1190,10 @@ class CacheManager:
         fill_len: int | None = None,
     ) -> int:
         """Admit a request: map any prefix-cache hit onto the slot's
-        leading table entries (refcount++, reviving retained pages),
-        reserve worst-case pages for the unshared remainder
+        leading table entries (refcount++, reviving retained pages; a
+        host-tier continuation allocates fresh device pages and queues
+        their swap-in row copies for :meth:`flush_swaps`), reserve
+        worst-case pages for the uncovered remainder
         (``reserve_len`` = prompt + generation budget, capped at
         max_seq_len), then allocate — and register in the prefix index —
         the prompt's own pages.  ``lazy_tail=True`` skips the prompt-tail
@@ -989,7 +1202,8 @@ class CacheManager:
         decode growth); ``fill_len`` (chunked prefill) allocates and
         registers only the leading ``fill_len`` positions now — the
         prefill dispatch writes exactly those — leaving the rest lazy.
-        Returns the number of shared leading pages.
+        Returns the number of covered leading pages (device-shared plus
+        swapped-in).
 
         Reservation is a counter, not an allocation — but admission-time
         reservation guarantees decode growth (including at most one
@@ -1002,6 +1216,7 @@ class CacheManager:
         if self.prefix_cache:
             self._prefix_queries += 1
         shared = list(match.pages) if match else []
+        swapped = match.host_hits if match else 0
         need = self.admission_need(match, reserve_len, write_from)
         if not self.can_reserve(need):
             raise RuntimeError(
@@ -1009,9 +1224,9 @@ class CacheManager:
                 "can_reserve() before calling admit()"
             )
         tail_need = self._tail_need(match, reserve_len, write_from)
-        if shared:
+        if shared or swapped:
             self._prefix_hits += 1
-            self._prefix_pages_hit += len(shared)
+            self._prefix_pages_hit += len(shared) + swapped
             pages = self._slot_pages[slot]
             for col, page in enumerate(shared):
                 if self._page_ref[page] == 0:  # revive a retained page
@@ -1019,9 +1234,26 @@ class CacheManager:
                 self._page_ref[page] += 1
                 self._table[slot, col] = page
                 pages.append(page)
+            if swapped:
+                # host-tier continuation: each spilled chunk swaps back
+                # into a fresh device page.  Pin the remaining host keys
+                # while fetching — a fetch's own device allocation can
+                # spill an evicted page, and that spill must never
+                # recycle a host slot this same admission still needs.
+                host_keys = match.keys[len(shared):]
+                self._host_pins = set(host_keys)
+                try:
+                    for col, key in enumerate(host_keys, start=len(shared)):
+                        self._host_pins.discard(key)
+                        page = self._fetch_host(key)
+                        self._page_ref[page] = 1
+                        self._table[slot, col] = page
+                        pages.append(page)
+                finally:
+                    self._host_pins = set()
             self._slot_keys[slot] = list(match.keys)
             self._table_dirty = True
-        self._slot_reserved[slot] = len(shared) + tail_need
+        self._slot_reserved[slot] = len(shared) + swapped + tail_need
         if not lazy_tail:
             self.ensure(slot, len(tokens))
             self.register_filled(slot, tokens, len(tokens))
@@ -1032,7 +1264,7 @@ class CacheManager:
             self.ensure(slot, fill_len)
             self.register_filled(slot, tokens, fill_len)
         self._peak_in_use = max(self._peak_in_use, self.pages_in_use)
-        return len(shared)
+        return len(shared) + swapped
 
     def fork_need(
         self, parent_slot: int, upto_len: int, reserve_len: int
@@ -1197,6 +1429,7 @@ class CacheManager:
         self._slot_keys[slot] = []
         if self.layout != "paged" or not pages:
             return
+        freed: set[int] = set()
         for page in reversed(pages):
             self._page_ref[page] -= 1
             if self._page_ref[page] > 0:
@@ -1205,6 +1438,24 @@ class CacheManager:
                 self._cached[page] = None
             else:
                 self._free.append(page)
+                freed.add(page)
+        if freed and self._pending_copies:
+            # drop queued CoW copies whose destination just returned to
+            # the free list: the copy's content died with this tenancy,
+            # and flushing it later would corrupt whichever unrelated
+            # request reuses the page (the prefill dispatch syncs the
+            # table without flushing CoW copies, so a stale copy could
+            # land AFTER the page's next tenant prefilled into it)
+            self._pending_copies = [
+                (s, d) for s, d in self._pending_copies if d not in freed
+            ]
+        if freed and self._swap_in_by_page:
+            # likewise cancel unflushed swap-ins aimed at freed pages —
+            # the chain key (and its rows) stay fetchable in the host
+            # ring, and no stale copy targets the page's next tenant
+            for page in freed:
+                if page in self._swap_in_by_page:
+                    self._cancel_swap_in(page)
         self._table[slot, :] = TRASH_PAGE
         self._table_dirty = True
 
@@ -1227,6 +1478,56 @@ class CacheManager:
             if name == "page_table":
                 continue
             layers[name] = pool.at[:, dst].set(pool[:, src])
+        return {**caches, "layers": layers}
+
+    def flush_swaps(self, caches: PyTree) -> PyTree:
+        """Apply queued victim-tier page movement to the device pools:
+        spills (evicted-but-warm device rows -> host ring) first, then
+        swap-ins (host rows -> freshly allocated device pages), so a
+        chain that spilled and re-matched before any dispatch moves
+        device -> host -> device in one flush.  Host-side eager batched
+        copies outside every jitted program — like
+        :meth:`flush_copies`, the compiled program budget is untouched.
+        The executor runs it at the top of every dispatch host_prep,
+        BEFORE ``flush_copies``: a CoW destination may be a just-evicted
+        page whose rows must reach the host ring before the copy
+        overwrites them."""
+        if self.layout != "paged" or not (
+            self._pending_spills or self._pending_swap_ins
+        ):
+            return caches
+        t0 = time.perf_counter()
+        layers = dict(caches["layers"])
+        if self._pending_spills:
+            # one row per host slot — a later queue entry supersedes an
+            # earlier one aimed at the same recycled slot
+            by_host = {h: p for p, h in self._pending_spills}
+            self._pending_spills.clear()
+            hosts = list(by_host)
+            pages = jnp.asarray([by_host[h] for h in hosts], jnp.int32)
+            for name, pool in layers.items():
+                if name == "page_table":
+                    continue
+                self._host_pool[name][:, hosts] = np.asarray(pool[:, pages])
+        if self._pending_swap_ins:
+            hosts = [h for h, _ in self._pending_swap_ins]
+            dst = jnp.asarray(
+                [p for _, p in self._pending_swap_ins], jnp.int32
+            )
+            for name, pool in layers.items():
+                if name == "page_table":
+                    continue
+                rows = jnp.asarray(self._host_pool[name][:, hosts])
+                layers[name] = pool.at[:, dst].set(rows.astype(pool.dtype))
+            for host, page in self._pending_swap_ins:
+                self._swap_in_by_page.pop(page, None)
+                # a slot whose key was restored mid-flight (deregistered
+                # target page) keeps holding the chain's rows; every
+                # other slot returns to the ring's free list
+                if host not in self._host_key:
+                    self._host_free.append(host)
+            self._pending_swap_ins.clear()
+        self._swap_latency_s += time.perf_counter() - t0
         return {**caches, "layers": layers}
 
     def write_table(self, caches: PyTree) -> PyTree:
@@ -1299,6 +1600,12 @@ class CacheManager:
             cow_copies=self._cow_copies,
             page_evictions=self._evictions,
             gen_pages_shared=self._gen_pages_shared,
+            swap_outs=self._swap_outs,
+            swap_ins=self._swap_ins,
+            host_evictions=self._host_evictions,
+            host_pages_used=self.host_pages - len(self._host_free),
+            host_pages_capacity=self.host_pages,
+            swap_latency_s=self._swap_latency_s,
         )
 
     # ------------------------------------------------------- invariants --
@@ -1383,3 +1690,41 @@ class CacheManager:
                     f"shared page {page} mapped at column {seen} and at "
                     f"column {col} (slot {slot})"
                 )
+        # --- host victim tier: the ring is its own page universe ---
+        assert len(self._host_index) == len(self._host_key), (
+            "host index/reverse-map size mismatch"
+        )
+        for key, host in self._host_index.items():
+            assert 0 <= host < self.host_pages, (
+                f"host slot {host} outside the ring"
+            )
+            assert self._host_key.get(host) == key, (
+                f"host index/slot key desync for slot {host}"
+            )
+            assert key not in self._prefix_index, (
+                f"chain key {key} served by both tiers"
+            )
+        host_free = set(self._host_free)
+        assert len(host_free) == len(self._host_free), (
+            "host free list holds duplicates"
+        )
+        held = set(self._host_key)
+        transit = {h for h, _ in self._pending_swap_ins}
+        assert not (host_free & held), "host slot both free and indexed"
+        assert not (host_free & transit), (
+            "host slot freed while its swap-in is still pending"
+        )
+        assert host_free | held | transit == set(range(self.host_pages)), (
+            "host slot leak/double-free"
+        )
+        assert {p for _, p in self._pending_swap_ins} == set(
+            self._swap_in_by_page
+        ), "pending swap-in queue and its page map desync"
+        for page, (host, _key) in self._swap_in_by_page.items():
+            assert ref[page] > 0 or page in self._cached, (
+                f"pending swap-in targets page {page}, neither live nor cached"
+            )
+        for page, host in self._pending_spills:
+            assert host in self._host_key, (
+                f"pending spill targets unindexed host slot {host}"
+            )

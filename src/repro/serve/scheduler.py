@@ -210,9 +210,17 @@ class Admission:
     fill_len: int  # prompt tokens the prefill dispatch computes
     write_from: int  # first position written after the prefill dispatch
     decode_from: int  # first position replayed through the decode scan
-    shared_pages: int  # leading shared pages mapped at admit()/fork()
+    shared_pages: int  # leading covered pages mapped at admit()/fork()
     admit_seq: int
     admit_gen: int
+    #: of ``shared_pages``, how many were victim-tier hits: chunks whose
+    #: rows were spilled to host memory and swap back into fresh device
+    #: pages at this admission (CacheManager.flush_swaps applies the
+    #: copies at the executor's next dispatch).  0 everywhere the tier
+    #: is off; purely observational — the executor treats swapped pages
+    #: exactly like device-shared ones (their columns are already mapped
+    #: and must not be re-written by a prefill scatter)
+    swapped_pages: int = 0
     #: resolved (temperature, top_k, top_p, seed) traced-array encoding
     #: for this tenancy (:func:`encode_sampling`); the executor stacks
     #: these into the per-slot sampling arrays
@@ -661,8 +669,9 @@ class FifoScheduler:
             if match and split:
                 # index pages hold prefill-path content; a split resume
                 # may only share pages fully inside its original prompt
+                # (host-tier hits included: keys count total coverage)
                 keep = len(head.prompt) // self.cache.page_size
-                if len(match.pages) > keep:
+                if len(match.keys) > keep:
                     match = type(match)(
                         match.pages[:keep], match.keys[:keep],
                         keep * self.cache.page_size,
@@ -745,6 +754,7 @@ class FifoScheduler:
                 bucket=bucket, fill_len=fill_len, write_from=write_from,
                 decode_from=decode_from, shared_pages=shared,
                 admit_seq=self._admit_seq, admit_gen=len(req.generated),
+                swapped_pages=match.host_hits if match else 0,
                 sampling=encode_sampling(req, sc.temperature),
             )
             decision.admissions.append(adm)

@@ -14,6 +14,11 @@ replaces that with *timed* workloads:
 * :func:`synchronous` — every request at t=0 (the legacy closed loop,
   expressed as a workload so every benchmark path goes through one
   driver).
+* :func:`multi_tenant` — Poisson arrivals cycling over N distinct
+  seeded tenant preambles, the warm-prefix stream whose working set is
+  sized to overflow a small device page pool (the tiered-KV-cache
+  exercise: tenant prefixes spill to the host victim tier between
+  visits and swap back on re-arrival).
 * :func:`save_trace` / :func:`load_trace` — JSONL trace files, so a
   recorded or hand-written arrival trace replays exactly
   (``{"at": .., "prompt": [..], "max_new_tokens": .., "deadline_s": ..}``
@@ -133,6 +138,65 @@ def synchronous(
         eos_id=eos_id,
     )
     return [dataclasses.replace(ev, at=0.0) for ev in events]
+
+
+def multi_tenant(
+    *,
+    rate: float,
+    n: int,
+    vocab_size: int,
+    tenants: int = 4,
+    preamble_len: int = 24,
+    seed: int = 0,
+    prompt_len: tuple[int, int] = (4, 12),
+    max_new_tokens: int = 16,
+    deadline_s: float | tuple[float, float] | None = None,
+    eos_id: int | None = None,
+) -> list[ArrivalEvent]:
+    """Warm-prefix multi-tenant stream: ``tenants`` distinct seeded
+    preambles of ``preamble_len`` tokens each, with ``n`` Poisson
+    arrivals cycling round-robin over the tenants (request *i* belongs
+    to tenant ``i % tenants``), so every tenant's prefix keeps coming
+    back warm.
+
+    This is the victim-tier exercise: the warm working set is
+    ``tenants * ceil(preamble_len / page_size)`` prefix pages, and a
+    device pool sized *below* that forces the LRU to spill tenant
+    prefixes between visits — with ``kv_host_pages`` > 0 they swap back
+    from the host tier (prefill-skip on re-arrival); without a tier
+    each re-arrival recomputes its preamble.  Fully determined by
+    ``seed``; ``deadline_s`` follows :func:`poisson` semantics.
+    """
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    if tenants < 1:
+        raise ValueError(f"need at least one tenant, got {tenants}")
+    rng = np.random.default_rng(seed)
+    preambles = [
+        tuple(int(t) for t in rng.integers(0, vocab_size, preamble_len))
+        for _ in range(tenants)
+    ]
+    events, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        if deadline_s is None:
+            dl = None
+        elif isinstance(deadline_s, tuple):
+            dl = float(rng.uniform(*deadline_s))
+        else:
+            dl = float(deadline_s)
+        events.append(
+            ArrivalEvent(
+                at=t,
+                prompt=_prompt(
+                    rng, vocab_size, prompt_len, preambles[i % tenants]
+                ),
+                max_new_tokens=max_new_tokens,
+                deadline_s=dl,
+                eos_id=eos_id,
+            )
+        )
+    return events
 
 
 # -------------------------------------------------------------- traces --

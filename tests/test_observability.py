@@ -216,12 +216,15 @@ def test_token_event_ts_uses_engine_clock(cfg, params):
 # ------------------------------------------- telemetry key integrity --
 
 
-def test_merged_telemetry_has_no_key_collisions(cfg, params):
+@pytest.mark.parametrize("kv_host_pages", [0, 16])
+def test_merged_telemetry_has_no_key_collisions(cfg, params, kv_host_pages):
     """Engine.telemetry merges four dicts + the SLO counters + the
     phases view; a key collision would silently shadow one layer's
-    counter with another's."""
+    counter with another's.  Runs tier-off and tier-on: the victim
+    tier's swap_outs/swap_ins/host_* keys live in the cache.stats
+    layer and must stay disjoint from every other layer."""
     eng = _engine(cfg, params, kv_layout="paged", kv_prefix_cache=True,
-                  kv_preemption=True)
+                  kv_preemption=True, kv_host_pages=kv_host_pages)
     for p in PROMPTS:
         eng.submit(list(p), max_new_tokens=6)
     eng.generate()
@@ -241,6 +244,12 @@ def test_merged_telemetry_has_no_key_collisions(cfg, params):
     merged = eng.telemetry
     for keys in layers.values():
         assert keys <= set(merged)
+    # the tier counters ride the cache.stats layer whether the tier is
+    # configured or not (off: all-zero), so dashboards can always key on
+    # them
+    assert {"swap_outs", "swap_ins", "host_evictions", "host_pages_used",
+            "host_pages_capacity", "swap_latency_s"} <= set(merged)
+    assert merged["host_pages_capacity"] == kv_host_pages
 
 
 # --------------------------------------------------- wait attribution --

@@ -17,6 +17,12 @@ Three tiers, mirroring how the subsystem can fail:
   full-coverage hits, page retention after the first tenant finishes,
   LRU eviction under pressure, preemption-resume equality + telemetry,
   and the zero-capacity ``page_utilization`` guard.
+
+The tiered-KV-cache (host victim tier) section runs all three shapes
+against the two-tier manager: property traces with spill/swap/flush
+ops, swap-back token identity across GQA / MLA / int8-KV, and the
+warm-prefix tenant-cycling scenario where the tier must convert
+spilled prefixes into prefill skips at identical token output.
 """
 
 import dataclasses
@@ -71,19 +77,26 @@ def _generate(cfg, params, serve_cfg, prompts, n_new=6, seed=0):
 # =========================================================================
 
 
-def _trace_manager(pool_pages, page_size, seed):
+def _trace_manager(pool_pages, page_size, seed, host_pages=0):
     """Drive one random op trace against a raw paged CacheManager with the
     prefix cache on, mimicking the engine's calling discipline (reserve
     check before admit, ensure-with-write-range before decode writes,
     free on finish/preempt), and assert the pool invariants after every
-    single operation."""
+    single operation.  With ``host_pages`` > 0 the victim tier is live:
+    evictions spill to the host ring, matches can resolve from either
+    tier, and the flush op drains queued spill/swap-in copies against
+    real device caches — the invariants then also audit the host tier
+    (no chain key served by both tiers, no host slot leaked or
+    double-booked)."""
     cfg = configs.get_config("granite-8b", reduced=True)
     max_seq = page_size * 8
     sc = ServeConfig(
         max_batch=4, max_seq_len=max_seq, kv_layout="paged",
         kv_page_size=page_size, kv_pages=pool_pages, kv_prefix_cache=True,
+        kv_host_pages=host_pages,
     )
     mgr = CacheManager(cfg, sc)
+    caches = mgr.init_device_caches() if host_pages else None
     rng = np.random.default_rng(seed)
     live: dict[int, dict] = {}  # slot -> {"tokens": [...], "pos": int}
     vocab = 5  # tiny vocab makes shared prefixes common
@@ -131,9 +144,13 @@ def _trace_manager(pool_pages, page_size, seed):
             slot = int(rng.choice(list(live)))
             mgr.free(slot)
             del live[slot]
-        else:  # flush pending CoW copies (device side is exercised by the
-            # engine tests; here we only keep the queue bounded)
-            mgr._pending_copies.clear()
+        else:  # flush pending device work, as a dispatch host_prep would
+            if caches is not None:
+                caches = mgr.flush_swaps(caches)
+                caches = mgr.flush_copies(caches)
+            else:  # no tier: device side is exercised by the engine
+                # tests; here we only keep the queue bounded
+                mgr._pending_copies.clear()
         mgr.check_invariants()
     for slot in list(live):
         mgr.free(slot)
@@ -152,6 +169,20 @@ def _trace_manager(pool_pages, page_size, seed):
 )
 def test_manager_invariants_under_random_traces(pool, page_size, seed):
     _trace_manager(pool, page_size, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(6, 16),          # pool pages (incl. trash) — tight, so
+    st.sampled_from([2, 4]),     # evictions (hence spills) are common
+    st.integers(0, 10_000),      # trace seed
+    st.sampled_from([2, 6, 12]),  # host victim-tier capacity
+)
+def test_manager_invariants_with_victim_tier(pool, page_size, seed, host):
+    """The random-trace property, with the host victim tier live: every
+    eviction spills, matches resolve from either tier, flushes move real
+    rows, and the two-tier invariants hold after every operation."""
+    _trace_manager(pool, page_size, seed, host_pages=host)
 
 
 def test_invariant_checker_catches_corruption():
@@ -393,8 +424,154 @@ def test_prefix_cache_inert_for_dense_layout():
 
 
 # =========================================================================
+# Victim tier (tiered KV cache): spill on eviction, swap-back on hit
+# =========================================================================
+
+_TIER_KW = dict(kv_pages=13, kv_prefix_cache=True, kv_preemption=True)
+
+
+def _tenant_waves(cfg, params, serve_cfg, *, seed=5, waves=6, n_new=6):
+    """Cycle four tenants' 3-page preambles through an engine in waves
+    of two.  With ``kv_pages=13`` (12 usable) two residents fill the
+    pool, so each wave evicts the previous tenants' preamble pages and
+    the next visit must either swap them back (tier on) or recompute
+    (tier off).  Returns (engine, per-request generated streams)."""
+    rng = np.random.default_rng(seed)
+    preambles = [
+        list(rng.integers(0, cfg.vocab_size, 3 * PAGE)) for _ in range(4)
+    ]
+    eng = ServingEngine(cfg, params, serve_cfg, seed=0)
+    outs = []
+    for wave in range(waves):
+        uids = []
+        for j in range(2):
+            tenant = (wave * 2 + j) % 4
+            prompt = preambles[tenant] + list(
+                rng.integers(0, cfg.vocab_size, 4)
+            )
+            uids.append(eng.submit(prompt, n_new))
+        res = eng.run()
+        outs.extend(res[u].generated for u in uids)
+        if serve_cfg.kv_layout == "paged":
+            eng.cache_mgr.check_invariants()
+    return eng, outs
+
+
+def test_victim_tier_swap_back_restores_prefix_hits():
+    """The tier's reason to exist: on a device pool below the warm
+    working set, tier-off loses every tenant prefix between visits
+    (zero savings) while tier-on swaps them back — majority of spills
+    return (swap_hit_rate > 0.5), strictly more prefill tokens saved,
+    and the greedy streams stay bit-identical."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = _params(cfg)
+    off, off_out = _tenant_waves(cfg, params, _serve("paged", **_TIER_KW))
+    on, on_out = _tenant_waves(
+        cfg, params, _serve("paged", kv_host_pages=32, **_TIER_KW)
+    )
+    assert on_out == off_out  # identical token output, tier on or off
+    t_on, t_off = on.telemetry, off.telemetry
+    assert t_off["swap_outs"] == 0 and t_off["swap_ins"] == 0
+    assert t_on["swap_outs"] > 0 and t_on["swap_ins"] > 0
+    assert t_on["swap_ins"] / t_on["swap_outs"] > 0.5
+    assert (
+        t_on["prefill_tokens_saved"] > t_off["prefill_tokens_saved"]
+    ), "the tier failed to convert spilled prefixes into prefill skips"
+    assert t_on["host_pages_used"] > 0
+    assert t_on["swap_latency_s"] >= 0.0
+    on.cache_mgr.check_invariants()
+
+
+def test_victim_tier_token_identity_across_datapaths():
+    """Swap-back must restore byte-identical cache rows on every
+    datapath the cache serves: GQA float, MLA latent pools, and the
+    int8-KV pools with their per-page scales — each engine's streams
+    must equal the dense reference."""
+    for arch, policy in (
+        ("granite-8b", None), ("minicpm3-4b", None), ("granite-8b", KV8)
+    ):
+        cfg = configs.get_config(arch, reduced=True)
+        params = _params(cfg)
+        eng, paged = _tenant_waves(
+            cfg, params,
+            _serve("paged", policy=policy, kv_host_pages=32, **_TIER_KW),
+            waves=4,
+        )
+        _, dense = _tenant_waves(
+            cfg, params, _serve("dense", policy=policy), waves=4
+        )
+        assert paged == dense, f"swap-back diverged for {arch}/{policy}"
+        assert eng.telemetry["swap_ins"] > 0, (
+            f"tier never exercised for {arch}/{policy}"
+        )
+        eng.cache_mgr.check_invariants()
+
+
+def test_jit_budget_with_victim_tier():
+    """All tier movement is host bookkeeping plus eager device copies
+    outside jit: with spills and swap-backs live, the program set must
+    stay at len(prefill_buckets) prefill + 1 decode."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    params = _params(cfg)
+    sc = _serve("paged", prefill_buckets=(8, 16, 32), kv_host_pages=32,
+                **_TIER_KW)
+    eng, _ = _tenant_waves(cfg, params, sc)
+    assert eng.telemetry["swap_ins"] > 0  # the tier was live
+    assert eng.telemetry["prefill_compiles"] <= 3
+    assert eng.telemetry["decode_compiles"] == 1
+
+
+def test_invariant_checker_catches_two_tier_booking():
+    """The two-tier checker must fail loudly on a chain key served by
+    both tiers at once (otherwise the tier property test proves
+    nothing about the corruption swap-back exists to prevent)."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    sc = ServeConfig(max_batch=2, max_seq_len=32, kv_layout="paged",
+                     kv_page_size=8, kv_pages=8, kv_prefix_cache=True,
+                     kv_host_pages=4)
+    mgr = CacheManager(cfg, sc)
+    mgr.admit(0, list(range(8)), 16)
+    mgr.register_filled(0, list(range(8)), 8)
+    page = mgr._slot_pages[0][0]
+    key = mgr._page_key[page]
+    mgr.check_invariants()
+    host = mgr._host_free.pop()  # double-book the key onto the host ring
+    mgr._host_index[key] = host
+    mgr._host_key[host] = key
+    with pytest.raises(AssertionError, match="both tiers"):
+        mgr.check_invariants()
+
+
+# =========================================================================
 # Regression guards
 # =========================================================================
+
+
+def test_free_purges_pending_cow_copies():
+    """Regression (satellite fix): a tenant finishing between its CoW
+    ensure and the next dispatch used to leave the queued copy aimed at
+    a freed page — the next tenant to reuse that page got stale rows
+    scattered over its freshly prefilled content, because the prefill
+    dispatch flushes pending copies after its own writes.  free() must
+    purge pending copies whose destination returns to the free list."""
+    cfg = configs.get_config("granite-8b", reduced=True)
+    sc = ServeConfig(max_batch=2, max_seq_len=32, kv_layout="paged",
+                     kv_page_size=8, kv_pages=8, kv_prefix_cache=True)
+    mgr = CacheManager(cfg, sc)
+    first = list(range(8))
+    mgr.admit(0, first, 16)
+    mgr.register_filled(0, first, 8)
+    match = mgr.match_prefix(first)
+    assert match.tokens == 8  # full-coverage hit: write lands in-page
+    mgr.admit(1, first, 16, match=match, lazy_tail=True, write_from=7)
+    mgr.ensure(1, 9, write_from=7)  # write inside the shared page -> CoW
+    assert mgr._pending_copies, "scenario failed to queue a CoW copy"
+    mgr.free(1)  # finish before any dispatch flushed the copy
+    freed = set(mgr._free)
+    assert not any(dst in freed for _, dst in mgr._pending_copies), (
+        "pending CoW copy still targets a freed page"
+    )
+    mgr.check_invariants()
 
 
 def test_admission_counts_revived_cached_pages():
